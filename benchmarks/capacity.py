@@ -1,0 +1,83 @@
+"""Paper Figure 9 analog: training throughput must stay flat as the
+embedding table scales (Criteo-Syn family, up to 100T parameters).
+
+Device side: per-step time of the hybrid step while the device-resident
+table grows 64x — lookups are O(batch), not O(rows), so the curve is flat.
+Host side: the LRU store (the out-of-core PS tier backing the >RAM scales)
+get/put throughput vs working-set size, plus the 100T deployment arithmetic
+(rows x dim x fp32 across 30 PS nodes, as in the paper's GCP run).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import adapters, hybrid
+from repro.core.hybrid import TrainMode
+from repro.core.lru import LRUEmbeddingStore
+from repro.data.ctr import CTRDataset, criteo_syn_rows
+from repro.optim.optimizers import OptConfig, make_optimizer
+
+
+def step_time_for_rows(rows: int, batch=512, iters=5) -> float:
+    ds = CTRDataset("syn", n_rows=rows, n_fields=26, ids_per_field=2,
+                    n_dense=13)
+    cfg = ModelConfig(name="syn", arch_type="recsys", n_id_fields=26,
+                      ids_per_field=2, emb_dim=16, emb_rows=rows,
+                      n_dense_features=13, mlp_dims=(128, 64))
+    adapter = adapters.recsys_adapter(cfg)
+    opt_init, opt_update = make_optimizer(OptConfig(kind="adam", lr=1e-3))
+    it = ds.sampler(batch)
+    b = {k: jnp.asarray(v) for k, v in next(it).items()}
+    mode = TrainMode.hybrid(2)
+    state, spec = hybrid.init_train_state(adapter, mode, opt_init,
+                                          jax.random.PRNGKey(0), b)
+    # decomposed pipeline — the runtime-faithful path (separate get / dense /
+    # put dispatches; the donated put aliases the PS table in place)
+    fns = hybrid.make_decomposed_fns(adapter, spec, mode, opt_update)
+    state, _ = hybrid.decomposed_train_step(fns, state, b, adapter)
+    jax.block_until_ready(state["emb"]["table"])
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        state, _ = hybrid.decomposed_train_step(fns, state, b, adapter)
+    jax.block_until_ready(state["emb"]["table"])
+    return (time.perf_counter() - t0) / iters
+
+
+def lru_throughput(capacity: int, n_ops=20_000, dim=32) -> float:
+    store = LRUEmbeddingStore(capacity, dim=dim)
+    rng = np.random.default_rng(0)
+    ids = rng.zipf(1.3, n_ops) % (capacity * 4)
+    t0 = time.perf_counter()
+    chunk = 512
+    for i in range(0, n_ops, chunk):
+        store.get(ids[i: i + chunk])
+    return n_ops / (time.perf_counter() - t0)
+
+
+def run():
+    rows = []
+    base = None
+    for r in (100_000, 400_000, 1_600_000, 6_400_000):
+        t = step_time_for_rows(r)
+        if base is None:
+            base = t
+        rows.append((f"capacity/device_rows={r}", t * 1e6,
+                     f"step={t*1e3:.2f}ms ratio_to_smallest={t/base:.2f}"))
+    for cap in (10_000, 100_000, 1_000_000):
+        thr = lru_throughput(cap)
+        rows.append((f"capacity/lru_cap={cap}", 1e6 / thr,
+                     f"{thr:,.0f} gets/s"))
+    # 100T deployment arithmetic (paper's GCP topology: 30 x 12TB PS nodes)
+    rows_100t = criteo_syn_rows(100.0)
+    # fp32 vectors + one adagrad scalar per ROW (the array-list item layout)
+    bytes_total = rows_100t * (128 * 4 + 4)
+    per_node = bytes_total / 30
+    rows.append(("capacity/100T_arithmetic", 0.0,
+                 f"rows={rows_100t:.3e} bytes={bytes_total/2**40:.0f}TiB "
+                 f"per_PS_node={per_node/2**40:.1f}TiB_of_12TiB"))
+    return rows

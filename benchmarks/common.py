@@ -1,0 +1,20 @@
+"""Shared benchmark plumbing."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def time_call(fn, *args, warmup=2, iters=5):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6          # us
+
+
+def row(name: str, us: float, derived: str) -> tuple:
+    return (name, us, derived)

@@ -1,0 +1,57 @@
+"""Paper §4.2.3 compression benchmarks: lossy blockscale fp16 (Pallas
+kernel, interpret mode on CPU) error/latency + bytes saved, and lossless
+index compression ratio on Zipf-distributed multi-hot batches."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_call
+from repro.core import compression as C
+from repro.kernels import ops
+
+
+def run():
+    rows = []
+    key = jax.random.PRNGKey(0)
+    for n in (1 << 12, 1 << 16):
+        v = jax.random.normal(key, (n, 128)) * jnp.exp(
+            jax.random.normal(key, (n, 1)) * 3)
+        us_c = time_call(ops.blockscale_compress, v)
+        comp, scales = ops.blockscale_compress(v)
+        us_d = time_call(ops.blockscale_decompress, comp, scales)
+        back = ops.blockscale_decompress(comp, scales)
+        rel = float(jnp.max(jnp.abs(back - v))
+                    / jnp.maximum(jnp.max(jnp.abs(v)), 1e-30))
+        raw = v.size * 4
+        compressed = comp.size * 2 + scales.size * 4
+        rows.append((f"compression/blockscale_n={n}", us_c,
+                     f"decomp_us={us_d:.0f} max_rel_err={rel:.2e} "
+                     f"ratio={raw/compressed:.2f}x"))
+    # uniform fp16 vs blockscale on a wide-dynamic-range put (paper's case)
+    v = jnp.concatenate([jnp.full((128,), 3e4), jnp.full((128,), 3e-6)])
+    ours = np.asarray(ops.blockscale_roundtrip(v.reshape(2, 128)))
+    unif = np.asarray(v.astype(jnp.float16).astype(jnp.float32))
+    e_ours = np.max(np.abs(ours.reshape(-1) - np.asarray(v))
+                    / np.abs(np.asarray(v)))
+    e_unif = np.max(np.abs(unif - np.asarray(v)) / np.abs(np.asarray(v)))
+    rows.append(("compression/nonuniform_vs_uniform", 0.0,
+                 f"blockscale_rel={e_ours:.2e} uniform_fp16_rel={e_unif:.2e}"))
+
+    rng = np.random.default_rng(0)
+    for a in (1.1, 1.5, 2.0):
+        ids = (rng.zipf(a, (4096, 8)) % 100_000).astype(np.int64)
+        ratio = C.index_compression_ratio(ids)
+        rows.append((f"compression/index_zipf{a}", 0.0,
+                     f"lossless_ratio={ratio:.2f}x"))
+    # on-device dedup put aggregation win
+    ids = jnp.asarray((rng.zipf(1.3, 8192) % 2048).astype(np.int32))
+    g = jnp.ones((8192, 32), jnp.float32)
+    us = time_call(lambda i, gg: C.dedup_put(i, gg, capacity=2048), ids, g)
+    u, _ = C.dedup_put(ids, g, capacity=2048)
+    uniq = int(jnp.sum(u >= 0))
+    rows.append(("compression/dedup_put", us,
+                 f"rows_sent={uniq}/{ids.size} "
+                 f"traffic_saving={ids.size/max(uniq,1):.2f}x"))
+    return rows

@@ -1,0 +1,55 @@
+"""Paper Figure 6 analog: wall-clock time for each mode to reach a target
+test AUC on the CTR benchmarks. On one CPU the async/hybrid *hardware*
+advantage (overlap) cannot manifest — what this measures is the statistical
+side: steps-to-target and the per-step cost of each mode's bookkeeping. The
+hardware side is composed in scalability.py from measured phase times."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.convergence import DATASETS, MODES, _cfg
+from repro.core import adapters, embedding_ps as PS, hybrid
+from repro.optim.optimizers import OptConfig, make_optimizer
+
+
+def time_to_auc(ds, mode, target=0.70, max_steps=400, batch=512, seed=0):
+    cfg = _cfg(ds)
+    adapter = adapters.recsys_adapter(cfg, lr=5e-2)
+    opt_init, opt_update = make_optimizer(OptConfig(kind="adam", lr=5e-3))
+    it = ds.sampler(batch, seed=seed)
+    ev = ds.sampler(2048, seed=4242)
+    eval_batch = {k: jnp.asarray(v) for k, v in next(ev).items()}
+    b0 = {k: jnp.asarray(v) for k, v in next(it).items()}
+    state, spec = hybrid.init_train_state(adapter, mode, opt_init,
+                                          jax.random.PRNGKey(seed), b0)
+    step = jax.jit(hybrid.make_train_step(adapter, spec, mode, opt_update),
+                   donate_argnums=(0,))
+    # warm the jit out of the timing
+    state, _ = step(state, b0)
+    t0 = time.perf_counter()
+    for s in range(max_steps):
+        b = {k: jnp.asarray(v) for k, v in next(it).items()}
+        state, _ = step(state, b)
+        if (s + 1) % 20 == 0:
+            acts = PS.lookup(state["emb"], spec, eval_batch["ids"])
+            preds = adapter.predict(state["dense"], acts, eval_batch)
+            auc = adapters.auc(np.asarray(eval_batch["labels"]),
+                               np.asarray(preds))
+            if auc >= target:
+                return s + 1, time.perf_counter() - t0, auc
+    return max_steps, time.perf_counter() - t0, auc
+
+
+def run(target=0.68):
+    rows = []
+    ds = DATASETS["taobao"]
+    for mode_name, mode in MODES.items():
+        steps, wall, auc = time_to_auc(ds, mode, target=target)
+        rows.append((f"end_to_end/taobao/{mode_name}", wall * 1e6 / steps,
+                     f"steps_to_auc{target}={steps} wall={wall:.1f}s "
+                     f"final_auc={auc:.4f}"))
+    return rows

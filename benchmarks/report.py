@@ -1,0 +1,108 @@
+"""Render the dry-run artifacts into the EXPERIMENTS.md roofline tables.
+
+  PYTHONPATH=src python -m benchmarks.report > results/roofline_tables.md
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+HERE = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def load(name):
+    path = os.path.join(HERE, name)
+    return json.load(open(path)) if os.path.exists(path) else []
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.2f}"
+
+
+def dryrun_table(rows, mesh):
+    out = [
+        "| arch | shape | status | args GiB/dev | temp GiB/dev | "
+        "collectives GiB/dev (AR/AG/RS/A2A) | note |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r["mesh"] != mesh:
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['status']} | | | "
+                       f"| {r.get('note') or r.get('error','')[:90]} |")
+            continue
+        c = r["collectives"]
+        coll = (f"{c['total']/2**30:.1f} "
+                f"({c['all-reduce']/2**30:.0f}/{c['all-gather']/2**30:.0f}/"
+                f"{c['reduce-scatter']/2**30:.0f}/{c['all-to-all']/2**30:.0f})")
+        out.append(
+            f"| {r['arch']} | {r['shape']} | ok | "
+            f"{fmt_bytes(r['argument_bytes_per_device'])} | "
+            f"{fmt_bytes(r['temp_bytes_per_device'])} | {coll} | "
+            f"{r.get('note','')} |")
+    return "\n".join(out)
+
+
+def roofline_table(rows):
+    out = [
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "MODEL_FLOPS | useful frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r["mesh"] != "16x16" or r["status"] != "ok":
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | "
+            f"**{r['dominant']}** | {r['model_flops']:.2e} | "
+            f"{r['useful_flops_frac']:.3f} |")
+    return "\n".join(out)
+
+
+def delta_table(base, opt):
+    """§Perf: per-case before/after for the three roofline terms."""
+    def key(r):
+        return (r["arch"], r["shape"], r["mesh"])
+    b = {key(r): r for r in base if r["status"] == "ok"}
+    out = [
+        "| arch | shape | peak GiB (base->opt) | memory s (base->opt) | "
+        "collective s (base->opt) |",
+        "|---|---|---|---|---|",
+    ]
+    for r in opt:
+        if r["mesh"] != "16x16" or r["status"] != "ok":
+            continue
+        k = key(r)
+        if k not in b:
+            continue
+        rb = b[k]
+        pk_b = (rb["argument_bytes_per_device"]
+                + rb["temp_bytes_per_device"]) / 2**30
+        pk_o = (r["argument_bytes_per_device"]
+                + r["temp_bytes_per_device"]) / 2**30
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {pk_b:.1f} -> {pk_o:.1f} | "
+            f"{rb['memory_s']:.2f} -> {r['memory_s']:.2f} | "
+            f"{rb['collective_s']:.2f} -> {r['collective_s']:.2f} |")
+    return "\n".join(out)
+
+
+def main():
+    opt = load("dryrun_matrix.json")
+    base = load("dryrun_matrix_baseline.json")
+    print("## Dry-run 16x16 (single pod, 256 chips)\n")
+    print(dryrun_table(opt, "16x16"))
+    print("\n## Dry-run 2x16x16 (two pods, 512 chips)\n")
+    print(dryrun_table(opt, "2x16x16"))
+    print("\n## Roofline (single pod)\n")
+    print(roofline_table(opt))
+    if base:
+        print("\n## Baseline -> optimized deltas\n")
+        print(delta_table(base, opt))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Benchmark harness — one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV (plus a roofline section read from
+the dry-run artifacts when present).
+
+  convergence   Table 2 / Fig 7 — final AUC per mode
+  end_to_end    Fig 6          — time/steps to target AUC
+  scalability   Fig 3 / Fig 8  — phase Gantt + throughput-vs-K composition
+  capacity      Fig 9          — throughput vs table scale, LRU tier, 100T
+  compression   §4.2.3         — blockscale fp16 + lossless index dedup
+  staleness     Thm 1          — tau & alpha sweeps vs the bound
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import traceback
+
+SUITES = ["compression", "scalability", "capacity", "convergence",
+          "staleness", "end_to_end"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of suites")
+    ap.add_argument("--fast", action="store_true",
+                    help="shrink step counts (CI smoke)")
+    args, _ = ap.parse_known_args()
+    suites = args.only.split(",") if args.only else SUITES
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in suites:
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            kwargs = {}
+            if args.fast and name in ("convergence", "staleness"):
+                kwargs["steps"] = 40
+            if args.fast and name == "end_to_end":
+                kwargs["target"] = 0.60
+            rows = mod.run(**kwargs)
+            for n, us, derived in rows:
+                print(f"{n},{us:.1f},{derived}")
+            sys.stdout.flush()
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name},0.0,ERROR {type(e).__name__}: {e}")
+            traceback.print_exc(file=sys.stderr)
+
+    # roofline summary from the dry-run artifact, if present
+    path = os.path.join(os.path.dirname(__file__), "..", "results",
+                        "dryrun_matrix.json")
+    if os.path.exists(path):
+        rows = json.load(open(path))
+        for r in rows:
+            if r.get("status") == "ok" and r.get("mesh") == "16x16":
+                print(f"roofline/{r['arch']}/{r['shape']},0.0,"
+                      f"compute_s={r['compute_s']:.4f} "
+                      f"memory_s={r['memory_s']:.4f} "
+                      f"collective_s={r['collective_s']:.4f} "
+                      f"dominant={r['dominant']}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,117 @@
+"""Paper Figure 3 (Gantt) + Figure 8 (scaling) analog.
+
+One CPU cannot overlap anything, so we do what the paper's Gantt chart does:
+measure the five phases of one training iteration separately —
+  E  embedding lookup (get)        F  NN forward
+  B  NN backward                   S  dense gradient synchronisation
+  U  embedding update (put)
+— then compose the per-iteration makespan of each execution mode:
+
+  fully sync    : E + F + B + S + U            (everything serial)
+  fully async   : max(F + B, E, U)             (E, S, U all hidden; no S)
+  hybrid (raw)  : F + B + S                    (E, U hidden)
+  hybrid (opt)  : F + max(B, S)                (S overlapped with B too)
+
+S is modelled with a ring-allreduce cost over K workers at the paper's
+100 Gbps fabric; E/U carry a PS round-trip with the same bandwidth. That
+yields throughput-vs-K curves (Fig 8) from measured compute phases.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.convergence import DATASETS, _cfg
+from repro.core import adapters, embedding_ps as PS, hybrid
+from repro.core.hybrid import TrainMode
+from repro.optim.optimizers import OptConfig, make_optimizer
+from repro.utils import tree_bytes
+
+BW_BYTES_S = 100e9 / 8            # paper cluster: 100 Gbps
+LAT_S = 20e-6
+
+
+def _time(fn, *args, iters=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def measure_phases(ds, batch=512, seed=0):
+    cfg = _cfg(ds)
+    adapter = adapters.recsys_adapter(cfg, lr=5e-2)
+    opt_init, opt_update = make_optimizer(OptConfig(kind="adam", lr=5e-3))
+    it = ds.sampler(batch, seed=seed)
+    b = {k: jnp.asarray(v) for k, v in next(it).items()}
+    state, spec = hybrid.init_train_state(adapter, TrainMode.sync(), opt_init,
+                                          jax.random.PRNGKey(0), b)
+
+    lookup = jax.jit(lambda st, ids: PS.lookup(st, spec, ids))
+    acts = lookup(state["emb"], b["ids"])
+
+    def fwd(dense, acts, b):
+        return adapter.loss(dense, acts, b)[0]
+
+    fwd_j = jax.jit(fwd)
+    grad_j = jax.jit(jax.grad(fwd, argnums=(0, 1)))
+    dgrads, agrads = grad_j(state["dense"], acts, b)
+    upd_j = jax.jit(lambda d, g, o: opt_update(d, g, o, lr=None))
+    put_j = jax.jit(lambda st, ids, g: PS.apply_put(
+        st, spec, ids.reshape(-1), g.reshape(-1, spec.dim)))
+
+    t_E = _time(lookup, state["emb"], b["ids"])
+    t_F = _time(fwd_j, state["dense"], acts, b)
+    t_FB = _time(grad_j, state["dense"], acts, b)
+    t_B = max(t_FB - t_F, 1e-9)
+    t_opt = _time(upd_j, state["dense"], dgrads, state["opt"])
+    t_U = _time(put_j, state["emb"], b["ids"], agrads)
+
+    dense_bytes = tree_bytes(state["dense"])
+    emb_act_bytes = acts.size * acts.dtype.itemsize
+    return dict(E=t_E, F=t_F, B=t_B, OPT=t_opt, U=t_U,
+                dense_bytes=dense_bytes, emb_act_bytes=emb_act_bytes,
+                batch=batch)
+
+
+def makespans(ph, K):
+    """Per-iteration time per mode at K workers (per-worker batch fixed)."""
+    S = 2 * (K - 1) / max(K, 1) * ph["dense_bytes"] / BW_BYTES_S + LAT_S
+    # PS round trip for embedding activations/grads
+    ps = ph["emb_act_bytes"] / BW_BYTES_S + LAT_S
+    E, F, B, U = ph["E"] + ps, ph["F"], ph["B"], ph["U"] + ps
+    return {
+        "sync": E + F + B + S + ph["OPT"] + U,
+        "async": max(F + B, E, U),
+        "hybrid_raw": F + B + S + ph["OPT"],
+        "hybrid_opt": F + max(B, S) + ph["OPT"],
+    }
+
+
+def run():
+    rows = []
+    ds = DATASETS["criteo"]
+    ph = measure_phases(ds)
+    rows.append(("scalability/phases", ph["F"] * 1e6,
+                 f"E={ph['E']*1e3:.2f}ms F={ph['F']*1e3:.2f}ms "
+                 f"B={ph['B']*1e3:.2f}ms U={ph['U']*1e3:.2f}ms "
+                 f"opt={ph['OPT']*1e3:.2f}ms"))
+    base = None
+    for K in (1, 2, 4, 8, 16, 32, 64):
+        ms = makespans(ph, K)
+        thr = {m: K * ph["batch"] / t for m, t in ms.items()}
+        if base is None:
+            base = thr
+        rows.append((f"scalability/K={K}", ms["hybrid_opt"] * 1e6,
+                     " ".join(f"{m}={thr[m]:,.0f}/s" for m in ms)))
+    ms64 = makespans(ph, 64)
+    rows.append(("scalability/speedup@64", 0.0,
+                 f"hybrid_vs_sync={ms64['sync']/ms64['hybrid_opt']:.2f}x "
+                 f"async_vs_hybrid={ms64['hybrid_opt']/ms64['async']:.2f}x"))
+    return rows

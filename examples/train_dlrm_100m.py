@@ -1,0 +1,71 @@
+"""End-to-end driver: train a ~100M-parameter recommender (the paper's model
+shape — embedding-dominated, 96M embedding + 12M dense FFNN) for a few
+hundred steps with the hybrid algorithm, with checkpointing and eval.
+
+  PYTHONPATH=src python examples/train_dlrm_100m.py [--steps 300]
+"""
+import argparse
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.checkpoint import CheckpointManager, load_checkpoint
+from repro.core import adapters, embedding_ps as PS, hybrid
+from repro.core.hybrid import TrainMode
+from repro.data.ctr import CTRDataset
+from repro.optim.optimizers import OptConfig, make_optimizer
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=300)
+ap.add_argument("--batch", type=int, default=1024)
+ap.add_argument("--ckpt", default="/tmp/persia_dlrm_ckpt")
+args = ap.parse_args()
+
+ROWS = 750_000          # x 128 dim = 96M embedding params
+cfg = ModelConfig(name="dlrm-100m", arch_type="recsys", n_id_fields=26,
+                  ids_per_field=2, emb_dim=128, emb_rows=ROWS,
+                  n_dense_features=13,
+                  mlp_dims=(1024, 512, 256, 128),   # ~12M dense
+                  emb_staleness=3)
+ds = CTRDataset("criteo100m", n_rows=ROWS, n_fields=26, ids_per_field=2,
+                n_dense=13)
+
+adapter = adapters.recsys_adapter(cfg, lr=5e-2)
+opt_init, opt_update = make_optimizer(OptConfig(kind="adam", lr=3e-3))
+mode = TrainMode.hybrid(3)
+stream = ds.sampler(args.batch)
+batch = {k: jnp.asarray(v) for k, v in next(stream).items()}
+state, spec = hybrid.init_train_state(adapter, mode, opt_init,
+                                      jax.random.PRNGKey(0), batch)
+emb_params = state["emb"]["table"].size
+dense_params = sum(x.size for x in jax.tree.leaves(state["dense"]))
+print(f"embedding params: {emb_params/1e6:.1f}M   "
+      f"dense params: {dense_params/1e6:.1f}M   "
+      f"total {(emb_params+dense_params)/1e6:.1f}M")
+
+# decomposed pipeline: in-place PS puts, separate dispatches (runtime path)
+fns = hybrid.make_decomposed_fns(adapter, spec, mode, opt_update)
+mgr = CheckpointManager(args.ckpt, every=100, keep=2)
+
+import time
+t0 = time.time()
+for i in range(args.steps):
+    batch = {k: jnp.asarray(v) for k, v in next(stream).items()}
+    state, metrics = hybrid.decomposed_train_step(fns, state, batch, adapter)
+    if (i + 1) % 50 == 0:
+        eval_b = {k: jnp.asarray(v) for k, v in next(stream).items()}
+        acts = fns[0](state["emb"], eval_b["ids"])
+        preds = adapter.predict(state["dense"], acts, eval_b)
+        auc = adapters.auc(np.asarray(eval_b["labels"]), np.asarray(preds))
+        thr = (i + 1) * args.batch / (time.time() - t0)
+        print(f"step {i+1:4d}  loss {float(metrics['loss']):.4f}  "
+              f"AUC {auc:.4f}  {thr:,.0f} samples/s")
+    mgr.maybe_save(i + 1, state["dense"], {"table": state["emb"]["table"],
+                                           "acc": state["emb"]["acc"]})
+
+step_no, dense, emb = load_checkpoint(args.ckpt)
+print(f"checkpoint roundtrip ok (step {step_no}); "
+      f"fault-tolerance policy: dense atomic, emb shards independent")

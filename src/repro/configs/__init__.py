@@ -1,0 +1,38 @@
+"""Config registry: ``get_config('<arch-id>')`` returns the exact assigned
+configuration; ``get_config('<arch-id>', reduced=True)`` the smoke variant."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (BlockCfg, InputShape, INPUT_SHAPES,
+                                ModelConfig)
+
+ARCH_IDS = [
+    "deepseek_v2_lite_16b",
+    "qwen3_14b",
+    "deepseek_v2_236b",
+    "phi3_mini_3_8b",
+    "mamba2_1_3b",
+    "llama_3_2_vision_90b",
+    "deepseek_coder_33b",
+    "jamba_v0_1_52b",
+    "whisper_medium",
+    "granite_3_2b",
+]
+
+RECSYS_IDS = ["taobao_dlrm", "avazu_dlrm", "criteo_dlrm", "kwai_dlrm",
+              "criteo_syn"]
+
+
+def canonical(name: str) -> str:
+    return name.replace("-", "_").replace(".", "_")
+
+
+def get_config(name: str, *, reduced: bool = False) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{canonical(name)}")
+    cfg = mod.CONFIG
+    return cfg.reduced() if reduced else cfg
+
+
+def all_arch_configs() -> dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}

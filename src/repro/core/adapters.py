@@ -1,0 +1,79 @@
+"""ModelAdapter constructors: recsys (the paper's family) and LM (the
+assigned architectures) views of the hybrid trainer."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.embedding_ps import EmbeddingSpec
+from repro.core.hybrid import ModelAdapter
+from repro.models import recsys as R
+from repro.models import transformer as T
+
+
+def recsys_adapter(cfg, *, lr=1e-2, dtype=jnp.float32) -> ModelAdapter:
+    spec = EmbeddingSpec(rows=cfg.emb_rows, dim=cfg.emb_dim, mode="full",
+                         optimizer=cfg.emb_optimizer, lr=lr,
+                         staleness=cfg.emb_staleness, dtype=dtype)
+
+    def predict(dense, acts, batch):
+        return jax.nn.sigmoid(
+            R.recsys_forward(cfg, dense, acts, batch["ids"],
+                             batch.get("dense")).astype(jnp.float32))
+
+    return ModelAdapter(
+        cfg=cfg,
+        emb_spec=spec,
+        init_dense=lambda k: R.recsys_init(cfg, k, dtype),
+        emb_ids=lambda b: b["ids"],
+        loss=lambda dense, acts, b: R.recsys_loss(cfg, dense, acts, b),
+        predict=predict,
+    )
+
+
+def lm_adapter(cfg, *, lr=1e-2, dtype=jnp.float32) -> ModelAdapter:
+    spec = EmbeddingSpec(rows=cfg.vocab_size, dim=cfg.d_model, mode="model",
+                         optimizer=cfg.emb_optimizer, lr=lr,
+                         staleness=cfg.emb_staleness, dtype=dtype)
+
+    def loss(dense, acts, b):
+        return T.lm_loss(cfg, dense, acts, b["targets"], b["mask"],
+                         b.get("memory"))
+
+    return ModelAdapter(
+        cfg=cfg,
+        emb_spec=spec,
+        init_dense=lambda k: T.init_dense(cfg, k, dtype),
+        emb_ids=lambda b: b["tokens"],
+        loss=loss,
+    )
+
+
+# ---------------------------------------------------------------------------
+# AUC (host-side, exact via rank statistic)
+# ---------------------------------------------------------------------------
+
+def auc(labels: np.ndarray, scores: np.ndarray) -> float:
+    """Mann-Whitney AUC; labels/scores flat float arrays."""
+    labels = np.asarray(labels).reshape(-1)
+    scores = np.asarray(scores).reshape(-1)
+    order = np.argsort(scores, kind="mergesort")
+    ranks = np.empty_like(order, dtype=np.float64)
+    # average ranks for ties
+    s_sorted = scores[order]
+    ranks[order] = np.arange(1, len(scores) + 1)
+    i = 0
+    while i < len(s_sorted):
+        j = i
+        while j + 1 < len(s_sorted) and s_sorted[j + 1] == s_sorted[i]:
+            j += 1
+        if j > i:
+            ranks[order[i:j + 1]] = (i + j) / 2.0 + 1.0
+        i = j + 1
+    n_pos = labels.sum()
+    n_neg = len(labels) - n_pos
+    if n_pos == 0 or n_neg == 0:
+        return 0.5
+    return float((ranks[labels > 0.5].sum() - n_pos * (n_pos + 1) / 2)
+                 / (n_pos * n_neg))

@@ -1,0 +1,120 @@
+"""Persia §4.2.3 communication compression.
+
+* Lossless index compression: a batch of multi-hot samples is re-encoded as
+  a unique-ID keyed map with uint16 sample indices (batch size <= 65535).
+  On-device we use the same idea to *aggregate* gradient puts: duplicate ids
+  within a put are segment-summed so the PS traffic is one row per unique id.
+* Lossy value compression: non-uniform fp32 -> fp16 block scaling. Each block
+  v is scaled by kappa / ||v||_inf before the fp16 cast and unscaled after,
+  so the fp16 mantissa is spent on the block's actual dynamic range.
+
+The Pallas TPU kernel for the lossy path lives in repro.kernels.blockscale;
+this module is the jnp reference implementation + the host-side (numpy)
+wire-format used by the compression benchmark.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+KAPPA = 32_768.0   # "relatively large constant scalar" (paper)
+
+
+# ---------------------------------------------------------------------------
+# Lossy blockscale fp16 (jnp reference; oracle for the Pallas kernel)
+# ---------------------------------------------------------------------------
+
+def blockscale_compress(v: jax.Array, block: int = 128):
+    """v: (..., D) fp32 -> (fp16 blocks, fp32 per-block scales)."""
+    orig_shape = v.shape
+    flat = v.reshape(-1)
+    pad = (-flat.size) % block
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block).astype(jnp.float32)
+    linf = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True)
+    scale = KAPPA / jnp.maximum(linf, 1e-30)
+    comp = (blocks * scale).astype(jnp.float16)
+    return comp, scale[:, 0], orig_shape
+
+
+def blockscale_decompress(comp, scale, orig_shape):
+    blocks = comp.astype(jnp.float32) / scale[:, None]
+    n = 1
+    for s in orig_shape:
+        n *= s
+    return blocks.reshape(-1)[:n].reshape(orig_shape)
+
+
+def blockscale_roundtrip(v, block: int = 128):
+    c, s, shp = blockscale_compress(v, block)
+    return blockscale_decompress(c, s, shp)
+
+
+# ---------------------------------------------------------------------------
+# Lossless index compression (wire format, host-side)
+# ---------------------------------------------------------------------------
+
+def compress_index_batch(ids_batch: np.ndarray):
+    """ids_batch: (B, L) int64 multi-hot sample ids (−1 = padding).
+
+    Returns (unique_ids int64 (U,), offsets uint32 (U+1,), sample_idx uint16)
+    — the paper's hash-map representation: for each unique id, the list of
+    samples containing it, with indices stored as uint16 (B <= 65535).
+    """
+    B, L = ids_batch.shape
+    assert B <= 65535
+    samples = np.repeat(np.arange(B, dtype=np.uint16), L)
+    flat = ids_batch.reshape(-1)
+    keep = flat >= 0
+    flat, samples = flat[keep], samples[keep]
+    order = np.argsort(flat, kind="stable")
+    flat, samples = flat[order], samples[order]
+    unique, starts = np.unique(flat, return_index=True)
+    offsets = np.concatenate([starts, [flat.size]]).astype(np.uint32)
+    return unique.astype(np.int64), offsets, samples
+
+
+def decompress_index_batch(unique, offsets, samples, batch, width):
+    """Inverse of compress_index_batch (padding with −1)."""
+    out = np.full((batch, width), -1, dtype=np.int64)
+    fill = np.zeros(batch, dtype=np.int64)
+    for u, s, e in zip(unique, offsets[:-1], offsets[1:]):
+        for smp in samples[s:e]:
+            out[smp, fill[smp]] = u
+            fill[smp] += 1
+    return out
+
+
+def index_compression_ratio(ids_batch: np.ndarray) -> float:
+    """bytes(original int64 list-of-vectors) / bytes(compressed map)."""
+    raw = ids_batch.size * 8
+    u, off, smp = compress_index_batch(ids_batch)
+    comp = u.size * 8 + off.size * 4 + smp.size * 2
+    return raw / max(comp, 1)
+
+
+# ---------------------------------------------------------------------------
+# On-device put aggregation (the same dedup idea, jit-able, static shapes)
+# ---------------------------------------------------------------------------
+
+def dedup_put(ids, grads, capacity: int):
+    """Aggregate duplicate ids in a gradient put.
+
+    ids: (T,) int32 (−1 = padding); grads: (T, D).
+    Returns (unique_ids (capacity,), summed_grads (capacity, D)); unused
+    slots carry id = −1. capacity should be >= the expected unique count —
+    overflow rows are dropped (paper: infrequent lost puts are tolerable).
+    """
+    T, D = grads.shape
+    order = jnp.argsort(jnp.where(ids < 0, jnp.iinfo(jnp.int32).max, ids))
+    s_ids = ids[order]
+    s_g = grads[order]
+    is_new = jnp.concatenate([jnp.ones((1,), bool), s_ids[1:] != s_ids[:-1]])
+    is_new &= s_ids >= 0
+    group = jnp.cumsum(is_new.astype(jnp.int32)) - 1                # (T,)
+    group = jnp.where(s_ids >= 0, group, capacity)
+    uniq = jnp.full((capacity + 1,), -1, jnp.int32).at[group].max(
+        jnp.where(s_ids >= 0, s_ids, -1))
+    summed = jnp.zeros((capacity + 1, D), grads.dtype).at[group].add(s_g)
+    return uniq[:capacity], summed[:capacity]

@@ -1,0 +1,228 @@
+"""The Persia hybrid training algorithm (paper Alg. 1 + Alg. 2).
+
+One train step =
+  (1) lookup: fetch embedding activations for the batch's ID features from
+      the (possibly tau-stale) PS table                      [Alg.1 forward]
+  (2) dense forward/backward on the NN-worker side; gradients of the dense
+      parameters are combined synchronously (the AllReduce paradigm — under
+      GSPMD this is the automatic psum of replicated-param grads over the
+      batch axes)                                            [Alg.2]
+  (3) gradients *of the embedding activations* (F^emb') are sent back and
+      pushed through the bounded-staleness queue; the put that pops out
+      (from step t - tau) is applied by the PS-side optimizer [Alg.1 backward]
+
+Three modes reproduce the paper's comparison:
+  * hybrid — emb staleness tau>0, dense sync              (Persia)
+  * sync   — tau=0 everywhere                              (XDL-sync analog)
+  * async  — emb stale AND dense grads applied tau_d steps late
+             (Hogwild-style; XDL-async / aggressive-PaddlePaddle analog)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import embedding_ps as PS
+from repro.core.embedding_ps import EmbeddingSpec
+
+
+@dataclass(frozen=True)
+class TrainMode:
+    name: str = "hybrid"
+    emb_staleness: int = 3
+    dense_staleness: int = 0
+
+    @staticmethod
+    def hybrid(tau: int = 3) -> "TrainMode":
+        return TrainMode("hybrid", tau, 0)
+
+    @staticmethod
+    def sync() -> "TrainMode":
+        return TrainMode("sync", 0, 0)
+
+    @staticmethod
+    def async_(tau: int = 3, tau_dense: int = 3) -> "TrainMode":
+        return TrainMode("async", tau, tau_dense)
+
+
+@dataclass(frozen=True)
+class ModelAdapter:
+    """Bridges a concrete model family to the hybrid trainer."""
+    cfg: Any
+    emb_spec: EmbeddingSpec
+    init_dense: Callable[[jax.Array], Any]
+    emb_ids: Callable[[dict], jax.Array]          # batch -> ids (any shape)
+    loss: Callable[[Any, jax.Array, dict], tuple] # (dense, acts, batch)
+    predict: Optional[Callable] = None            # (dense, acts, batch) -> preds
+
+
+def init_train_state(adapter: ModelAdapter, mode: TrainMode, opt_init,
+                     key, batch_example=None, emb_shards: int = 1):
+    """batch_example: abstract or concrete batch (for queue shapes)."""
+    import dataclasses
+    kd, ke = jax.random.split(key)
+    dense = adapter.init_dense(kd)
+    spec = dataclasses.replace(adapter.emb_spec,
+                               staleness=mode.emb_staleness)
+    emb = PS.ps_init(ke, spec, emb_shards)
+    state = {
+        "dense": dense,
+        "opt": opt_init(dense),
+        "emb": emb,
+        "emb_queue": None,
+        "dense_queue": None,
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if batch_example is not None:
+        ids = adapter.emb_ids(batch_example)
+        n_ids = 1
+        for s in ids.shape:
+            n_ids *= s
+        if mode.emb_staleness > 0:
+            state["emb_queue"] = PS.queue_init(spec, (n_ids,), spec.dim)
+        if mode.dense_staleness > 0:
+            state["dense_queue"] = _dense_queue_init(dense,
+                                                     mode.dense_staleness)
+    return state, spec
+
+
+# -- dense gradient delay queue (async baseline) ------------------------------
+
+def _dense_queue_init(dense, tau):
+    return {
+        "grads": jax.tree.map(
+            lambda p: jnp.zeros((tau,) + p.shape, jnp.float32), dense),
+        "ptr": jnp.zeros((), jnp.int32),
+        "filled": jnp.zeros((), jnp.int32),
+    }
+
+
+def _dense_queue_push_pop(queue, grads):
+    ptr = queue["ptr"]
+    old = jax.tree.map(lambda q: jnp.take(q, ptr, axis=0), queue["grads"])
+    new_g = jax.tree.map(
+        lambda q, g: jax.lax.dynamic_update_index_in_dim(
+            q, g.astype(jnp.float32), ptr, 0),
+        queue["grads"], grads)
+    n_tau = jax.tree.leaves(queue["grads"])[0].shape[0]
+    warm = queue["filled"] < n_tau
+    # during warmup apply the fresh grad (queue slot still zero)
+    old = jax.tree.map(lambda o, g: jnp.where(warm, g.astype(jnp.float32), o),
+                       old, grads)
+    return {"grads": new_g, "ptr": (ptr + 1) % n_tau,
+            "filled": jnp.minimum(queue["filled"] + 1, n_tau)}, old
+
+
+# -- the train step ------------------------------------------------------------
+
+def make_train_step(adapter: ModelAdapter, spec: EmbeddingSpec,
+                    mode: TrainMode, opt_update, lr_fn=None):
+    """Returns train_step(state, batch) -> (state, metrics); jit-able,
+    lowerable on any mesh."""
+
+    def train_step(state, batch):
+        ids = adapter.emb_ids(batch)
+        acts = PS.lookup(state["emb"], spec, ids)                 # Alg.1 fwd
+
+        def loss_fn(dense, acts_):
+            return adapter.loss(dense, acts_, batch)
+
+        (loss, metrics), (dgrads, agrads) = jax.value_and_grad(
+            loss_fn, argnums=(0, 1), has_aux=True)(state["dense"], acts)
+
+        lr = lr_fn(state["step"]) if lr_fn is not None else None
+
+        # ---- dense side (Alg.2): synchronous, or delayed for 'async' ----
+        dense_queue = state["dense_queue"]
+        if mode.dense_staleness > 0 and dense_queue is not None:
+            dense_queue, dgrads_apply = _dense_queue_push_pop(dense_queue,
+                                                              dgrads)
+        else:
+            dgrads_apply = dgrads
+        dense, opt = opt_update(state["dense"], dgrads_apply, state["opt"],
+                                lr=lr)
+
+        # ---- embedding side (Alg.1 bwd): async put through the queue ----
+        flat_ids = ids.reshape(-1)
+        flat_g = agrads.reshape(-1, spec.dim)
+        emb, emb_queue = PS.hybrid_emb_update(
+            state["emb"], state["emb_queue"], spec, flat_ids, flat_g)
+
+        new_state = {
+            "dense": dense, "opt": opt, "emb": emb,
+            "emb_queue": emb_queue, "dense_queue": dense_queue,
+            "step": state["step"] + 1,
+        }
+        metrics = dict(metrics)
+        metrics["emb_grad_norm"] = jnp.sqrt(
+            jnp.sum(jnp.square(flat_g.astype(jnp.float32))))
+        return new_state, metrics
+
+    return train_step
+
+
+# -- decomposed pipeline -----------------------------------------------------
+#
+# The fused train_step above is what the dry-run lowers (one program, one
+# schedule). At runtime Persia's architecture is *decomposed*: the embedding
+# get, the dense step and the embedding put are separate dispatches (separate
+# RPCs in the paper), which lets the runtime overlap them and — crucially —
+# lets XLA alias the donated PS table in the put (in-place row scatter, O(#puts)
+# instead of an O(rows) defensive copy).
+
+def make_decomposed_fns(adapter: ModelAdapter, spec: EmbeddingSpec,
+                        mode: TrainMode, opt_update, lr_fn=None):
+    from repro.core import embedding_ps as _PS
+
+    @jax.jit
+    def lookup_fn(emb_state, ids):
+        return _PS.lookup(emb_state, spec, ids)                # Alg.1 fwd
+
+    @partial(jax.jit, donate_argnums=(0, 1))
+    def dense_step(dense, opt, acts, batch, step_no):          # Alg.2
+        def loss_fn(dense_, acts_):
+            return adapter.loss(dense_, acts_, batch)
+
+        (loss, metrics), (dgrads, agrads) = jax.value_and_grad(
+            loss_fn, argnums=(0, 1), has_aux=True)(dense, acts)
+        lr = lr_fn(step_no) if lr_fn is not None else None
+        dense, opt = opt_update(dense, dgrads, opt, lr=lr)
+        return dense, opt, agrads, metrics
+
+    @partial(jax.jit, donate_argnums=(0, 1))
+    def emb_put(emb_state, queue, ids, agrads):                # Alg.1 bwd
+        flat_ids = ids.reshape(-1)
+        flat_g = agrads.reshape(-1, spec.dim)
+        return PS.hybrid_emb_update(emb_state, queue, spec, flat_ids, flat_g)
+
+    return lookup_fn, dense_step, emb_put
+
+
+def decomposed_train_step(fns, state, batch, adapter):
+    """One iteration through the decomposed pipeline (host-driven)."""
+    lookup_fn, dense_step, emb_put = fns
+    ids = adapter.emb_ids(batch)
+    acts = lookup_fn(state["emb"], ids)
+    dense, opt, agrads, metrics = dense_step(state["dense"], state["opt"],
+                                             acts, batch, state["step"])
+    # the put is dispatched without blocking — the async leg of the hybrid
+    emb, queue = emb_put(state["emb"], state["emb_queue"], ids, agrads)
+    new_state = dict(state)
+    new_state.update(dense=dense, opt=opt, emb=emb, emb_queue=queue,
+                     step=state["step"] + 1)
+    return new_state, metrics
+
+
+# -- eval step -------------------------------------------------------------------
+
+def make_eval_step(adapter: ModelAdapter, spec: EmbeddingSpec):
+    def eval_step(state, batch):
+        ids = adapter.emb_ids(batch)
+        acts = PS.lookup(state["emb"], spec, ids)
+        _, metrics = adapter.loss(state["dense"], acts, batch)
+        return metrics
+    return eval_step

@@ -1,0 +1,137 @@
+"""Persia §4.2.2 memory management: the embedding-PS LRU cache, implemented
+with an *array-list* + hash-map (faithful to the paper's design — pointers
+are array indices, not memory addresses, so (de)serialisation is a straight
+memory copy and there is no per-entry allocation).
+
+This is the host-side, out-of-core tier: on a real deployment the device
+shard is the hot set and this store backs it in PS-node RAM. Here it backs
+the capacity benchmark (Criteo-Syn scaling family) and checkpointing.
+Each entry holds the embedding vector and its optimizer state (adagrad
+accumulator), exactly as the paper stores both in the array item.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+_NIL = -1
+
+
+class LRUEmbeddingStore:
+    """Fixed-capacity LRU keyed by int64 id -> (vector, optimizer slot)."""
+
+    def __init__(self, capacity: int, dim: int, seed: int = 0,
+                 init_scale: float = 0.02):
+        assert capacity > 0
+        self.capacity = capacity
+        self.dim = dim
+        self._rng = np.random.default_rng(seed)
+        self._init_scale = init_scale
+        # array-list: vectors, optimizer state, prev/next indices, keys
+        self.vectors = np.zeros((capacity, dim), np.float32)
+        self.opt_acc = np.zeros((capacity,), np.float32)
+        self.prev = np.full(capacity, _NIL, np.int64)
+        self.next = np.full(capacity, _NIL, np.int64)
+        self.keys = np.full(capacity, _NIL, np.int64)
+        self.index: dict[int, int] = {}     # hash-map: id -> array slot
+        self.head = _NIL                    # most-recently used
+        self.tail = _NIL                    # least-recently used
+        self.size = 0
+        self.evictions = 0
+
+    # -- linked-list ops on array indices ------------------------------------
+    def _unlink(self, slot: int):
+        p, n = self.prev[slot], self.next[slot]
+        if p != _NIL:
+            self.next[p] = n
+        else:
+            self.head = n
+        if n != _NIL:
+            self.prev[n] = p
+        else:
+            self.tail = p
+        self.prev[slot] = self.next[slot] = _NIL
+
+    def _push_front(self, slot: int):
+        self.prev[slot] = _NIL
+        self.next[slot] = self.head
+        if self.head != _NIL:
+            self.prev[self.head] = slot
+        self.head = slot
+        if self.tail == _NIL:
+            self.tail = slot
+
+    def _touch(self, slot: int):
+        if self.head == slot:
+            return
+        self._unlink(slot)
+        self._push_front(slot)
+
+    def _alloc(self, key: int) -> int:
+        if self.size < self.capacity:
+            slot = self.size
+            self.size += 1
+        else:
+            slot = self.tail                 # evict LRU
+            self._unlink(slot)
+            del self.index[int(self.keys[slot])]
+            self.evictions += 1
+        self.keys[slot] = key
+        self.index[key] = slot
+        self._push_front(slot)
+        return slot
+
+    # -- public API -------------------------------------------------------------
+    def get(self, ids: np.ndarray) -> np.ndarray:
+        """Fetch rows (allocating/initialising on miss). ids: (n,) int64."""
+        out = np.empty((len(ids), self.dim), np.float32)
+        for i, key in enumerate(np.asarray(ids, np.int64)):
+            key = int(key)
+            slot = self.index.get(key)
+            if slot is None:
+                slot = self._alloc(key)
+                self.vectors[slot] = (self._rng.standard_normal(self.dim)
+                                      * self._init_scale)
+                self.opt_acc[slot] = 0.0
+            else:
+                self._touch(slot)
+            out[i] = self.vectors[slot]
+        return out
+
+    def put(self, ids: np.ndarray, grads: np.ndarray, lr: float = 1e-2,
+            eps: float = 1e-8):
+        """Apply gradient rows with the PS-side adagrad (lock-free analog:
+        last-writer-wins per row, matching Alg.1's no-lock semantics)."""
+        for key, g in zip(np.asarray(ids, np.int64), grads):
+            key = int(key)
+            slot = self.index.get(key)
+            if slot is None:
+                continue                     # paper: dropped puts tolerated
+            acc = self.opt_acc[slot] + float(np.mean(g * g))
+            self.opt_acc[slot] = acc
+            self.vectors[slot] -= lr * g / np.sqrt(acc + eps)
+
+    # -- zero-copy style (de)serialisation ---------------------------------------
+    def serialize(self) -> dict[str, np.ndarray]:
+        """Pure-array snapshot — a memory copy, no pointer chasing."""
+        return {
+            "vectors": self.vectors[: self.size].copy(),
+            "opt_acc": self.opt_acc[: self.size].copy(),
+            "prev": self.prev[: self.size].copy(),
+            "next": self.next[: self.size].copy(),
+            "keys": self.keys[: self.size].copy(),
+            "meta": np.array([self.capacity, self.dim, self.head, self.tail,
+                              self.size, self.evictions], np.int64),
+        }
+
+    @classmethod
+    def deserialize(cls, blob: dict[str, np.ndarray]) -> "LRUEmbeddingStore":
+        cap, dim, head, tail, size, ev = (int(x) for x in blob["meta"])
+        store = cls(cap, dim)
+        store.vectors[:size] = blob["vectors"]
+        store.opt_acc[:size] = blob["opt_acc"]
+        store.prev[:size] = blob["prev"]
+        store.next[:size] = blob["next"]
+        store.keys[:size] = blob["keys"]
+        store.head, store.tail, store.size, store.evictions = head, tail, size, ev
+        store.index = {int(k): i for i, k in enumerate(blob["keys"])}
+        return store

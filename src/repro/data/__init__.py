@@ -1,0 +1,2 @@
+from repro.data.ctr import CTRDataset, CTR_BENCHMARKS, make_ctr_dataset
+from repro.data.lm import lm_batches

@@ -1,0 +1,70 @@
+"""Pallas TPU kernel for Persia §4.2.3 lossy value compression.
+
+Non-uniform fp32 -> fp16: each 128-wide block v is scaled by kappa/||v||_inf
+before the cast (decompress divides it back out), so the fp16 mantissa covers
+the block's actual dynamic range instead of clipping outliers.
+
+TPU adaptation: data is viewed as (n_blocks, 128) — the 128 lane dimension is
+exactly one vreg row, the per-block L_inf reduction is a lane reduction, and
+tiles of TILE_ROWS blocks are staged through VMEM. TILE_ROWS is a multiple of
+8 (fp32 sublane) and of 16 (fp16 sublane tile) so both dtypes stay aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+KAPPA = 32_768.0
+BLOCK = 128          # elements per scale block == one vreg of lanes
+TILE_ROWS = 256      # blocks per grid step (multiple of 8 and 16)
+
+
+def _compress_kernel(v_ref, comp_ref, scale_ref):
+    v = v_ref[...]                                     # (TILE_ROWS, BLOCK) f32
+    linf = jnp.max(jnp.abs(v), axis=-1, keepdims=True)
+    scale = KAPPA / jnp.maximum(linf, 1e-30)
+    comp_ref[...] = (v * scale).astype(jnp.float16)
+    scale_ref[...] = scale[:, 0]
+
+
+def _decompress_kernel(comp_ref, scale_ref, out_ref):
+    c = comp_ref[...].astype(jnp.float32)
+    out_ref[...] = c / scale_ref[...][:, None]
+
+
+def compress(v_blocks: jax.Array, *, interpret: bool = False):
+    """v_blocks: (n_blocks, BLOCK) fp32, n_blocks % TILE_ROWS == 0.
+
+    Returns (comp fp16 (n_blocks, BLOCK), scales fp32 (n_blocks,)).
+    """
+    n, b = v_blocks.shape
+    assert b == BLOCK and n % TILE_ROWS == 0, (n, b)
+    grid = (n // TILE_ROWS,)
+    return pl.pallas_call(
+        _compress_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((TILE_ROWS, BLOCK), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((TILE_ROWS, BLOCK), lambda i: (i, 0)),
+                   pl.BlockSpec((TILE_ROWS,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((n, BLOCK), jnp.float16),
+                   jax.ShapeDtypeStruct((n,), jnp.float32)],
+        interpret=interpret,
+    )(v_blocks)
+
+
+def decompress(comp: jax.Array, scales: jax.Array, *, interpret: bool = False):
+    n, b = comp.shape
+    assert b == BLOCK and n % TILE_ROWS == 0
+    grid = (n // TILE_ROWS,)
+    return pl.pallas_call(
+        _decompress_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((TILE_ROWS, BLOCK), lambda i: (i, 0)),
+                  pl.BlockSpec((TILE_ROWS,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((TILE_ROWS, BLOCK), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, BLOCK), jnp.float32),
+        interpret=interpret,
+    )(comp, scales)

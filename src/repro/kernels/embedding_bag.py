@@ -1,0 +1,62 @@
+"""Pallas TPU kernel: fused multi-hot embedding gather + sum pool — the
+embedding-worker "aggregation" hot spot (paper §4.1 step 4: pool the bag's
+rows *before* shipping activations to the NN worker).
+
+TPU adaptation: the GPU pattern (one warp per bag, random-access loads from
+HBM) has no direct TPU analogue. Instead the bag ids are *scalar-prefetched*
+(pltpu.PrefetchScalarGridSpec) so they are available to the BlockSpec
+index_map before the grid step runs — each grid step then DMAs exactly one
+table row HBM->VMEM, chosen by ids[i], and accumulates it into the bag's
+output row, which stays resident in VMEM across the bag's L steps (output
+revisiting). Invalid ids (< 0, padding) are mapped to row 0 and masked by a
+0/1 weight inside the kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _bag_kernel(ids_ref, table_row_ref, out_ref, *, bag_len: int):
+    i = pl.program_id(0)
+    # first visit of this output row: zero it
+    @pl.when(i % bag_len == 0)
+    def _():
+        out_ref[...] = jnp.zeros(out_ref.shape, out_ref.dtype)
+
+    valid = (ids_ref[i] >= 0).astype(table_row_ref.dtype)
+    out_ref[...] += table_row_ref[...] * valid
+
+
+def embedding_bag(table: jax.Array, ids: jax.Array, *,
+                  interpret: bool = False) -> jax.Array:
+    """table: (V, D); ids: (B, L) int32 with -1 padding -> (B, D) sum-pooled.
+
+    D should be a multiple of 128 (lane width) for the non-interpret path.
+    """
+    B, L = ids.shape
+    V, D = table.shape
+    flat = ids.reshape(-1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B * L,),
+        in_specs=[
+            # padding ids (-1) are clamped to row 0 for the DMA; the kernel
+            # multiplies that row by 0, so the pool is exact.
+            pl.BlockSpec((1, D),
+                         lambda i, ids_pref: (jnp.maximum(ids_pref[i], 0), 0)),
+        ],
+        out_specs=pl.BlockSpec((1, D), lambda i, ids_pref: (i // L, 0)),
+    )
+    kernel = functools.partial(_bag_kernel, bag_len=L)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, D), table.dtype),
+        interpret=interpret,
+    )(flat, table)

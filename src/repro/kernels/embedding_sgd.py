@@ -1,0 +1,56 @@
+"""Pallas TPU kernel: fused row-wise embedding update (the PS-side 'put' +
+optimizer apply, paper Alg. 1 backward). One grid step per gradient row:
+the owning table row is DMA'd to VMEM (driven by scalar-prefetched ids),
+updated with row-wise adagrad, and written back in place
+(input_output_aliasing) — no dense (V, D) gradient is ever built.
+
+Rows must be pre-aggregated (core.compression.dedup_put) when ids repeat
+within a put: Pallas output-revisit semantics require each output block to
+be owned by consecutive grid steps, so duplicate ids in one put would
+last-write-win, matching the paper's lock-free overwrite semantics anyway —
+dedup keeps it exact instead.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _sgd_kernel(ids_ref, grad_ref, row_ref, out_ref, *, lr: float):
+    i = pl.program_id(0)
+    valid = (ids_ref[i] >= 0).astype(row_ref.dtype)
+    out_ref[...] = row_ref[...] - lr * valid * grad_ref[...]
+
+
+def embedding_sgd(table: jax.Array, ids: jax.Array, grads: jax.Array, *,
+                  lr: float, interpret: bool = False) -> jax.Array:
+    """table: (V, D); ids: (T,) int32 (-1 = no-op); grads: (T, D).
+
+    Returns the updated table (aliased in place on TPU).
+    """
+    T, D = grads.shape
+    V, _ = table.shape
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(T,),
+        in_specs=[
+            pl.BlockSpec((1, D), lambda i, ids_pref: (i, 0)),          # grad
+            pl.BlockSpec((1, D),
+                         lambda i, ids_pref: (jnp.maximum(ids_pref[i], 0), 0)),
+        ],
+        out_specs=pl.BlockSpec((1, D),
+                               lambda i, ids_pref: (jnp.maximum(ids_pref[i],
+                                                                0), 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_sgd_kernel, lr=lr),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((V, D), table.dtype),
+        input_output_aliases={2: 0},      # table (arg idx incl. prefetch) -> out
+        interpret=interpret,
+    )(ids, grads, table)

@@ -1,0 +1,115 @@
+"""Pallas TPU flash-attention forward kernel (causal/windowed, GQA).
+
+Why this kernel exists (see EXPERIMENTS.md §Perf): the pure-jnp flash path
+carries its (qblk, Dv) fp32 accumulator through a lax.scan, and XLA
+round-trips that carry through HBM once per kv block — the dry-run roofline
+measures that carry traffic at O(B*H*S^2/kblk) bytes, the dominant memory
+term for train_4k/prefill_32k. Here the accumulator lives in VMEM scratch
+across the kv grid dimension, so HBM traffic drops to the roofline minimum
+(read q,k,v once; write o once).
+
+Grid: (B, Hq, nq, nk) — nk is the innermost (sequential) dimension; output
+blocks are revisited across it. Blocks:
+  q:   (1, 1, qblk, Dh)   indexed (b, h, qi)
+  k/v: (1, 1, kblk, Dh)   indexed (b, h // G, ki)    (GQA: no kv expansion)
+  o:   (1, 1, qblk, Dh)   indexed (b, h, qi)
+  lse: (1, 1, qblk)       indexed (b, h, qi)          (for a jnp backward)
+Masking is additive-bias arithmetic (causal / sliding-window / key-bound).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_scr, l_scr, acc_scr, *,
+            scale, causal, window, kblk, qblk, nk, sk):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full(m_scr.shape, NEG_INF, jnp.float32)
+        l_scr[...] = jnp.zeros(l_scr.shape, jnp.float32)
+        acc_scr[...] = jnp.zeros(acc_scr.shape, jnp.float32)
+
+    q = q_ref[0, 0].astype(jnp.float32)                    # (qblk, Dh)
+    k = k_ref[0, 0].astype(jnp.float32)                    # (kblk, Dh)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+    qpos = qi * qblk + jax.lax.broadcasted_iota(jnp.int32, (qblk, kblk), 0)
+    kpos = ki * kblk + jax.lax.broadcasted_iota(jnp.int32, (qblk, kblk), 1)
+    mask = kpos < sk
+    if causal:
+        mask &= qpos >= kpos
+    if window > 0:
+        mask &= qpos - kpos < window
+    s = s + jnp.where(mask, 0.0, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_scr[...] * corr + jnp.sum(p, axis=-1)
+    v = v_ref[0, 0].astype(jnp.float32)
+    acc = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())))
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+        lse_ref[0, 0] = m_scr[...] + jnp.log(l)
+
+
+def flash_attention_fwd(q, k, v, *, scale, causal=True, window=0,
+                        qblk=256, kblk=256, interpret=False):
+    """q: (B, Hq, Sq, Dh); k/v: (B, Hkv, Sk, Dh). Returns (o, lse).
+
+    Sq % qblk == 0 and Sk % kblk == 0 (pad at the jnp wrapper level);
+    key positions >= the true Sk can be masked via the `sk` bound baked in.
+    """
+    B, Hq, Sq, Dh = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    assert Sq % qblk == 0 and Sk % kblk == 0
+    nq, nk = Sq // qblk, Sk // kblk
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window,
+        kblk=kblk, qblk=qblk, nk=nk, sk=Sk)
+
+    grid = (B, Hq, nq, nk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, qblk, Dh), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, kblk, Dh),
+                         lambda b, h, qi, ki: (b, h // G, ki, 0)),
+            pl.BlockSpec((1, 1, kblk, Dh),
+                         lambda b, h, qi, ki: (b, h // G, ki, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, qblk, Dh), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, qblk), lambda b, h, qi, ki: (b, h, qi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hq, Sq, Dh), q.dtype),
+            jax.ShapeDtypeStruct((B, Hq, Sq), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((qblk,), jnp.float32),
+            pltpu.VMEM((qblk,), jnp.float32),
+            pltpu.VMEM((qblk, Dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

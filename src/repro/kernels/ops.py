@@ -1,0 +1,68 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On this CPU container the kernels execute through ``interpret=True`` (the
+Mosaic TPU compiler is the deployment target); ``INTERPRET`` flips the whole
+module, and each wrapper handles padding/reshaping to the kernels' aligned
+layouts.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import blockscale as _bs
+from repro.kernels import embedding_bag as _bag
+from repro.kernels import embedding_sgd as _sgd
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def blockscale_roundtrip(v, block: int = 128):
+    """Compress+decompress arbitrary-shaped fp32 v (the comm boundary)."""
+    assert block == _bs.BLOCK
+    flat = v.reshape(-1)
+    n = flat.size
+    rows = -(-n // _bs.BLOCK)
+    rows_pad = -(-rows // _bs.TILE_ROWS) * _bs.TILE_ROWS
+    buf = jnp.zeros((rows_pad * _bs.BLOCK,), jnp.float32).at[:n].set(
+        flat.astype(jnp.float32))
+    blocks = buf.reshape(rows_pad, _bs.BLOCK)
+    comp, scales = _bs.compress(blocks, interpret=INTERPRET)
+    out = _bs.decompress(comp, scales, interpret=INTERPRET)
+    return out.reshape(-1)[:n].reshape(v.shape)
+
+
+@jax.jit
+def blockscale_compress(v_blocks):
+    return _bs.compress(v_blocks, interpret=INTERPRET)
+
+
+@jax.jit
+def blockscale_decompress(comp, scales):
+    return _bs.decompress(comp, scales, interpret=INTERPRET)
+
+
+@jax.jit
+def embedding_bag(table, ids):
+    """(V,D) x (B,L) -> (B,D) fused gather+pool."""
+    return _bag.embedding_bag(table, ids, interpret=INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("lr",))
+def embedding_sgd(table, ids, grads, lr: float = 1e-2):
+    return _sgd.embedding_sgd(table, ids, grads, lr=lr, interpret=INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "causal", "window",
+                                             "qblk", "kblk"))
+def flash_attention_fwd(q, k, v, scale: float, causal: bool = True,
+                        window: int = 0, qblk: int = 256, kblk: int = 256):
+    """(B,Hq,S,Dh) x (B,Hkv,S,Dh) -> (o, lse). VMEM-resident accumulators:
+    HBM traffic is the roofline minimum (see EXPERIMENTS.md §Perf)."""
+    from repro.kernels import flash_attention as _fa
+    return _fa.flash_attention_fwd(q, k, v, scale=scale, causal=causal,
+                                   window=window, qblk=qblk, kblk=kblk,
+                                   interpret=INTERPRET)

@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+KAPPA = 32_768.0
+
+
+def blockscale_compress_ref(v_blocks):
+    """v_blocks: (n, 128) fp32 -> (fp16 (n,128), fp32 scales (n,))."""
+    linf = jnp.max(jnp.abs(v_blocks), axis=-1, keepdims=True)
+    scale = KAPPA / jnp.maximum(linf, 1e-30)
+    return (v_blocks * scale).astype(jnp.float16), scale[:, 0]
+
+
+def blockscale_decompress_ref(comp, scales):
+    return comp.astype(jnp.float32) / scales[:, None]
+
+
+def embedding_bag_ref(table, ids):
+    """table: (V,D); ids: (B,L) with -1 padding -> (B,D) sum pool."""
+    safe = jnp.where(ids >= 0, ids, 0)
+    rows = table[safe]                                    # (B,L,D)
+    w = (ids >= 0).astype(table.dtype)[..., None]
+    return jnp.sum(rows * w, axis=1)
+
+
+def embedding_sgd_ref(table, ids, grads, *, lr):
+    """Row-wise SGD scatter-apply; ids -1 are no-ops. Duplicate ids
+    accumulate (use dedup_put first for parity with the kernel)."""
+    valid = (ids >= 0)
+    safe = jnp.where(valid, ids, 0)
+    upd = jnp.where(valid[:, None], -lr * grads, 0.0).astype(table.dtype)
+    return table.at[safe].add(upd)

@@ -1,0 +1,427 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Multi-pod dry-run: lower + compile every (architecture x input-shape) on
+# the production meshes, print memory/cost analysis, extract roofline terms.
+#
+# The two lines above MUST stay the first statements in this file — jax locks
+# the device count on first init, and the dry-run (and only the dry-run)
+# needs 512 placeholder host devices.
+#
+# Usage:
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3_14b --shape train_4k
+#   PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out f.json]
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config
+from repro.configs.base import InputShape, ModelConfig
+from repro.core import embedding_ps as PS
+from repro.core import hybrid
+from repro.core.hybrid import TrainMode
+from repro.launch import input_specs as IS
+from repro.launch.mesh import (make_production_mesh, mesh_all_shards,
+                               mesh_model_shards)
+from repro.launch import hlo_cost
+from repro.models import transformer as T
+from repro.optim.optimizers import OptConfig, make_optimizer
+from repro.sharding import partition as PART
+from repro.sharding.partition import to_shardings
+from repro.core.adapters import lm_adapter
+
+SDS = jax.ShapeDtypeStruct
+COMPUTE_DTYPE = jnp.bfloat16
+
+# (arch, shape) pairs that are skipped, with the DESIGN.md rationale.
+SKIPS = {
+    ("whisper_medium", "long_500k"):
+        "enc-dec with learned absolute decoder positions (64k table); "
+        "500k-token decode is architecturally out of range for the family",
+}
+
+# dense/full-attention archs run long_500k only via the sliding-window
+# variant (window 4096) — recorded as 'variant' in the result row.
+FULL_ATTN_ARCHS = {"qwen3_14b", "phi3_mini_3_8b", "deepseek_coder_33b",
+                   "granite_3_2b", "llama_3_2_vision_90b",
+                   "deepseek_v2_lite_16b", "deepseek_v2_236b"}
+
+
+def arch_shape_plan(arch: str, shape_name: str):
+    """Returns (run: bool, cfg_transform, note)."""
+    if (arch, shape_name) in SKIPS:
+        return False, None, SKIPS[(arch, shape_name)]
+    if shape_name == "long_500k" and arch in FULL_ATTN_ARCHS:
+        return True, lambda c: c.replace(sliding_window=4096), \
+            "sliding-window 4096 variant"
+    return True, lambda c: c, ""
+
+
+# ---------------------------------------------------------------------------
+# Case builders: (fn, args, in_shardings, donate) ready for jit().lower()
+# ---------------------------------------------------------------------------
+
+def _abstract(fn, *args, **kw):
+    return jax.eval_shape(fn, *args, **kw)
+
+
+def build_train_case(cfg: ModelConfig, shape: InputShape, mesh):
+    adapter = lm_adapter(cfg, dtype=COMPUTE_DTYPE)
+    import dataclasses
+    spec = dataclasses.replace(adapter.emb_spec, staleness=cfg.emb_staleness)
+    mode = TrainMode("hybrid", cfg.emb_staleness, 0)
+    opt_init, opt_update = make_optimizer(OptConfig(kind="adam", lr=3e-4))
+    batch = IS.train_inputs(cfg, shape, COMPUTE_DTYPE)
+    n_model = mesh_model_shards(mesh)
+
+    def init(key):
+        state, _ = hybrid.init_train_state(adapter, mode, opt_init, key,
+                                           batch, emb_shards=n_model)
+        return state
+
+    state_shape = _abstract(init, jax.random.PRNGKey(0))
+    train_step = hybrid.make_train_step(adapter, spec, mode, opt_update)
+
+    state_specs = PART.state_specs(state_shape, spec)
+    state_sh = to_shardings(mesh, state_specs, state_shape)
+    batch_sh = to_shardings(mesh, _batch_specs(batch, mesh))
+    fn = train_step
+    return fn, (state_shape, batch), (state_sh, batch_sh), (0,)
+
+
+def _batch_specs(batch, mesh):
+    from jax.sharding import PartitionSpec as P
+    nb = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            nb *= mesh.shape[a]
+
+    def leaf(x):
+        if x.shape and x.shape[0] % nb == 0:
+            return P(("pod", "data"), *([None] * (x.ndim - 1)))
+        return P(*([None] * x.ndim))
+
+    return jax.tree.map(leaf, batch)
+
+
+def _serve_params(cfg: ModelConfig, mesh):
+    n_model = mesh_model_shards(mesh)
+    spec = PS.EmbeddingSpec(rows=cfg.vocab_size, dim=cfg.d_model,
+                            mode="model", dtype=COMPUTE_DTYPE)
+    emb = {"table": SDS((spec.padded_rows(n_model), cfg.d_model),
+                        COMPUTE_DTYPE)}
+    dense = _abstract(lambda k: T.init_dense(cfg, k, COMPUTE_DTYPE),
+                      jax.random.PRNGKey(0))
+    params = {"emb": emb, "dense": dense}
+    specs = {"emb": {"table": PS.table_spec(spec)},
+             "dense": PART.dense_param_specs(dense)}
+    return params, specs, spec
+
+
+def build_prefill_case(cfg: ModelConfig, shape: InputShape, mesh):
+    params, pspecs, spec = _serve_params(cfg, mesh)
+    batch = IS.prefill_inputs(cfg, shape, COMPUTE_DTYPE)
+
+    def prefill_fn(params, batch):
+        acts = PS.lookup(params["emb"], spec, batch["tokens"])
+        return T.prefill(cfg, params["dense"], acts,
+                         memory=batch.get("memory"))
+
+    params_sh = to_shardings(mesh, pspecs, params)
+    batch_sh = to_shardings(mesh, _batch_specs(batch, mesh))
+    return prefill_fn, (params, batch), (params_sh, batch_sh), ()
+
+
+def build_decode_case(cfg: ModelConfig, shape: InputShape, mesh):
+    params, pspecs, spec = _serve_params(cfg, mesh)
+    batch = IS.decode_inputs(cfg, shape)
+    B, S = shape.global_batch, shape.seq_len
+    mlen = IS.memory_len(cfg)
+
+    caches = _abstract(
+        lambda: T.cache_init(cfg, B, S, COMPUTE_DTYPE, memory_len=mlen))
+
+    def decode_fn(params, caches, batch):
+        acts = PS.lookup(params["emb"], spec, batch["tokens"])
+        return T.decode_step(cfg, params["dense"], acts, caches)
+
+    params_sh = to_shardings(mesh, pspecs, params)
+    cache_sh = to_shardings(mesh, _cache_specs_guarded(caches, cfg, mesh))
+    batch_sh = to_shardings(mesh, _batch_specs(batch, mesh))
+    return decode_fn, (params, caches, batch), \
+        (params_sh, cache_sh, batch_sh), (1,)
+
+
+def _cache_specs_guarded(caches, cfg, mesh):
+    """cache_specs + divisibility guards against this mesh."""
+    from jax.sharding import PartitionSpec as P
+    raw = PART.cache_specs(caches, cfg)
+    nb = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            nb *= mesh.shape[a]
+    nm = mesh_model_shards(mesh)
+
+    def fix(spec, leaf):
+        parts = list(spec)
+        # pad spec to ndim
+        while len(parts) < leaf.ndim:
+            parts.append(None)
+        for i, p in enumerate(parts):
+            if p is None:
+                continue
+            size = leaf.shape[i]
+            n = nb if p == PART.BATCH or p == ("pod", "data") else None
+            if p == "model":
+                n = nm
+            if isinstance(p, tuple):
+                n = nb
+            if n is not None and size % n != 0:
+                parts[i] = None
+        return P(*parts)
+
+    return jax.tree.map(fix, raw, caches,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing + roofline
+# ---------------------------------------------------------------------------
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|f8\w*|s64|s32|s16|s8|u64|u32|u16|u8|pred)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\S+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+_DTYPE_BYTES = {"f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+                "bf16": 2, "f16": 2, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1}
+for _k in list(_DTYPE_BYTES):
+    if _k.startswith("f8"):
+        _DTYPE_BYTES[_k] = 1
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device bytes moved per collective type (ring-model factors)."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        shape_txt, op = m.group(1), m.group(2)
+        if op.endswith("-done"):
+            continue
+        size = _shape_bytes(shape_txt)
+        # ring factors (n-1)/n ~ 1; all-reduce moves ~2x
+        factor = 2.0 if op == "all-reduce" else 1.0
+        out[op] += int(size * factor)
+        counts[op] += 1
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    out["counts"] = counts
+    return out
+
+
+PEAK_FLOPS = 197e12          # bf16 / chip (v5e)
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link (use 1 link as conservative)
+
+
+def model_flops(cfg: ModelConfig, shape: InputShape) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE); decode D=B tokens."""
+    n_active = active_params(cfg)
+    if shape.kind == "training":
+        toks = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * toks
+    if shape.kind == "prefill":
+        toks = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * toks
+    return 2.0 * n_active * shape.global_batch
+
+
+def active_params(cfg: ModelConfig) -> float:
+    """Forward-activated parameter count (MoE: top-k + shared only)."""
+    if cfg.arch_type == "recsys":
+        n, dims = 0, (cfg.n_id_fields * cfg.emb_dim + cfg.n_dense_features,) \
+            + tuple(cfg.mlp_dims) + (cfg.n_tasks,)
+        for i in range(len(dims) - 1):
+            n += dims[i] * dims[i + 1]
+        return float(n)
+    d = cfg.d_model
+    total = cfg.vocab_size * d * 2          # embed + head
+    for blk in cfg.prologue + cfg.pattern * cfg.pattern_repeats:
+        if blk.mixer == "gqa" or blk.mixer == "cross_attn":
+            total += d * cfg.n_heads * cfg.head_dim * 2
+            total += d * cfg.n_kv_heads * cfg.head_dim * 2
+        elif blk.mixer == "mla":
+            r, dr = cfg.kv_lora_rank, cfg.rope_head_dim
+            H, dn, dv = cfg.n_heads, cfg.head_dim, cfg.v_head_dim
+            if cfg.q_lora_rank:
+                total += d * cfg.q_lora_rank + cfg.q_lora_rank * H * (dn + dr)
+            else:
+                total += d * H * (dn + dr)
+            total += d * (r + dr) + r * H * (dn + dv) + H * dv * d
+        elif blk.mixer == "mamba2":
+            d_inner = cfg.ssm_expand * d
+            Hh = d_inner // cfg.ssm_head_dim
+            total += d * (2 * d_inner + 2 * cfg.ssm_state + Hh)
+            total += d_inner * d
+        if blk.cross:
+            total += d * cfg.n_heads * cfg.head_dim * 2
+            total += d * cfg.n_kv_heads * cfg.head_dim * 2
+        if blk.ffn == "dense":
+            total += 3 * d * cfg.d_ff
+        elif blk.ffn == "moe":
+            f = cfg.moe_d_ff or cfg.d_ff
+            total += 3 * d * f * (cfg.moe_top_k + cfg.n_shared_experts)
+            total += d * cfg.n_experts     # router
+    if cfg.is_encdec:
+        total += active_params(cfg.encoder.replace(vocab_size=0)) \
+            - 0 * 2  # encoder params (vocab-free)
+    return float(total)
+
+
+def roofline(stats: dict, cfg, shape, n_chips: int) -> dict:
+    flops_dev = stats["flops_per_device"]
+    bytes_dev = stats["hbm_bytes_per_device"]
+    coll_dev = stats["collectives"]["total"]
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    dominant = max((t_compute, "compute"), (t_memory, "memory"),
+                   (t_coll, "collective"))[1]
+    mf = model_flops(cfg, shape)
+    return {
+        "compute_s": t_compute, "memory_s": t_memory, "collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": mf,
+        "useful_flops_frac": mf / max(flops_dev * n_chips, 1.0),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Runner
+# ---------------------------------------------------------------------------
+
+def run_case(arch: str, shape_name: str, *, multi_pod: bool = False,
+             verbose: bool = True) -> dict:
+    t0 = time.time()
+    shape = INPUT_SHAPES[shape_name]
+    run, transform, note = arch_shape_plan(arch, shape_name)
+    row = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16", "note": note}
+    if not run:
+        row["status"] = "skipped"
+        return row
+    cfg = transform(get_config(arch))
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh_all_shards(mesh)
+    try:
+        with jax.sharding.set_mesh(mesh):
+            if shape.kind == "training":
+                fn, args, shardings, donate = build_train_case(cfg, shape, mesh)
+            elif shape.kind == "prefill":
+                fn, args, shardings, donate = build_prefill_case(cfg, shape, mesh)
+            else:
+                fn, args, shardings, donate = build_decode_case(cfg, shape, mesh)
+            jitted = jax.jit(fn, in_shardings=shardings,
+                             donate_argnums=donate)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+        walk = hlo_cost.analyze(hlo)
+        coll = {k: walk[k] for k in hlo_cost.COLLECTIVES}
+        coll["total"] = walk["collective_total"]
+        coll["counts"] = walk["counts"]
+        stats = {
+            "flops_per_device": float(walk["flops"]),
+            "hbm_bytes_per_device": float(walk["hbm_bytes"]),
+            "xla_flops_static": float(cost.get("flops", 0.0)),
+            "collectives": coll,
+        }
+        rl = roofline(stats, cfg, shape, n_chips)
+        row.update({
+            "status": "ok",
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "argument_bytes_per_device": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes_per_device": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes_per_device": getattr(mem, "temp_size_in_bytes", 0),
+            "peak_bytes_per_device": getattr(mem, "peak_memory_in_bytes", 0)
+                or (getattr(mem, "argument_size_in_bytes", 0)
+                    + getattr(mem, "temp_size_in_bytes", 0)),
+            **stats, **rl,
+        })
+        if verbose:
+            print(f"[{row['mesh']}] {arch} x {shape_name}: OK "
+                  f"(lower {t_lower:.0f}s compile {t_compile:.0f}s) "
+                  f"args {row['argument_bytes_per_device']/2**30:.2f}GiB "
+                  f"temp {row['temp_bytes_per_device']/2**30:.2f}GiB "
+                  f"dominant={rl['dominant']}")
+    except Exception as e:  # noqa: BLE001 - report into the matrix
+        row["status"] = "error"
+        row["error"] = f"{type(e).__name__}: {e}"[:2000]
+        if verbose:
+            print(f"[{row['mesh']}] {arch} x {shape_name}: FAIL {row['error']}")
+            traceback.print_exc()
+    return row
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cases = []
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or not args.shape) \
+        else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for mp in meshes:
+        for a in archs:
+            for s in shapes:
+                cases.append(run_case(a, s, multi_pod=mp))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(cases, f, indent=1)
+        print(f"wrote {args.out}")
+    ok = sum(1 for c in cases if c["status"] == "ok")
+    sk = sum(1 for c in cases if c["status"] == "skipped")
+    err = sum(1 for c in cases if c["status"] == "error")
+    print(f"== dry-run: {ok} ok / {sk} skipped / {err} failed "
+          f"of {len(cases)}")
+    return 0 if err == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,258 @@
+"""Loop-aware cost extraction from post-SPMD optimized HLO text.
+
+XLA's built-in ``cost_analysis()`` counts each while-loop body ONCE, which
+under-counts everything inside our scan-over-layers by the trip count. This
+walker parses the HLO module into computations, builds the call graph (while
+bodies weighted by their trip count — taken from the ``known_trip_count``
+backend config XLA attaches, with a condition-constant fallback — and fusions
+folded into their caller as single kernels), and accumulates per-device:
+
+  * flops            — 2*out_elems*K for every dot, from local (post-SPMD)
+                       shapes, including dots inside fusion computations
+  * hbm_bytes        — kernel-boundary traffic: operand + result bytes of
+                       every non-fused op in control computations (the
+                       standard roofline accounting: one fusion == one kernel)
+  * collective bytes — per collective type (all-reduce counted 2x: ring)
+
+Shapes in optimized HLO are per-device, so all numbers are per-device.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {"f64": 8, "s64": 8, "u64": 8, "c64": 8, "f32": 4, "s32": 4,
+                "u32": 4, "bf16": 2, "f16": 2, "s16": 2, "u16": 2, "s8": 1,
+                "u8": 1, "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1,
+                "u4": 1}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*?)\s([\w\-]+)\((.*)$")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%([\w.\-]+)\s*\(.*->.*\{\s*$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"')
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# ops whose operands+results we count as kernel-boundary HBM traffic when
+# they appear in a control (non-fusion) computation
+_KERNEL_OPS = {
+    "dot", "fusion", "convolution", "custom-call", "dynamic-update-slice",
+    "dynamic-slice", "copy", "scatter", "gather", "reduce", "transpose",
+    "concatenate", "broadcast", "pad", "select", "convert", "sort", "rng",
+    "reduce-window", "select-and-scatter", "add", "multiply", "subtract",
+    "divide", "exponential", "tanh", "rsqrt", "maximum", "minimum", "slice",
+    "reshape", "compare", "iota", "log", "negate", "bitcast-convert",
+}
+# collectives counted separately for traffic too (they also touch HBM)
+_KERNEL_OPS |= set(COLLECTIVES) | {c + "-start" for c in COLLECTIVES}
+
+
+def _dims(shape_txt: str):
+    """All (dtype, dims, bytes) tuples in a (possibly tuple) shape string."""
+    out = []
+    for dt, dims in _SHAPE_RE.findall(shape_txt):
+        if dt not in _DTYPE_BYTES:
+            continue
+        dd = [int(d) for d in dims.split(",")] if dims else []
+        n = 1
+        for d in dd:
+            n *= d
+        out.append((dt, dd, n * _DTYPE_BYTES[dt], n))
+    return out
+
+
+def _shape_bytes_elems(shape_txt: str):
+    parts = _dims(shape_txt)
+    return sum(p[2] for p in parts), sum(p[3] for p in parts)
+
+
+@dataclass
+class Op:
+    name: str
+    opcode: str
+    shape_txt: str
+    rest: str
+    out_bytes: int
+    out_elems: int
+
+
+@dataclass
+class Comp:
+    name: str
+    ops: list = field(default_factory=list)
+    index: dict = field(default_factory=dict)     # value name -> Op
+
+
+def parse_module(text: str) -> tuple[dict, str | None]:
+    comps: dict[str, Comp] = {}
+    cur: Comp | None = None
+    entry = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HDR.match(line)
+            if m:
+                cur = Comp(m.group(2))
+                if m.group(1):
+                    entry = m.group(2)
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, shape_txt, opcode, rest = m.groups()
+        b, e = _shape_bytes_elems(shape_txt)
+        op = Op(name, opcode, shape_txt, rest, b, e)
+        cur.index[name] = op
+        cur.ops.append(op)
+    return comps, entry
+
+
+def _operand_names(rest: str):
+    """Operand value names: everything before the closing paren of args."""
+    depth, out, cur_tok = 1, [], None
+    # simple scan: take %names until parens balance to 0
+    i = 0
+    while i < len(rest) and depth > 0:
+        ch = rest[i]
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+        elif ch == "%":
+            j = i + 1
+            while j < len(rest) and (rest[j].isalnum() or rest[j] in "._-"):
+                j += 1
+            out.append(rest[i + 1: j])
+            i = j - 1
+        i += 1
+    return out
+
+
+def _dot_flops(op: Op, comp: Comp) -> float:
+    mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.rest)
+    operands = _operand_names(op.rest)
+    contract = 1
+    if mc and operands:
+        cdims = [int(d) for d in mc.group(1).split(",") if d]
+        lhs = comp.index.get(operands[0])
+        if lhs is not None:
+            parts = _dims(lhs.shape_txt)
+            if parts:
+                shape = parts[0][1]
+                for d in cdims:
+                    if d < len(shape):
+                        contract *= shape[d]
+    return 2.0 * op.out_elems * max(contract, 1)
+
+
+def _called_names(rest: str):
+    out = []
+    for key in ("calls", "body", "condition", "branch_computations",
+                "to_apply"):
+        for m in re.finditer(key + r"=(\{[^}]*\}|%[\w.\-]+)", rest):
+            out.extend(re.findall(r"%([\w.\-]+)", m.group(1)))
+    return out
+
+
+def _trip_count(op: Op, comps) -> int:
+    m = _TRIP_RE.search(op.rest)
+    if m:
+        return int(m.group(1))
+    mc = re.search(r"condition=%([\w.\-]+)", op.rest)
+    if mc and mc.group(1) in comps:
+        best = 1
+        for o in comps[mc.group(1)].ops:
+            m2 = re.search(r"constant\((\d+)\)", o.opcode + "(" + o.rest)
+            if m2:
+                v = int(m2.group(1))
+                if 1 < v < 10_000_000:
+                    best = max(best, v)
+        return best
+    return 1
+
+
+def analyze(text: str) -> dict:
+    comps, entry = parse_module(text)
+    fusion_targets = set()
+    for c in comps.values():
+        for op in c.ops:
+            if op.opcode == "fusion":
+                fusion_targets.update(_called_names(op.rest))
+
+    memo: dict[str, dict] = {}
+
+    def fused_flops(name: str, seen=None) -> float:
+        """dots inside a fusion computation (rare but possible via calls)."""
+        seen = seen or set()
+        if name in seen or name not in comps:
+            return 0.0
+        seen.add(name)
+        c = comps[name]
+        total = 0.0
+        for op in c.ops:
+            if op.opcode == "dot":
+                total += _dot_flops(op, c)
+            elif op.opcode == "fusion" or op.opcode == "call":
+                for n in _called_names(op.rest):
+                    total += fused_flops(n, seen)
+        return total
+
+    def visit(name: str) -> dict:
+        if name in memo:
+            return memo[name]
+        stats = {"flops": 0.0, "hbm_bytes": 0.0,
+                 **{k: 0.0 for k in COLLECTIVES},
+                 "counts": defaultdict(float)}
+        memo[name] = stats
+        c = comps.get(name)
+        if c is None:
+            return stats
+        for op in c.ops:
+            oc = op.opcode
+            base = oc.replace("-start", "")
+            if base in COLLECTIVES and not oc.endswith("-done"):
+                factor = 2.0 if base == "all-reduce" else 1.0
+                stats[base] += op.out_bytes * factor
+                stats["counts"][base] += 1
+            if oc in _KERNEL_OPS:
+                opnames = _operand_names(op.rest)
+                in_bytes = sum(c.index[n].out_bytes for n in opnames
+                               if n in c.index)
+                stats["hbm_bytes"] += op.out_bytes + in_bytes
+            if oc == "dot":
+                stats["flops"] += _dot_flops(op, c)
+            elif oc == "fusion":
+                for n in _called_names(op.rest):
+                    stats["flops"] += fused_flops(n)
+            elif oc == "while":
+                trips = _trip_count(op, comps)
+                mb = re.search(r"body=%([\w.\-]+)", op.rest)
+                if mb:
+                    sub = visit(mb.group(1))
+                    for k in ("flops", "hbm_bytes", *COLLECTIVES):
+                        stats[k] += sub[k] * trips
+                    for k, v in sub["counts"].items():
+                        stats["counts"][k] += v * trips
+            elif oc in ("call", "conditional", "async-start", "custom-call"):
+                for n in _called_names(op.rest):
+                    if n in fusion_targets:
+                        continue
+                    sub = visit(n)
+                    for k in ("flops", "hbm_bytes", *COLLECTIVES):
+                        stats[k] += sub[k]
+                    for k, v in sub["counts"].items():
+                        stats["counts"][k] += v
+        return stats
+
+    if entry is None:
+        entry = max(comps, key=lambda n: len(comps[n].ops)) if comps else ""
+    out = dict(visit(entry))
+    out["collective_total"] = sum(out[k] for k in COLLECTIVES)
+    out["counts"] = dict(out["counts"])
+    return out

@@ -1,0 +1,55 @@
+"""ShapeDtypeStruct stand-ins for every model input — weak-type-correct,
+shardable, no device allocation. The dry-run lowers against these."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+def train_inputs(cfg: ModelConfig, shape: InputShape,
+                 compute_dtype=jnp.bfloat16) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.arch_type == "recsys":
+        b = {"ids": SDS((B, cfg.n_id_fields, cfg.ids_per_field), jnp.int32),
+             "labels": SDS((B, cfg.n_tasks), jnp.float32)}
+        if cfg.n_dense_features:
+            b["dense"] = SDS((B, cfg.n_dense_features), jnp.float32)
+        return b
+    b = {"tokens": SDS((B, S), jnp.int32),
+         "targets": SDS((B, S), jnp.int32),
+         "mask": SDS((B, S), jnp.float32)}
+    if cfg.is_encdec:
+        e = cfg.encoder
+        b["memory"] = SDS((B, e.n_memory_tokens, e.d_memory), compute_dtype)
+    elif cfg.n_memory_tokens:
+        b["memory"] = SDS((B, cfg.n_memory_tokens, cfg.d_memory),
+                          compute_dtype)
+    return b
+
+
+def prefill_inputs(cfg: ModelConfig, shape: InputShape,
+                   compute_dtype=jnp.bfloat16) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    b = {"tokens": SDS((B, S), jnp.int32)}
+    if cfg.is_encdec:
+        e = cfg.encoder
+        b["memory"] = SDS((B, e.n_memory_tokens, e.d_memory), compute_dtype)
+    elif cfg.n_memory_tokens:
+        b["memory"] = SDS((B, cfg.n_memory_tokens, cfg.d_memory),
+                          compute_dtype)
+    return b
+
+
+def decode_inputs(cfg: ModelConfig, shape: InputShape) -> dict:
+    B = shape.global_batch
+    return {"tokens": SDS((B, 1), jnp.int32)}
+
+
+def memory_len(cfg: ModelConfig) -> int:
+    if cfg.is_encdec:
+        return cfg.encoder.n_memory_tokens
+    return cfg.n_memory_tokens

@@ -1,0 +1,157 @@
+"""Training driver: runs the Persia hybrid trainer end-to-end on CPU-scale
+configs (the production meshes are exercised by dryrun.py).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --task ctr --dataset taobao_ad \
+      --mode hybrid --steps 300 --batch 512
+  PYTHONPATH=src python -m repro.launch.train --task lm --steps 200 --batch 8
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import BlockCfg, ModelConfig
+from repro.configs import recsys_configs as RC
+from repro.core import adapters, embedding_ps as PS, hybrid
+from repro.core.hybrid import TrainMode
+from repro.checkpoint import CheckpointManager
+from repro.data.ctr import CTR_BENCHMARKS, CTRDataset
+from repro.data.lm import lm_batches
+from repro.optim.optimizers import OptConfig, make_optimizer
+
+
+def scaled_recsys_cfg(dataset: str, scale: float = 1.0) -> ModelConfig:
+    ds = CTR_BENCHMARKS[dataset]
+    return ModelConfig(
+        name=f"{dataset}-dlrm", arch_type="recsys",
+        n_id_fields=ds.n_fields, ids_per_field=ds.ids_per_field,
+        emb_dim=32, emb_rows=ds.n_rows, n_dense_features=ds.n_dense,
+        mlp_dims=(256, 128, 64), n_tasks=ds.n_tasks, emb_staleness=3)
+
+
+def small_lm_cfg() -> ModelConfig:
+    """~100M dense params (the end-to-end example scale)."""
+    return ModelConfig(
+        name="lm-100m", d_model=512, n_heads=8, n_kv_heads=4, head_dim=64,
+        d_ff=2048, vocab_size=8192,
+        pattern=(BlockCfg("gqa", "dense"),), pattern_repeats=20,
+        emb_staleness=2)
+
+
+def mode_from_name(name: str, tau: int) -> TrainMode:
+    if name == "sync":
+        return TrainMode.sync()
+    if name == "hybrid":
+        return TrainMode.hybrid(tau)
+    if name == "async":
+        return TrainMode.async_(tau, tau)
+    raise ValueError(name)
+
+
+def train_ctr(args):
+    ds = CTR_BENCHMARKS[args.dataset]
+    cfg = scaled_recsys_cfg(args.dataset)
+    adapter = adapters.recsys_adapter(cfg, lr=args.emb_lr)
+    opt_init, opt_update = make_optimizer(OptConfig(kind="adam", lr=args.lr))
+    mode = mode_from_name(args.mode, args.tau)
+    it = ds.sampler(args.batch)
+    eval_it = ds.sampler(args.batch, seed=999)
+    batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+    state, spec = hybrid.init_train_state(adapter, mode, opt_init,
+                                          jax.random.PRNGKey(args.seed), batch)
+    step_fn = jax.jit(hybrid.make_train_step(adapter, spec, mode, opt_update),
+                      donate_argnums=(0,))
+    mgr = CheckpointManager(args.ckpt_dir, every=args.ckpt_every) \
+        if args.ckpt_dir else None
+
+    history = []
+    t0 = time.time()
+    for step in range(args.steps):
+        b = {k: jnp.asarray(v) for k, v in next(it).items()}
+        state, metrics = step_fn(state, b)
+        if (step + 1) % args.eval_every == 0:
+            eb = {k: jnp.asarray(v) for k, v in next(eval_it).items()}
+            acts = PS.lookup(state["emb"], spec, eb["ids"])
+            preds = adapter.predict(state["dense"], acts, eb)
+            a = adapters.auc(np.asarray(eb["labels"]), np.asarray(preds))
+            dt = time.time() - t0
+            thr = (step + 1) * args.batch / dt
+            print(f"step {step+1:5d} loss {float(metrics['loss']):.4f} "
+                  f"AUC {a:.4f} thr {thr:,.0f} samples/s")
+            history.append({"step": step + 1, "time_s": dt,
+                            "loss": float(metrics["loss"]), "auc": a,
+                            "throughput": thr})
+        if mgr:
+            mgr.maybe_save(step + 1, state["dense"],
+                           {"table": state["emb"]["table"]})
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"mode": args.mode, "dataset": args.dataset,
+                       "history": history}, f, indent=1)
+    return history
+
+
+def train_lm(args):
+    cfg = small_lm_cfg()
+    adapter = adapters.lm_adapter(cfg, lr=args.emb_lr)
+    opt_init, opt_update = make_optimizer(OptConfig(kind="adam", lr=args.lr))
+    mode = mode_from_name(args.mode, args.tau)
+    it = lm_batches(cfg.vocab_size, args.batch, args.seq_len)
+    batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+    state, spec = hybrid.init_train_state(adapter, mode, opt_init,
+                                          jax.random.PRNGKey(args.seed), batch)
+    n_params = sum(x.size for x in jax.tree.leaves(state["dense"]))
+    print(f"dense params: {n_params/1e6:.1f}M + emb "
+          f"{state['emb']['table'].size/1e6:.1f}M")
+    step_fn = jax.jit(hybrid.make_train_step(adapter, spec, mode, opt_update),
+                      donate_argnums=(0,))
+    history = []
+    t0 = time.time()
+    for step in range(args.steps):
+        b = {k: jnp.asarray(v) for k, v in next(it).items()}
+        state, metrics = step_fn(state, b)
+        if (step + 1) % args.eval_every == 0:
+            dt = time.time() - t0
+            tok_s = (step + 1) * args.batch * args.seq_len / dt
+            print(f"step {step+1:5d} loss {float(metrics['loss']):.4f} "
+                  f"{tok_s:,.0f} tok/s")
+            history.append({"step": step + 1, "time_s": dt,
+                            "loss": float(metrics["loss"])})
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"mode": args.mode, "history": history}, f, indent=1)
+    return history
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--task", choices=["ctr", "lm"], default="ctr")
+    ap.add_argument("--dataset", default="taobao_ad")
+    ap.add_argument("--mode", choices=["sync", "hybrid", "async"],
+                    default="hybrid")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=512)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--tau", type=int, default=3)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--emb-lr", type=float, default=5e-2)
+    ap.add_argument("--eval-every", type=int, default=25)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    if args.task == "ctr":
+        train_ctr(args)
+    else:
+        train_lm(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,160 @@
+"""Distributed single-token decode attention over sequence-sharded KV caches.
+
+Why: decode caches are (B, S, H_kv, D) with H_kv (often 8) smaller than the
+``model`` mesh axis (16), so head-sharding cannot absorb the cache. We shard
+the *sequence* dimension over ``model`` instead — the PS idea applied to the
+KV cache: each model rank owns a contiguous span of positions, the new token
+is written by its owning rank only, and attention is a local flash pass plus
+a logsumexp-combine ``psum`` (max / corrected sum / corrected weighted
+values) over ``model``. Per step the collective traffic is O(B * H * D),
+independent of S.
+
+Used when the ambient mesh has a ``model`` axis and the cache is full-length
+(ring/window caches are small and stay replicated).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.utils import _mesh_axis_names, bspec_axes
+
+NEG_INF = -1e30
+
+
+def _bspec_for(batch_size: int):
+    def _b(*rest):
+        return P(bspec_axes(batch_size), *rest)
+    return _b
+
+
+def have_model_axis() -> bool:
+    return "model" in _mesh_axis_names()
+
+
+def _local_update(c, slot_local, new, in_range):
+    """vmap'd conditional dynamic-update at per-batch slots (B, S_loc, ...).
+
+    Always writes one slot (re-writing the existing value when this shard
+    does not own the position) — a `where(ok, updated_cache, cache)` on the
+    whole cache would materialise a second copy of the KV cache per layer
+    and defeat in-place buffer reuse through the layer scan."""
+    def one(cb, s, nb, ok):
+        idx = (s,) + (0,) * (cb.ndim - 1)
+        cur = jax.lax.dynamic_slice(cb, idx, nb.shape)
+        val = jnp.where(ok, nb.astype(cb.dtype), cur)
+        return jax.lax.dynamic_update_slice(cb, val, idx)
+    return jax.vmap(one)(c, slot_local, new, in_range)
+
+
+def gqa_decode_dist(p, cfg, q, k_new, v_new, cache, *, scale, softcap=0.0):
+    """q: (B,1,Hkv,G,Dh); k_new/v_new: (B,1,Hkv,Dh); cache k/v (B,S,Hkv,Dh)
+    sequence-sharded over 'model'. Returns (out (B,1,Hkv,G,Dh), new_cache)."""
+    S = cache["k"].shape[1]
+    mesh = jax.sharding.get_abstract_mesh()
+    n = mesh.shape["model"]
+    assert S % n == 0, (S, n)
+    S_loc = S // n
+    _bspec = _bspec_for(q.shape[0])
+
+    cache_spec = {"k": _bspec("model", None, None),
+                  "v": _bspec("model", None, None),
+                  "len": _bspec()}
+
+    @partial(jax.shard_map,
+             in_specs=(_bspec(None, None, None, None),   # q
+                       _bspec(None, None, None),          # k_new
+                       _bspec(None, None, None),          # v_new
+                       cache_spec),
+             out_specs=(_bspec(None, None, None, None), cache_spec),
+             check_vma=False)
+    def _step(qb, knb, vnb, cb):
+        me = jax.lax.axis_index("model")
+        length = cb["len"]                                 # (B,)
+        slot = length                                      # append position
+        owner = slot // S_loc
+        in_range = owner == me
+        slot_local = jnp.clip(slot - me * S_loc, 0, S_loc - 1)
+        kc = _local_update(cb["k"], slot_local, knb, in_range)
+        vc = _local_update(cb["v"], slot_local, vnb, in_range)
+        new_len = length + 1
+
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qb.astype(jnp.float32),
+                       kc.astype(jnp.float32)) * scale
+        if softcap > 0:
+            s = jnp.tanh(s / softcap) * softcap
+        kpos = me * S_loc + jnp.arange(S_loc)
+        msk = kpos[None, :] < new_len[:, None]
+        s = jnp.where(msk[:, None, None, None, :], s, NEG_INF)
+        m = jnp.max(s, axis=-1)                            # (B,h,g,1)
+        p_ = jnp.exp(s - m[..., None])
+        l = jnp.sum(p_, axis=-1)
+        acc = jnp.einsum("bhgqk,bkhd->bhgqd", p_, vc.astype(jnp.float32))
+        # logsumexp combine across sequence shards
+        m_g = jax.lax.pmax(m, "model")
+        corr = jnp.exp(m - m_g)
+        l_g = jax.lax.psum(l * corr, "model")
+        acc_g = jax.lax.psum(acc * corr[..., None], "model")
+        out = (acc_g / jnp.maximum(l_g, 1e-30)[..., None])
+        out = out.transpose(0, 3, 1, 2, 4)                 # (B,1,h,g,d)
+        return out.astype(qb.dtype), {"k": kc, "v": vc, "len": new_len}
+
+    return _step(q, k_new, v_new, cache)
+
+
+def mla_decode_dist(cfg, q_abs, q_rope, ckv_new, kr_new, cache):
+    """Weight-absorbed MLA decode over a sequence-sharded latent cache.
+
+    q_abs: (B,1,H,r) fp32; q_rope: (B,1,H,dr); ckv_new: (B,1,r);
+    kr_new: (B,1,dr); cache: {'ckv': (B,S,r), 'k_rope': (B,S,dr), 'len': (B,)}.
+    Returns (ctx (B,1,H,r) fp32, new_cache).
+    """
+    S = cache["ckv"].shape[1]
+    mesh = jax.sharding.get_abstract_mesh()
+    n = mesh.shape["model"]
+    assert S % n == 0, (S, n)
+    S_loc = S // n
+    _bspec = _bspec_for(q_abs.shape[0])
+    scale = 1.0 / math.sqrt(cfg.head_dim + cfg.rope_head_dim)
+
+    cache_spec = {"ckv": _bspec("model", None), "k_rope": _bspec("model", None),
+                  "len": _bspec()}
+
+    @partial(jax.shard_map,
+             in_specs=(_bspec(None, None, None), _bspec(None, None, None),
+                       _bspec(None, None), _bspec(None, None), cache_spec),
+             out_specs=(_bspec(None, None, None), cache_spec),
+             check_vma=False)
+    def _step(qa, qr, cn, krn, cb):
+        me = jax.lax.axis_index("model")
+        length = cb["len"]
+        slot = length
+        owner = slot // S_loc
+        in_range = owner == me
+        slot_local = jnp.clip(slot - me * S_loc, 0, S_loc - 1)
+        ckv = _local_update(cb["ckv"], slot_local, cn, in_range)
+        krc = _local_update(cb["k_rope"], slot_local, krn, in_range)
+        new_len = length + 1
+
+        s = (jnp.einsum("bqhr,bkr->bhqk", qa, ckv.astype(jnp.float32))
+             + jnp.einsum("bqhd,bkd->bhqk", qr.astype(jnp.float32),
+                          krc.astype(jnp.float32))) * scale
+        kpos = me * S_loc + jnp.arange(S_loc)
+        msk = kpos[None, :] < new_len[:, None]
+        s = jnp.where(msk[:, None, None, :], s, NEG_INF)
+        m = jnp.max(s, axis=-1)
+        p_ = jnp.exp(s - m[..., None])
+        l = jnp.sum(p_, axis=-1)
+        acc = jnp.einsum("bhqk,bkr->bhqr", p_, ckv.astype(jnp.float32))
+        m_g = jax.lax.pmax(m, "model")
+        corr = jnp.exp(m - m_g)
+        l_g = jax.lax.psum(l * corr, "model")
+        acc_g = jax.lax.psum(acc * corr[..., None], "model")
+        ctx = (acc_g / jnp.maximum(l_g, 1e-30)[..., None]).transpose(0, 2, 1, 3)
+        return ctx, {"ckv": ckv, "k_rope": krc, "len": new_len}
+
+    return _step(q_abs, q_rope, ckv_new, kr_new, cache)

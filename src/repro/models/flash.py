@@ -1,0 +1,353 @@
+"""Flash attention in pure jnp with a custom VJP (memory-linear in S).
+
+Naive autodiff of online-softmax blockwise attention saves every (q-block x
+kv-block) probability tile — i.e. the full S^2 attention matrix — which is
+exactly what flash attention exists to avoid. This implementation:
+
+  forward : scan over q blocks (inner scan over kv blocks), storing only
+            out and the per-row logsumexp (LSE);
+  backward: two recompute passes (dq over q blocks; dk/dv over kv blocks),
+            each rebuilding probability tiles from q, k and the stored LSE.
+
+Layout is the grouped-GQA (B, S, Hkv, G, Dh) used across the model zoo; kv
+heads are never materialised G-fold. Pure jnp so it lowers under GSPMD on
+any mesh (batch-sharded; heads/seq sharding left to the compiler) — the
+Pallas TPU kernel would slot in behind the same interface on real hardware.
+"""
+from __future__ import annotations
+
+import functools
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import cdiv
+
+NEG_INF = -1e30
+
+
+def _mask_bias(qpos, kpos, causal, window, kmax):
+    """(qblk, kblk) additive f32 bias: 0 where attended, -1e30 where masked.
+
+    Additive-bias masking (instead of a boolean select) keeps any
+    XLA-precomputed per-iteration table at (qblk, kblk) f32 — a broadcasted
+    select predicate gets tabled at the full (B, heads, ...) operand shape,
+    which at one point materialised a 16 GiB pred tensor per layer."""
+    m = kpos[None, :] < kmax
+    if causal:
+        m &= qpos[:, None] >= kpos[None, :]
+    if window > 0:
+        m &= qpos[:, None] - kpos[None, :] < window
+    return jnp.where(m, 0.0, NEG_INF).astype(jnp.float32)
+
+
+# Triangle-ordered causal scan: iterate only the n(n+1)/2 lower-triangle
+# (q-block, kv-block) pairs instead of the full nq x nk grid — a static ~2x
+# attention-FLOP reduction for causal shapes. Measured (EXPERIMENTS.md §Perf
+# I14): compute term −35%, but the output must ride in the scan carry with
+# dynamic scatters, which GSPMD turns into ~20x collective traffic on the
+# production mesh — so the jnp path defaults OFF. (In the Pallas kernel the
+# same ordering is free: grid iteration order has no carry.)
+TRIANGLE = os.environ.get("REPRO_FLASH_TRIANGLE", "0") == "1"
+
+
+def _tri_pairs(n):
+    """Pair lists for the triangle scans (row-major: fixed qi, ki<=qi)."""
+    qs, ks = [], []
+    for qi in range(n):
+        for ki in range(qi + 1):
+            qs.append(qi)
+            ks.append(ki)
+    return jnp.asarray(qs, jnp.int32), jnp.asarray(ks, jnp.int32)
+
+
+def _tri_pairs_colmajor(n):
+    """Fixed ki, qi >= ki — for the dk/dv pass."""
+    qs, ks = [], []
+    for ki in range(n):
+        for qi in range(ki, n):
+            qs.append(qi)
+            ks.append(ki)
+    return jnp.asarray(qs, jnp.int32), jnp.asarray(ks, jnp.int32)
+
+
+@functools.lru_cache(maxsize=64)
+def _make_flash(scale, causal, window, q_offset, qblk, kblk, softcap, sk):
+    assert softcap == 0.0, "softcap unsupported in flash path"
+
+    def fwd_blocks(q, k, v):
+        B, nq, qb, Hkv, G, Dh = q.shape
+        nk, kb, Dv = k.shape[1], k.shape[2], v.shape[-1]
+
+        def q_step(_, qi):
+            qb_ = q[:, qi]
+            qpos = qi * qblk + jnp.arange(qblk) + q_offset
+
+            def kv_step(carry, ki):
+                m, l, acc = carry
+                s = jnp.einsum("bqhgd,bkhd->bhgqk", qb_.astype(jnp.float32),
+                               k[:, ki].astype(jnp.float32)) * scale
+                kpos = ki * kblk + jnp.arange(kblk)
+                s = s + _mask_bias(qpos, kpos, causal, window,
+                                   sk)[None, None, None]
+                m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+                p = jnp.exp(s - m_new[..., None])
+                corr = jnp.exp(m - m_new)
+                l_new = l * corr + jnp.sum(p, axis=-1)
+                acc_new = acc * corr[..., None] + jnp.einsum(
+                    "bhgqk,bkhd->bhgqd", p, v[:, ki].astype(jnp.float32))
+                return (m_new, l_new, acc_new), None
+
+            init = (jnp.full((B, Hkv, G, qblk), NEG_INF, jnp.float32),
+                    jnp.zeros((B, Hkv, G, qblk), jnp.float32),
+                    jnp.zeros((B, Hkv, G, qblk, Dv), jnp.float32))
+            (m, l, acc), _ = jax.lax.scan(kv_step, init, jnp.arange(nk))
+            o = acc / jnp.maximum(l, 1e-30)[..., None]
+            lse = m + jnp.log(jnp.maximum(l, 1e-30))
+            return None, (o.transpose(0, 3, 1, 2, 4), lse)   # (B,qblk,h,g,Dv)
+
+        _, (o, lse) = jax.lax.scan(q_step, None, jnp.arange(nq))
+        # o: (nq, B, qblk, h, g, Dv); lse: (nq, B, h, g, qblk)
+        return o, lse
+
+    tri = (TRIANGLE and causal and window == 0 and q_offset == 0
+           and qblk == kblk)
+
+    def _bias_pair(qi, ki):
+        qpos = qi * qblk + jnp.arange(qblk)
+        kpos = ki * kblk + jnp.arange(kblk)
+        ok = (qpos[:, None] >= kpos[None, :]) & (kpos[None, :] < sk)
+        return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+    def fwd_blocks_tri(q, k, v):
+        B, nq, qb, Hkv, G, Dh = q.shape
+        Dv = v.shape[-1]
+        qs, ks = _tri_pairs(nq)
+
+        def step(carry, pair):
+            m, l, acc, o_out, lse_out = carry
+            qi, ki = pair
+            fresh = ki == 0
+            m = jnp.where(fresh, NEG_INF, m)
+            l = jnp.where(fresh, 0.0, l)
+            acc = jnp.where(fresh, 0.0, acc)
+            qb_ = q[:, qi].astype(jnp.float32)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qb_,
+                           k[:, ki].astype(jnp.float32)) * scale
+            s = s + _bias_pair(qi, ki)[None, None, None]
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p, v[:, ki].astype(jnp.float32))
+            done = ki == qi
+            o_blk = (acc_new / jnp.maximum(l_new, 1e-30)[..., None]) \
+                .transpose(0, 3, 1, 2, 4)                 # (B,qblk,h,g,Dv)
+            lse_blk = m_new + jnp.log(jnp.maximum(l_new, 1e-30))
+            cur_o = o_out[qi]
+            o_out = o_out.at[qi].set(jnp.where(done, o_blk, cur_o))
+            cur_lse = lse_out[qi]
+            lse_out = lse_out.at[qi].set(jnp.where(done, lse_blk, cur_lse))
+            return (m_new, l_new, acc_new, o_out, lse_out), None
+
+        init = (jnp.full((B, Hkv, G, qblk), NEG_INF, jnp.float32),
+                jnp.zeros((B, Hkv, G, qblk), jnp.float32),
+                jnp.zeros((B, Hkv, G, qblk, Dv), jnp.float32),
+                jnp.zeros((nq, B, qblk, Hkv, G, Dv), jnp.float32),
+                jnp.zeros((nq, B, Hkv, G, qblk), jnp.float32))
+        carry, _ = jax.lax.scan(step, init, (qs, ks))
+        return carry[3], carry[4]
+
+    def _fwd(q, k, v):
+        fb = fwd_blocks_tri if tri else fwd_blocks
+        o, lse = fb(q, k, v)
+        return o, (q, k, v, o, lse)
+
+    def _bwd(res, do):
+        q, k, v, o, lse = res
+        B, nq, qb, Hkv, G, Dh = q.shape
+        nk, kb, Dv = k.shape[1], k.shape[2], v.shape[-1]
+        do = do.astype(jnp.float32)                     # (nq,B,qblk,h,g,Dv)
+        # D_i = rowsum(dO * O)
+        Drow = jnp.sum(do * o, axis=-1)                 # (nq,B,qblk,h,g)
+        Drow = Drow.transpose(0, 1, 3, 4, 2)            # (nq,B,h,g,qblk)
+
+        def dq_step(_, qi):
+            qb_ = q[:, qi].astype(jnp.float32)
+            dob = do[qi].transpose(0, 2, 3, 1, 4)       # (B,h,g,qblk,Dv)
+            qpos = qi * qblk + jnp.arange(qblk) + q_offset
+
+            def kv_step(dq_acc, ki):
+                kb_ = k[:, ki].astype(jnp.float32)
+                s = jnp.einsum("bqhgd,bkhd->bhgqk", qb_, kb_) * scale
+                kpos = ki * kblk + jnp.arange(kblk)
+                s = s + _mask_bias(qpos, kpos, causal, window,
+                                   sk)[None, None, None]
+                p = jnp.exp(s - lse[qi][..., None])
+                dp = jnp.einsum("bhgqd,bkhd->bhgqk", dob,
+                                v[:, ki].astype(jnp.float32))
+                ds = p * (dp - Drow[qi][..., None])
+                dq_acc = dq_acc + jnp.einsum("bhgqk,bkhd->bqhgd", ds,
+                                             kb_) * scale
+                return dq_acc, None
+
+            dq0 = jnp.zeros((B, qblk, Hkv, G, Dh), jnp.float32)
+            dq, _ = jax.lax.scan(kv_step, dq0, jnp.arange(nk))
+            return None, dq
+
+        _, dq = jax.lax.scan(dq_step, None, jnp.arange(nq))
+
+        def dkv_step(_, ki):
+            kb_ = k[:, ki].astype(jnp.float32)
+            vb_ = v[:, ki].astype(jnp.float32)
+            kpos = ki * kblk + jnp.arange(kblk)
+
+            def q_step(carry, qi):
+                dk_acc, dv_acc = carry
+                qb_ = q[:, qi].astype(jnp.float32)
+                dob = do[qi].transpose(0, 2, 3, 1, 4)
+                qpos = qi * qblk + jnp.arange(qblk) + q_offset
+                s = jnp.einsum("bqhgd,bkhd->bhgqk", qb_, kb_) * scale
+                s = s + _mask_bias(qpos, kpos, causal, window,
+                                   sk)[None, None, None]
+                p = jnp.exp(s - lse[qi][..., None])
+                dv_acc = dv_acc + jnp.einsum("bhgqk,bhgqd->bkhd", p, dob)
+                dp = jnp.einsum("bhgqd,bkhd->bhgqk", dob, vb_)
+                ds = p * (dp - Drow[qi][..., None])
+                dk_acc = dk_acc + jnp.einsum("bhgqk,bqhgd->bkhd", ds,
+                                             qb_) * scale
+                return (dk_acc, dv_acc), None
+
+            init = (jnp.zeros((B, kblk, Hkv, Dh), jnp.float32),
+                    jnp.zeros((B, kblk, Hkv, Dv), jnp.float32))
+            (dk, dv), _ = jax.lax.scan(q_step, init, jnp.arange(nq))
+            return None, (dk, dv)
+
+        _, (dk, dv) = jax.lax.scan(dkv_step, None, jnp.arange(nk))
+        # emit layouts: dq (nq,B,qblk,h,g,d), dk/dv (nk,B,kblk,h,d)
+        # -> input layouts (B,nq,qblk,...), (B,nk,kblk,...)
+        return (dq.transpose(1, 0, 2, 3, 4, 5).astype(q.dtype),
+                dk.transpose(1, 0, 2, 3, 4).astype(k.dtype),
+                dv.transpose(1, 0, 2, 3, 4).astype(v.dtype))
+
+    def _bwd_tri(res, do):
+        """Triangle-ordered backward: only lower-triangle pairs computed."""
+        q, k, v, o, lse = res
+        B, nq, qb, Hkv, G, Dh = q.shape
+        nk, kb, Dv = k.shape[1], k.shape[2], v.shape[-1]
+        do = do.astype(jnp.float32)
+        Drow = jnp.sum(do * o, axis=-1).transpose(0, 1, 3, 4, 2)
+
+        def _tile(qi, ki):
+            qb_ = q[:, qi].astype(jnp.float32)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qb_,
+                           k[:, ki].astype(jnp.float32)) * scale
+            s = s + _bias_pair(qi, ki)[None, None, None]
+            p = jnp.exp(s - lse[qi][..., None])
+            dob = do[qi].transpose(0, 2, 3, 1, 4)
+            dp = jnp.einsum("bhgqd,bkhd->bhgqk", dob,
+                            v[:, ki].astype(jnp.float32))
+            ds = p * (dp - Drow[qi][..., None])
+            return qb_, p, ds, dob
+
+        qs, ks = _tri_pairs(nq)
+
+        def dq_step(carry, pair):
+            dq_acc, dq_out = carry
+            qi, ki = pair
+            dq_acc = jnp.where(ki == 0, 0.0, dq_acc)
+            _, p, ds, _ = _tile(qi, ki)
+            dq_acc = dq_acc + jnp.einsum(
+                "bhgqk,bkhd->bqhgd", ds, k[:, ki].astype(jnp.float32)) * scale
+            cur = dq_out[qi]
+            dq_out = dq_out.at[qi].set(jnp.where(ki == qi, dq_acc, cur))
+            return (dq_acc, dq_out), None
+
+        dq0 = (jnp.zeros((B, qblk, Hkv, G, Dh), jnp.float32),
+               jnp.zeros((nq, B, qblk, Hkv, G, Dh), jnp.float32))
+        (_, dq), _ = jax.lax.scan(dq_step, dq0, (qs, ks))
+
+        qs2, ks2 = _tri_pairs_colmajor(nq)
+
+        def dkv_step(carry, pair):
+            dk_acc, dv_acc, dk_out, dv_out = carry
+            qi, ki = pair
+            fresh = qi == ki
+            dk_acc = jnp.where(fresh, 0.0, dk_acc)
+            dv_acc = jnp.where(fresh, 0.0, dv_acc)
+            qb_, p, ds, dob = _tile(qi, ki)
+            dv_acc = dv_acc + jnp.einsum("bhgqk,bhgqd->bkhd", p, dob)
+            dk_acc = dk_acc + jnp.einsum("bhgqk,bqhgd->bkhd", ds, qb_) * scale
+            done = qi == nq - 1
+            dk_out = dk_out.at[ki].set(jnp.where(done, dk_acc, dk_out[ki]))
+            dv_out = dv_out.at[ki].set(jnp.where(done, dv_acc, dv_out[ki]))
+            return (dk_acc, dv_acc, dk_out, dv_out), None
+
+        dkv0 = (jnp.zeros((B, kblk, Hkv, Dh), jnp.float32),
+                jnp.zeros((B, kblk, Hkv, Dv), jnp.float32),
+                jnp.zeros((nk, B, kblk, Hkv, Dh), jnp.float32),
+                jnp.zeros((nk, B, kblk, Hkv, Dv), jnp.float32))
+        (_, _, dk, dv), _ = jax.lax.scan(dkv_step, dkv0, (qs2, ks2))
+        return (dq.transpose(1, 0, 2, 3, 4, 5).astype(q.dtype),
+                dk.transpose(1, 0, 2, 3, 4).astype(k.dtype),
+                dv.transpose(1, 0, 2, 3, 4).astype(v.dtype))
+
+    @jax.custom_vjp
+    def flash(q, k, v):
+        o, _ = (fwd_blocks_tri if tri else fwd_blocks)(q, k, v)
+        return o
+
+    flash.defvjp(_fwd, _bwd_tri if tri else _bwd)
+    return flash
+
+
+# kv-block length: the q-pass carry (B,H,G,qblk,Dv f32) is rewritten once per
+# kv block, so HBM carry traffic scales ~ S/kblk — bigger kblk is cheaper
+# until the (qblk x kblk) tile stops fitting near-memory (VMEM on TPU).
+DEFAULT_KBLK = int(os.environ.get("REPRO_FLASH_KBLK", "512"))
+DEFAULT_QBLK = int(os.environ.get("REPRO_FLASH_QBLK", "256"))
+
+
+def _aligned(blk: int, S: int) -> int:
+    """Cap the block so it divides the per-shard sequence span (the residual
+    stream is seq-sharded 16-way; a block spanning shards forces GSPMD to
+    all-gather the whole K/V per step — measured 4x collective blowup)."""
+    from repro.utils import _mesh_axis_names
+    if "model" not in _mesh_axis_names():
+        return min(blk, max(S, 128))
+    shard_span = max(S // 16, 128)
+    return min(blk, shard_span)
+
+
+def flash_attention(q, k, v, *, scale, causal=True, window=0, q_offset=0,
+                    qblk=None, kblk=None, softcap=0.0):
+    qblk = _aligned(DEFAULT_QBLK if qblk is None else qblk, q.shape[1])
+    kblk = _aligned(DEFAULT_KBLK if kblk is None else kblk, k.shape[1])
+    """q: (B,Sq,Hkv,G,Dh); k: (B,Sk,Hkv,Dh); v: (B,Sk,Hkv,Dv) -> (B,Sq,...).
+
+    Memory: O(S * D) activations + one (qblk x kblk) tile per head in
+    flight; the S^2 matrix is never stored.
+    """
+    B, Sq, Hkv, G, Dh = q.shape
+    Sk, Dv = k.shape[1], v.shape[-1]
+    qpad, kpad = cdiv(Sq, qblk) * qblk - Sq, cdiv(Sk, kblk) * kblk - Sk
+    qf = jnp.pad(q, ((0, 0), (0, qpad), (0, 0), (0, 0), (0, 0)))
+    kf = jnp.pad(k, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+    vf = jnp.pad(v, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+    # padded kv columns must be masked: represent via causal+window bounds —
+    # padded KEYS sit at positions >= Sk; padded QUERIES beyond Sq are
+    # discarded after the slice. Mask pad keys by giving them positions
+    # beyond any query: with causal=True they are already excluded for
+    # q < Sk; for non-causal we mask explicitly below.
+    nq, nk = qf.shape[1] // qblk, kf.shape[1] // kblk
+    qf = qf.reshape(B, nq, qblk, Hkv, G, Dh)
+    kf = kf.reshape(B, nk, kblk, Hkv, Dh)
+    vf = vf.reshape(B, nk, kblk, Hkv, Dv)
+    fn = _make_flash(float(scale), bool(causal), int(window), int(q_offset),
+                     int(qblk), int(kblk), float(softcap), int(Sk))
+    o = fn(qf, kf, vf)                                  # (nq,B,qblk,h,g,Dv)
+    o = o.transpose(1, 0, 2, 3, 4, 5).reshape(B, nq * qblk, Hkv, G, Dv)
+    return o[:, :Sq].astype(q.dtype)

@@ -1,0 +1,460 @@
+"""Primitive layers: inits, norms, RoPE, blockwise (flash-style) attention,
+GQA / MLA attention blocks, MLPs. Pure-jnp, mesh-agnostic (sharding hints via
+``utils.shard``)."""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import shard, cdiv
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in, d_out, dtype=jnp.float32, scale: float | None = None):
+    scale = (1.0 / math.sqrt(d_in)) if scale is None else scale
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, rows, dim, dtype=jnp.float32, scale: float = 0.02):
+    return (jax.random.normal(key, (rows, dim), jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, weight, eps=1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)).astype(dt)
+
+
+def layernorm(x, weight, bias, eps=1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def norm_init(cfg, d):
+    if cfg.norm == "rmsnorm":
+        return {"w": jnp.ones((d,), jnp.float32)}
+    return {"w": jnp.ones((d,), jnp.float32), "b": jnp.zeros((d,), jnp.float32)}
+
+
+def apply_norm(cfg, p, x):
+    if "b" in p:
+        return layernorm(x, p["w"], p["b"], cfg.norm_eps)
+    return rmsnorm(x, p["w"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, D); positions: (..., S) int32."""
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)                                  # (d/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv        # (..., S, d/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise (flash-style) attention — pure jnp with online softmax, so 32k+
+# prefill lowers without materializing S^2 score tensors.
+#   q: (B, Sq, Hkv, G, Dh)   k: (B, Sk, Hkv, Dh)   v: (B, Sk, Hkv, Dv)
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def _attn_naive(q, k, v, *, scale, causal, window, q_offset, softcap=0.0):
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap > 0:
+        s = jnp.tanh(s / softcap) * softcap
+    Sq, Sk = q.shape[1], k.shape[1]
+    qpos = jnp.arange(Sq) + q_offset
+    kpos = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window > 0:
+        mask &= qpos[:, None] - kpos[None, :] < window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def _attn_blockwise(q, k, v, *, scale, causal, window, q_offset,
+                    qblk=512, kblk=512, softcap=0.0):
+    B, Sq, Hkv, G, Dh = q.shape
+    Sk, Dv = k.shape[1], v.shape[-1]
+    qpad, kpad = cdiv(Sq, qblk) * qblk - Sq, cdiv(Sk, kblk) * kblk - Sk
+    qf = jnp.pad(q, ((0, 0), (0, qpad), (0, 0), (0, 0), (0, 0)))
+    kf = jnp.pad(k, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+    vf = jnp.pad(v, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+    nq, nk = qf.shape[1] // qblk, kf.shape[1] // kblk
+    qf = qf.reshape(B, nq, qblk, Hkv, G, Dh)
+    kf = kf.reshape(B, nk, kblk, Hkv, Dh)
+    vf = vf.reshape(B, nk, kblk, Hkv, Dv)
+    kpos_all = jnp.arange(nk * kblk).reshape(nk, kblk)
+    kvalid = kpos_all < Sk
+
+    def q_step(_, qi):
+        qb = qf[:, qi]                                           # (B,qblk,Hkv,G,Dh)
+        qpos = qi * qblk + jnp.arange(qblk) + q_offset
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kb, vb = kf[:, ki], vf[:, ki]
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qb.astype(jnp.float32),
+                           kb.astype(jnp.float32)) * scale
+            if softcap > 0:
+                s = jnp.tanh(s / softcap) * softcap
+            kpos = ki * kblk + jnp.arange(kblk)
+            msk = kvalid[ki][None, :]
+            if causal:
+                msk = msk & (qpos[:, None] >= kpos[None, :])
+            if window > 0:
+                msk = msk & (qpos[:, None] - kpos[None, :] < window)
+            s = jnp.where(msk[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p, vb.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        init = (jnp.full((B, Hkv, G, qblk), NEG_INF, jnp.float32),
+                jnp.zeros((B, Hkv, G, qblk), jnp.float32),
+                jnp.zeros((B, Hkv, G, qblk, Dv), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(kv_step, init, jnp.arange(nk))
+        ob = acc / jnp.maximum(l, 1e-30)[..., None]              # (B,Hkv,G,qblk,Dv)
+        return None, ob.transpose(0, 3, 1, 2, 4)                  # (B,qblk,Hkv,G,Dv)
+
+    _, out = jax.lax.scan(q_step, None, jnp.arange(nq))           # (nq,B,qblk,...)
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, nq * qblk, Hkv, G, Dv)
+    return out[:, :Sq].astype(q.dtype)
+
+
+def grouped_attention(q, k, v, *, scale, causal=True, window=0, q_offset=0,
+                      softcap=0.0, blockwise_threshold=2048):
+    """Dispatch: naive (exact autodiff) for short sequences; flash attention
+    (custom-VJP, memory-linear) beyond."""
+    if max(q.shape[1], k.shape[1]) <= blockwise_threshold:
+        return _attn_naive(q, k, v, scale=scale, causal=causal, window=window,
+                           q_offset=q_offset, softcap=softcap)
+    if softcap > 0:
+        return _attn_blockwise(q, k, v, scale=scale, causal=causal,
+                               window=window, q_offset=q_offset,
+                               softcap=softcap)
+    from repro.models.flash import flash_attention
+    return flash_attention(q, k, v, scale=scale, causal=causal, window=window,
+                           q_offset=q_offset)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, scale, window=0,
+                     softcap=0.0):
+    """Single-token decode. q: (B,1,Hkv,G,Dh); caches: (B,S,Hkv,D*).
+
+    ``cache_len`` is the number of valid entries (new token already written at
+    position cache_len-1). Linear in S, no S^2 term.
+    """
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * scale
+    if softcap > 0:
+        s = jnp.tanh(s / softcap) * softcap
+    kpos = jnp.arange(k_cache.shape[1])
+    msk = kpos[None, :] < cache_len[:, None]                      # (B,S)
+    if window > 0:
+        msk = msk & (cache_len[:, None] - 1 - kpos[None, :] < window)
+    s = jnp.where(msk[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v_cache.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block
+# ---------------------------------------------------------------------------
+
+def gqa_init(key, cfg, dtype, cross=False):
+    d, H, Hkv, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dm = cfg.d_memory if cross else d
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": dense_init(ks[0], d, H * Dh, dtype),
+        "wk": dense_init(ks[1], dm, Hkv * Dh, dtype),
+        "wv": dense_init(ks[2], dm, Hkv * Dh, dtype),
+        "wo": dense_init(ks[3], H * Dh, d, dtype, scale=1.0 / math.sqrt(H * Dh)),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = {"w": jnp.ones((Dh,), jnp.float32)}
+        p["k_norm"] = {"w": jnp.ones((Dh,), jnp.float32)}
+    return p
+
+
+def _qkv(p, cfg, x, memory=None):
+    B, S, _ = x.shape
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    G = H // Hkv
+    src = x if memory is None else memory
+    q = (x @ p["wq"]).reshape(B, S, Hkv, G, Dh)
+    k = (src @ p["wk"]).reshape(B, src.shape[1], Hkv, Dh)
+    v = (src @ p["wv"]).reshape(B, src.shape[1], Hkv, Dh)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"]["w"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"]["w"], cfg.norm_eps)
+    return q, k, v
+
+
+def gqa_forward(p, cfg, x, positions, *, window=None, use_rope=True):
+    """Self-attention over full sequence (training / prefill)."""
+    B, S, _ = x.shape
+    q, k, v = _qkv(p, cfg, x)
+    if use_rope:
+        q = apply_rope(q.reshape(B, S, -1, cfg.head_dim), positions, cfg.rope_theta
+                       ).reshape(q.shape)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q = shard(q, ("pod", "data"), None, "model")
+    k = shard(k, ("pod", "data"), None, "model")
+    w = cfg.sliding_window if window is None else window
+    out = grouped_attention(q, k, v, scale=1.0 / math.sqrt(cfg.head_dim),
+                            causal=True, window=w, softcap=cfg.attn_logit_softcap)
+    out = out.reshape(B, S, -1)
+    return out @ p["wo"], (k, v)
+
+
+def cross_attn_forward(p, cfg, x, memory):
+    """Cross-attention to a fixed memory (image patches / encoder frames)."""
+    B, S, _ = x.shape
+    q, k, v = _qkv(p, cfg, x, memory=memory)
+    q = shard(q, ("pod", "data"), None, "model")
+    out = grouped_attention(q, k, v, scale=1.0 / math.sqrt(cfg.head_dim),
+                            causal=False, window=0)
+    return out.reshape(B, S, -1) @ p["wo"], (k, v)
+
+
+def gqa_decode(p, cfg, x, cache, *, window=None, use_rope=True):
+    """One-token decode. cache = {'k': (B,S,Hkv,Dh), 'v': ..., 'len': (B,)}
+
+    Full-length caches are sequence-sharded over 'model' when a mesh is in
+    scope (see models.decode_dist); ring-buffer (windowed) caches stay local.
+    """
+    from repro.models import decode_dist as DD
+    B = x.shape[0]
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q, k, v = _qkv(p, cfg, x)
+    pos = cache["len"][:, None]                                   # (B,1)
+    if use_rope:
+        q = apply_rope(q.reshape(B, 1, -1, Dh), pos, cfg.rope_theta).reshape(q.shape)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    w = cfg.sliding_window if window is None else window
+    if w <= 0 and DD.have_model_axis():
+        out, new_cache = DD.gqa_decode_dist(
+            p, cfg, q, k, v, cache, scale=1.0 / math.sqrt(Dh),
+            softcap=cfg.attn_logit_softcap)
+        out = out.reshape(B, 1, -1) @ p["wo"]
+        return out, new_cache
+    if w > 0:
+        slot = cache["len"] % cache["k"].shape[1]                 # ring buffer
+    else:
+        slot = cache["len"]
+    kc = jax.vmap(lambda c, s, n: jax.lax.dynamic_update_slice(c, n, (s, 0, 0)))(
+        cache["k"], slot, k)
+    vc = jax.vmap(lambda c, s, n: jax.lax.dynamic_update_slice(c, n, (s, 0, 0)))(
+        cache["v"], slot, v)
+    new_len = cache["len"] + 1
+    if w > 0:
+        out = _decode_ring(q, kc, vc, new_len, w, cfg)
+    else:
+        out = decode_attention(q, kc, vc, new_len,
+                               scale=1.0 / math.sqrt(Dh),
+                               softcap=cfg.attn_logit_softcap)
+    out = out.reshape(B, 1, -1) @ p["wo"]
+    return out, {"k": kc, "v": vc, "len": new_len}
+
+
+def _decode_ring(q, kc, vc, new_len, window, cfg):
+    """Decode attention over a ring-buffer cache of size >= window.
+
+    Positions in the ring: slot s holds absolute position p where
+    p % ring == s and p in [new_len - valid, new_len).
+    """
+    B, ring = kc.shape[0], kc.shape[1]
+    slots = jnp.arange(ring)
+    # absolute position stored in each slot (for each batch element)
+    cur = new_len[:, None]                                        # (B,1)
+    abs_pos = cur - 1 - ((cur - 1 - slots[None, :]) % ring)       # (B,ring)
+    valid = (abs_pos >= 0) & (abs_pos >= cur - window) & (abs_pos < cur)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q.astype(jnp.float32),
+                   kc.astype(jnp.float32)) / math.sqrt(cfg.head_dim)
+    if cfg.attn_logit_softcap > 0:
+        s = jnp.tanh(s / cfg.attn_logit_softcap) * cfg.attn_logit_softcap
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhgqk,bkhd->bqhgd", p, vc.astype(jnp.float32)).astype(q.dtype)
+
+
+def gqa_cache_init(cfg, batch, max_len, dtype, *, window=None):
+    w = cfg.sliding_window if window is None else window
+    ring = min(max_len, w) if w > 0 else max_len
+    Hkv, Dh = cfg.n_kv_heads, cfg.head_dim
+    return {"k": jnp.zeros((batch, ring, Hkv, Dh), dtype),
+            "v": jnp.zeros((batch, ring, Hkv, Dh), dtype),
+            "len": jnp.zeros((batch,), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention, DeepSeek-V2) block
+# ---------------------------------------------------------------------------
+
+def mla_init(key, cfg, dtype):
+    d, H = cfg.d_model, cfg.n_heads
+    dn, dr, dv = cfg.head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    r_kv, r_q = cfg.kv_lora_rank, cfg.q_lora_rank
+    ks = jax.random.split(key, 8)
+    p = {}
+    if r_q > 0:
+        p["wdq"] = dense_init(ks[0], d, r_q, dtype)
+        p["q_ln"] = {"w": jnp.ones((r_q,), jnp.float32)}
+        p["wuq"] = dense_init(ks[1], r_q, H * (dn + dr), dtype)
+    else:
+        p["wq"] = dense_init(ks[1], d, H * (dn + dr), dtype)
+    p["wdkv"] = dense_init(ks[2], d, r_kv + dr, dtype)
+    p["kv_ln"] = {"w": jnp.ones((r_kv,), jnp.float32)}
+    p["wuk"] = dense_init(ks[3], r_kv, H * dn, dtype)
+    p["wuv"] = dense_init(ks[4], r_kv, H * dv, dtype)
+    p["wo"] = dense_init(ks[5], H * dv, d, dtype, scale=1.0 / math.sqrt(H * dv))
+    return p
+
+
+def _mla_q(p, cfg, x):
+    B, S, _ = x.shape
+    H, dn, dr = cfg.n_heads, cfg.head_dim, cfg.rope_head_dim
+    if cfg.q_lora_rank > 0:
+        cq = rmsnorm(x @ p["wdq"], p["q_ln"]["w"], cfg.norm_eps)
+        q = (cq @ p["wuq"]).reshape(B, S, H, dn + dr)
+    else:
+        q = (x @ p["wq"]).reshape(B, S, H, dn + dr)
+    return q[..., :dn], q[..., dn:]                               # q_nope, q_rope
+
+
+def mla_forward(p, cfg, x, positions):
+    """Full-sequence MLA (training / prefill). Returns latent cache."""
+    B, S, _ = x.shape
+    H, dn, dr, dv = cfg.n_heads, cfg.head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    q_nope, q_rope = _mla_q(p, cfg, x)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    ckv_full = x @ p["wdkv"]                                       # (B,S,r+dr)
+    ckv = rmsnorm(ckv_full[..., :cfg.kv_lora_rank], p["kv_ln"]["w"], cfg.norm_eps)
+    k_rope = apply_rope(ckv_full[..., None, cfg.kv_lora_rank:], positions,
+                        cfg.rope_theta)                            # (B,S,1,dr)
+    k_nope = (ckv @ p["wuk"]).reshape(B, S, H, dn)
+    v = (ckv @ p["wuv"]).reshape(B, S, H, dv)
+    q = jnp.concatenate([q_nope, q_rope], -1)[:, :, :, None, :]    # Hkv=H, G=1
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (B, S, H, dr))], -1)
+    q = shard(q, ("pod", "data"), None, "model")
+    k = shard(k, ("pod", "data"), None, "model")
+    out = grouped_attention(q, k, v, scale=1.0 / math.sqrt(dn + dr), causal=True)
+    out = out.reshape(B, S, -1) @ p["wo"]
+    cache = {"ckv": ckv, "k_rope": k_rope[:, :, 0, :],
+             "len": jnp.full((B,), S, jnp.int32)}
+    return out, cache
+
+
+def mla_decode(p, cfg, x, cache):
+    """Weight-absorbed single-token MLA decode against the latent cache.
+
+    cache = {'ckv': (B,S,r), 'k_rope': (B,S,dr), 'len': (B,)}
+    FLOPs per token are O(S * (r + dr)) per head — the MLA memory/compute win.
+    """
+    B = x.shape[0]
+    H, dn, dr, dv, r = (cfg.n_heads, cfg.head_dim, cfg.rope_head_dim,
+                        cfg.v_head_dim, cfg.kv_lora_rank)
+    from repro.models import decode_dist as DD
+    q_nope, q_rope = _mla_q(p, cfg, x)                             # (B,1,H,*)
+    pos = cache["len"][:, None]
+    q_rope = apply_rope(q_rope, pos, cfg.rope_theta)
+    ckv_full = x @ p["wdkv"]
+    ckv_new = rmsnorm(ckv_full[..., :r], p["kv_ln"]["w"], cfg.norm_eps)
+    kr_new = apply_rope(ckv_full[..., None, r:], pos, cfg.rope_theta)[:, :, 0]
+    if DD.have_model_axis():
+        wuk = p["wuk"].reshape(r, H, dn)
+        q_abs = jnp.einsum("bqhd,rhd->bqhr", q_nope.astype(jnp.float32),
+                           wuk.astype(jnp.float32))
+        ctx, new_cache = DD.mla_decode_dist(cfg, q_abs, q_rope,
+                                            ckv_new, kr_new, cache)
+        wuv = p["wuv"].reshape(r, H, dv)
+        out = jnp.einsum("bqhr,rhd->bqhd", ctx, wuv.astype(jnp.float32))
+        out = out.reshape(B, 1, H * dv).astype(x.dtype) @ p["wo"]
+        return out, new_cache
+    ckv_c = jax.vmap(lambda c, s, n: jax.lax.dynamic_update_slice(c, n, (s, 0)))(
+        cache["ckv"], cache["len"], ckv_new)
+    kr_c = jax.vmap(lambda c, s, n: jax.lax.dynamic_update_slice(c, n, (s, 0)))(
+        cache["k_rope"], cache["len"], kr_new)
+    new_len = cache["len"] + 1
+    # absorb W_uk into q:  q_abs[h, r] = sum_dn q_nope[h,dn] * wuk[r, h, dn]
+    wuk = p["wuk"].reshape(r, H, dn)
+    q_abs = jnp.einsum("bqhd,rhd->bqhr", q_nope.astype(jnp.float32),
+                       wuk.astype(jnp.float32))
+    s = (jnp.einsum("bqhr,bkr->bhqk", q_abs, ckv_c.astype(jnp.float32))
+         + jnp.einsum("bqhd,bkd->bhqk", q_rope.astype(jnp.float32),
+                      kr_c.astype(jnp.float32))) / math.sqrt(dn + dr)
+    kpos = jnp.arange(ckv_c.shape[1])
+    s = jnp.where((kpos[None, :] < new_len[:, None])[:, None, None, :], s, NEG_INF)
+    pa = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhqk,bkr->bqhr", pa, ckv_c.astype(jnp.float32))  # (B,1,H,r)
+    wuv = p["wuv"].reshape(r, H, dv)
+    out = jnp.einsum("bqhr,rhd->bqhd", ctx, wuv.astype(jnp.float32))
+    out = out.reshape(B, 1, H * dv).astype(x.dtype) @ p["wo"]
+    return out, {"ckv": ckv_c, "k_rope": kr_c, "len": new_len}
+
+
+def mla_cache_init(cfg, batch, max_len, dtype):
+    return {"ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((batch, max_len, cfg.rope_head_dim), dtype),
+            "len": jnp.zeros((batch,), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, cfg, d_ff=None, dtype=jnp.float32):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.ffn_act == "swiglu":
+        return {"wg": dense_init(ks[0], d, f, dtype),
+                "wu": dense_init(ks[1], d, f, dtype),
+                "wd": dense_init(ks[2], f, d, dtype, scale=1.0 / math.sqrt(f))}
+    return {"wu": dense_init(ks[1], d, f, dtype),
+            "wd": dense_init(ks[2], f, d, dtype, scale=1.0 / math.sqrt(f))}
+
+
+def mlp_forward(p, cfg, x):
+    if "wg" in p:
+        h = jax.nn.silu(x @ p["wg"]) * (x @ p["wu"])
+    else:
+        h = jax.nn.gelu(x @ p["wu"])
+    h = shard(h, ("pod", "data"), None, "model")
+    return h @ p["wd"]

@@ -1,0 +1,225 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) mixer.
+
+Training/prefill uses the chunked SSD block decomposition: intra-chunk terms
+are quadratic within a chunk (L x L, MXU-friendly) and inter-chunk terms are
+carried by a serial ``lax.scan`` over chunk states (B, H, P, N). Decode is the
+O(1) recurrence h <- h * exp(dt*A) + dt * B x. Heads shard over ``model``,
+batch over (pod, data); the recurrent state never grows with sequence length,
+which is what makes the ``long_500k`` shape tractable for SSM archs.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import shard, cdiv
+from repro.models.layers import dense_init
+
+
+def ssm_dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    P_ = cfg.ssm_head_dim
+    H = d_inner // P_
+    N = cfg.ssm_state
+    return d_inner, H, P_, N
+
+
+def mamba2_init(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    d_inner, H, P_, N = ssm_dims(cfg)
+    conv_ch = d_inner + 2 * N                    # x, B, C go through the conv
+    ks = jax.random.split(key, 6)
+    # in_proj -> [z, x, B, C, dt]
+    p = {
+        "in_proj": dense_init(ks[0], d, 2 * d_inner + 2 * N + H, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv_width, conv_ch),
+                                     jnp.float32) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[2], (H,), jnp.float32,
+                                       math.log(1e-3), math.log(1e-1))))),
+        "D": jnp.ones((H,), jnp.float32),
+        "out_norm": {"w": jnp.ones((d_inner,), jnp.float32)},
+        "out_proj": dense_init(ks[3], d_inner, d, dtype,
+                               scale=1.0 / math.sqrt(d_inner)),
+    }
+    return p
+
+
+def _split_proj(cfg, proj):
+    d_inner, H, P_, N = ssm_dims(cfg)
+    z, xbc, dt = jnp.split(proj, [d_inner, 2 * d_inner + 2 * N], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv, width K. xbc: (B,S,C); w: (K,C)."""
+    K = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i: i + xbc.shape[1]] * w[i][None, None, :]
+              for i in range(K))
+    return jax.nn.silu(out + b[None, None, :])
+
+
+def _gated_out(p, cfg, y, z, x_in_dtype):
+    d_t = y.dtype
+    y = y * jax.nn.silu(z.astype(y.dtype))
+    # grouped RMSNorm over d_inner
+    y32 = y.astype(jnp.float32)
+    var = jnp.mean(jnp.square(y32), axis=-1, keepdims=True)
+    y = (y32 * jax.lax.rsqrt(var + cfg.norm_eps)
+         * p["out_norm"]["w"]).astype(x_in_dtype)
+    return y @ p["out_proj"]
+
+
+def mamba2_forward(p, cfg, x, *, return_state=False):
+    """Chunked SSD over the full sequence. x: (B,S,D)."""
+    B, S, D = x.shape
+    d_inner, H, P_, N = ssm_dims(cfg)
+    L = min(cfg.ssm_chunk, S)
+    S0 = S
+    proj = x @ p["in_proj"]
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    pad = (-S) % L
+    if pad:
+        # pad to a chunk multiple; padded positions get dt=0 below, which
+        # makes them exact no-ops on both outputs and the carried state
+        xbc = jnp.pad(xbc, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    nC = S // L
+    xs, Bmat, Cmat = jnp.split(xbc, [d_inner, d_inner + N], axis=-1)
+    xs = xs.reshape(B, S, H, P_)
+    dt_raw_p = jnp.pad(dt_raw, ((0, 0), (0, pad), (0, 0))) if pad else dt_raw
+    dt = jax.nn.softplus(dt_raw_p.astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])             # (B,S,H)
+    if pad:
+        valid = (jnp.arange(S) < S0).astype(jnp.float32)[None, :, None]
+        dt = dt * valid
+    A = -jnp.exp(p["A_log"])                                        # (H,)
+    dA = dt * A[None, None, :]                                      # (B,S,H) <= 0
+
+    xs = shard(xs, ("pod", "data"), None, "model", None)
+
+    # chunk views — scan over chunks so the quadratic (L, L, H) intra-chunk
+    # tensors exist for one chunk at a time, never (nC, L, L, H).
+    xs_c = xs.reshape(B, nC, L, H, P_).astype(jnp.float32)
+    B_c = Bmat.reshape(B, nC, L, N).astype(jnp.float32)
+    C_c = Cmat.reshape(B, nC, L, N).astype(jnp.float32)
+    dt_c = dt.reshape(B, nC, L, H)
+    dA_c = dA.reshape(B, nC, L, H)
+    tri = jnp.tril(jnp.ones((L, L), bool))
+
+    def chunk_step(h, inp):
+        x_i, b_i, c_i, dt_i, dA_i = inp      # (B,L,H,P),(B,L,N),(B,L,N),(B,L,H)x2
+        cum = jnp.cumsum(dA_i, axis=1)                               # (B,L,H)
+        # intra-chunk: decay[i,j] = exp(cum_i - cum_j), i >= j
+        seg = cum[:, :, None, :] - cum[:, None, :, :]                # (B,L,L,H)
+        decay = jnp.where(tri[None, :, :, None], jnp.exp(seg), 0.0)
+        cb = jnp.einsum("bln,bmn->blm", c_i, b_i)                    # (B,L,L)
+        xdt = x_i * dt_i[..., None]                                  # (B,L,H,P)
+        y_diag = jnp.einsum("blm,blmh,bmhp->blhp", cb, decay, xdt)
+        # inter-chunk from carried state
+        y_off = jnp.einsum("bln,blh,bhnp->blhp", c_i, jnp.exp(cum), h)
+        # state update
+        last = cum[:, -1:, :]                                        # (B,1,H)
+        w_state = jnp.exp(last - cum) * dt_i                         # (B,L,H)
+        S_i = jnp.einsum("bln,blh,blhp->bhnp", b_i, w_state, x_i)
+        h_new = h * jnp.exp(last[:, 0])[:, :, None, None] + S_i
+        return h_new, y_diag + y_off
+
+    h0 = jnp.zeros((B, H, N, P_), jnp.float32)
+    h_last, y_chunks = jax.lax.scan(
+        chunk_step, h0,
+        (xs_c.transpose(1, 0, 2, 3, 4), B_c.transpose(1, 0, 2, 3),
+         C_c.transpose(1, 0, 2, 3), dt_c.transpose(1, 0, 2, 3),
+         dA_c.transpose(1, 0, 2, 3)))
+    y = y_chunks.transpose(1, 0, 2, 3, 4).reshape(B, S, H, P_)
+    y = y + xs.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y[:, :S0].reshape(B, S0, d_inner)
+    out = _gated_out(p, cfg, y, z, x.dtype)
+    if return_state:
+        # conv tail for decode continuation
+        conv_state = _conv_tail(cfg, x, p)
+        return out, {"h": h_last.astype(jnp.float32), "conv": conv_state}
+    return out
+
+
+def _conv_tail(cfg, x, p):
+    K = cfg.ssm_conv_width
+    proj = x[:, -(K - 1):] @ p["in_proj"]
+    _, xbc, _ = _split_proj(cfg, proj)
+    # left-pad if sequence shorter than K-1
+    pad = (K - 1) - xbc.shape[1]
+    if pad > 0:
+        xbc = jnp.pad(xbc, ((0, 0), (pad, 0), (0, 0)))
+    return xbc
+
+
+def mamba2_decode(p, cfg, x, cache):
+    """One-token recurrent step.
+
+    cache = {'h': (B,H,N,P) fp32, 'conv': (B,K-1,conv_ch)}
+    """
+    B = x.shape[0]
+    d_inner, H, P_, N = ssm_dims(cfg)
+    K = cfg.ssm_conv_width
+    proj = x @ p["in_proj"]                                          # (B,1,*)
+    z, xbc_new, dt_raw = _split_proj(cfg, proj)
+    window = jnp.concatenate([cache["conv"], xbc_new], axis=1)       # (B,K,C)
+    conv_out = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+    conv_out = jax.nn.silu(conv_out)[:, None, :]                     # (B,1,C)
+    xs, Bm, Cm = jnp.split(conv_out, [d_inner, d_inner + N], axis=-1)
+    xs = xs.reshape(B, H, P_).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"][None, :])
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A[None, :])                                    # (B,H)
+    Bx = jnp.einsum("bn,bhp->bhnp", Bm[:, 0].astype(jnp.float32),
+                    xs * dt[..., None])
+    h = cache["h"] * dA[:, :, None, None] + Bx                       # (B,H,N,P)
+    y = jnp.einsum("bn,bhnp->bhp", Cm[:, 0].astype(jnp.float32), h)
+    y = y + xs * p["D"][None, :, None]
+    y = y.reshape(B, 1, d_inner)
+    out = _gated_out(p, cfg, y, z, x.dtype)
+    return out, {"h": h, "conv": window[:, 1:]}
+
+
+def mamba2_cache_init(cfg, batch, dtype):
+    d_inner, H, P_, N = ssm_dims(cfg)
+    conv_ch = d_inner + 2 * N
+    return {"h": jnp.zeros((batch, H, N, P_), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_ch), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# Naive O(S) recurrence — oracle for tests.
+# ---------------------------------------------------------------------------
+
+def mamba2_reference_scan(p, cfg, x):
+    """Step-by-step recurrence; numerically equivalent to the chunked path."""
+    B, S, D = x.shape
+    d_inner, H, P_, N = ssm_dims(cfg)
+    proj = x @ p["in_proj"]
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xs, Bmat, Cmat = jnp.split(xbc, [d_inner, d_inner + N], axis=-1)
+    xs = xs.reshape(B, S, H, P_).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["A_log"])
+
+    def step(h, t):
+        dA = jnp.exp(dt[:, t] * A[None, :])                          # (B,H)
+        Bx = jnp.einsum("bn,bhp->bhnp", Bmat[:, t].astype(jnp.float32),
+                        xs[:, t] * dt[:, t][..., None])
+        h = h * dA[:, :, None, None] + Bx
+        y = jnp.einsum("bn,bhnp->bhp", Cmat[:, t].astype(jnp.float32), h)
+        return h, y
+
+    h0 = jnp.zeros((B, H, N, P_), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, jnp.arange(S))
+    y = ys.transpose(1, 0, 2, 3) + xs * p["D"][None, None, :, None]
+    y = y.reshape(B, S, d_inner)
+    return _gated_out(p, cfg, y, z, x.dtype)

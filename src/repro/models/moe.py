@@ -1,0 +1,336 @@
+"""Mixture-of-Experts FFN with capacity-based dispatch and explicit expert
+parallelism.
+
+Sharding design (the PS idea applied to the FFN's own sparse-access
+structure): expert weights are sharded over the ``model`` mesh axis. The MoE
+layer runs inside ``shard_map`` over the full mesh — activations arrive
+batch-sharded over (pod, data) and *replicated* over ``model``; every model
+rank routes the same local tokens but runs only its E/|model| local experts,
+then a ``psum`` over ``model`` combines expert contributions. Dispatch inside
+a rank is scatter/gather against a fixed-capacity (E_local, C, D) buffer, so
+no (T, E, C) one-hot tensor is ever materialised and buffer sizes are static.
+
+Baseline collective cost per MoE layer: one fp32 psum of (T_local, D) over
+``model``. §Perf upgrade path: all-to-all token dispatch (send only routed
+tokens) instead of replicated-compute + psum.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.utils import cdiv, _mesh_axis_names, bspec_axes, n_batch_shards
+from repro.models.layers import dense_init
+
+
+def moe_init(key, cfg, dtype=jnp.float32):
+    d, f, E = cfg.d_model, cfg.moe_d_ff or cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 5)
+
+    def stack(k, d_in, d_out, scale=None):
+        kk = jax.random.split(k, E)
+        return jnp.stack([dense_init(kk[i], d_in, d_out, dtype, scale)
+                          for i in range(E)])
+
+    p = {
+        "router": dense_init(ks[0], d, E, jnp.float32, scale=0.02),
+        "wg": stack(ks[1], d, f),
+        "wu": stack(ks[2], d, f),
+        "wd": stack(ks[3], f, d, scale=1.0 / math.sqrt(f)),
+    }
+    if cfg.n_shared_experts:
+        fs = f * cfg.n_shared_experts
+        kk = jax.random.split(ks[4], 3)
+        p["shared"] = {"wg": dense_init(kk[0], d, fs, dtype),
+                       "wu": dense_init(kk[1], d, fs, dtype),
+                       "wd": dense_init(kk[2], fs, d, dtype,
+                                        scale=1.0 / math.sqrt(fs))}
+    return p
+
+
+def router_topk(logits, k):
+    """softmax -> top-k -> renormalise (DeepSeek-V2 style)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    topv, topi = jax.lax.top_k(probs, k)
+    topv = topv / jnp.maximum(jnp.sum(topv, -1, keepdims=True), 1e-9)
+    return probs, topv, topi
+
+
+def load_balance_loss(probs, topi, n_experts):
+    """Switch-style aux loss: E * sum_e f_e * P_e."""
+    counts = jnp.zeros((n_experts,), jnp.float32).at[topi.reshape(-1)].add(1.0)
+    frac = counts / jnp.maximum(topi.size, 1)
+    mean_p = jnp.mean(probs, axis=0)
+    return n_experts * jnp.sum(frac * mean_p)
+
+
+def _dispatch_positions(topi, n_experts, capacity):
+    """Per-(token, choice) slot in a per-expert capacity buffer.
+
+    Loops over the k routing choices so the transient is (T, E) int32 — never
+    (T*k, E) or (T, E, C).
+    Returns slot (T, k) in [0, E*C] where E*C means 'dropped'.
+    """
+    T, k = topi.shape
+    base = jnp.zeros((n_experts,), jnp.int32)
+    slots = []
+    for j in range(k):
+        e_j = topi[:, j]
+        onehot = jax.nn.one_hot(e_j, n_experts, dtype=jnp.int32)
+        cum = jnp.cumsum(onehot, axis=0) + base[None, :]
+        my_pos = jnp.take_along_axis(cum, e_j[:, None], axis=1)[:, 0] - 1
+        keep = my_pos < capacity
+        slots.append(jnp.where(keep, e_j * capacity + my_pos,
+                               n_experts * capacity))
+        base = base + jnp.sum(onehot, axis=0)
+    return jnp.stack(slots, axis=1)                                # (T, k)
+
+
+def _moe_local(p, cfg, xt, *, e_offset, e_local, capacity, out_dtype):
+    """Dispatch/compute/combine for the e_local experts owned by this rank.
+
+    xt: (T, D) tokens (replicated across expert shards). Returns the partial
+    output (zeros where tokens route to remote experts) plus aux stats.
+    """
+    T, D = xt.shape
+    E, k = cfg.n_experts, cfg.moe_top_k
+    logits = xt.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+    probs, topv, topi = router_topk(logits, k)
+
+    slot_all = _dispatch_positions(topi, E, capacity)              # (T, k)
+    # localise: keep only slots owned by this shard
+    lo, hi = e_offset * capacity, (e_offset + e_local) * capacity
+    local = (slot_all >= lo) & (slot_all < hi)
+    slot = jnp.where(local, slot_all - lo, e_local * capacity)
+
+    buf = jnp.zeros((e_local * capacity + 1, D), xt.dtype)
+    for j in range(k):
+        buf = buf.at[slot[:, j]].set(xt)
+    buf = buf[: e_local * capacity].reshape(e_local, capacity, D)
+
+    wg, wu, wd = p["wg"], p["wu"], p["wd"]
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, wg)) * \
+        jnp.einsum("ecd,edf->ecf", buf, wu)
+    y = jnp.einsum("ecf,efd->ecd", h, wd)                          # (e_loc,C,D)
+
+    flat = jnp.concatenate([y.reshape(e_local * capacity, D),
+                            jnp.zeros((1, D), y.dtype)], axis=0)
+    out = jnp.zeros((T, D), jnp.float32)
+    for j in range(k):
+        w = (topv[:, j] * (slot[:, j] < e_local * capacity))[:, None]
+        out = out + flat[slot[:, j]].astype(jnp.float32) * w
+
+    aux = {
+        "moe_balance": load_balance_loss(probs, topi, E) / jnp.float32(1.0),
+        "moe_z": jnp.mean(jax.nn.logsumexp(logits, -1) ** 2),
+        "moe_drop_frac": 1.0 - jnp.mean((slot_all < E * capacity)
+                                        .astype(jnp.float32)),
+    }
+    return out.astype(out_dtype), aux
+
+
+import os
+
+# token dispatch strategy over the 'model' axis:
+#   'psum' (baseline) — tokens replicated over model ranks, each rank runs
+#       only its local experts, fp-dtype psum combines. One (T_local, D)
+#       psum per layer.
+#   'a2a' — tokens arrive sequence-sharded (matching the residual stream),
+#       routed tokens are all_to_all'd to their expert's owner rank and
+#       back. Traffic ~ 2 * k/n-scaled buckets; no psum, no token
+#       replication. (EXPERIMENTS.md §Perf I12.)
+MOE_DISPATCH = os.environ.get("REPRO_MOE_DISPATCH", "psum")
+
+
+def moe_forward(p, cfg, x, capacity_factor=None):
+    """x: (B, S, D) -> (out, aux dict). Expert-parallel over 'model' if the
+    ambient mesh has that axis; plain local compute otherwise."""
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.moe_top_k
+    cf = capacity_factor if capacity_factor is not None else cfg.capacity_factor
+    names = _mesh_axis_names()
+    n_exp_shards = 1
+    if "model" in names:
+        mesh = jax.sharding.get_abstract_mesh()
+        n_exp_shards = mesh.shape["model"]
+    assert E % n_exp_shards == 0, (E, n_exp_shards)
+    e_local = E // n_exp_shards
+
+    if (MOE_DISPATCH == "a2a" and n_exp_shards > 1
+            and S % n_exp_shards == 0 and S > 1):
+        return _moe_forward_a2a(p, cfg, x, cf, n_exp_shards, e_local)
+
+    if n_exp_shards == 1:
+        xt = x.reshape(B * S, D)
+        C = max(1, cdiv(int(B * S * k * cf), E))
+        out, aux = _moe_local(p, cfg, xt, e_offset=0, e_local=E,
+                              capacity=C, out_dtype=x.dtype)
+        out = out.reshape(B, S, D)
+    else:
+        baxes = bspec_axes(B)
+        nb = n_batch_shards() if baxes else 1
+        T_local = (B // nb) * S
+        C = max(1, cdiv(int(T_local * k * cf), E))
+
+        bspec = P(baxes, None, None)
+
+        @partial(jax.shard_map,
+                 in_specs=(_moe_param_specs(cfg), bspec),
+                 out_specs=(bspec, P()),
+                 check_vma=False)
+        def _sharded(p_blk, x_blk):
+            idx = jax.lax.axis_index("model")
+            Bl, Sl, Dl = x_blk.shape
+            out, aux = _moe_local(p_blk, cfg, x_blk.reshape(Bl * Sl, Dl),
+                                  e_offset=idx * e_local, e_local=e_local,
+                                  capacity=C, out_dtype=x_blk.dtype)
+            # combine expert contributions in the activation dtype — the
+            # psum is the MoE layer's dominant collective; bf16 halves it
+            out = jax.lax.psum(out.astype(x_blk.dtype), "model")
+            aux = jax.tree.map(
+                lambda a: jax.lax.pmean(a, ("model",) + (baxes or ())), aux)
+            if "shared" in p_blk:
+                sh = p_blk["shared"]
+                xt = x_blk.reshape(Bl * Sl, Dl)
+                hs = jax.nn.silu(xt @ sh["wg"]) * (xt @ sh["wu"])
+                out = out + (hs @ sh["wd"]).astype(out.dtype)
+            return out.reshape(Bl, Sl, Dl), aux
+
+        out, aux = _sharded(p, x)
+        return out, aux
+
+    if cfg.n_shared_experts:
+        sh = p["shared"]
+        xt = x.reshape(B * S, D)
+        hs = jax.nn.silu(xt @ sh["wg"]) * (xt @ sh["wu"])
+        out = out + (hs @ sh["wd"]).reshape(B, S, D)
+    return out, aux
+
+
+def _moe_forward_a2a(p, cfg, x, cf, n, e_local):
+    """All-to-all token dispatch (see MOE_DISPATCH docstring).
+
+    The layer consumes and produces a sequence-sharded residual (matching
+    the Megatron-SP stream), so there is no token replication at all: each
+    model rank routes its own S/n token slice, ships routed tokens to the
+    owning expert rank, and receives the results back.
+    """
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.moe_top_k
+    baxes = bspec_axes(B)
+    nb = n_batch_shards() if baxes else 1
+    T_r = (B // nb) * (S // n)                       # tokens per model rank
+    # per-destination-rank bucket capacity and per-local-expert capacity
+    C = max(1, cdiv(int(T_r * k), n) * 2)
+    C2 = max(1, cdiv(int(n * C), e_local))
+
+    bspec = P(baxes, "model", None)
+
+    @partial(jax.shard_map,
+             in_specs=(_moe_param_specs(cfg), bspec),
+             out_specs=(bspec, P()),
+             check_vma=False)
+    def _sharded(p_blk, x_blk):
+        me = jax.lax.axis_index("model")
+        Bl, Sl, Dl = x_blk.shape
+        xt = x_blk.reshape(Bl * Sl, Dl)              # (T_r, D)
+        logits = xt.astype(jnp.float32) @ p_blk["router"].astype(jnp.float32)
+        probs, topv, topi = router_topk(logits, k)
+
+        # ---- dispatch into per-destination-rank buckets -------------------
+        dest = topi // e_local                       # (T_r, k)
+        base = jnp.zeros((n,), jnp.int32)
+        slots, keeps = [], []
+        for j in range(k):
+            oh = jax.nn.one_hot(dest[:, j], n, dtype=jnp.int32)
+            cum = jnp.cumsum(oh, axis=0) + base[None, :]
+            pos = jnp.take_along_axis(cum, dest[:, j][:, None], 1)[:, 0] - 1
+            keep = pos < C
+            slots.append(jnp.where(keep, dest[:, j] * C + pos, n * C))
+            keeps.append(keep)
+            base = base + jnp.sum(oh, axis=0)
+        slot = jnp.stack(slots, 1)                   # (T_r, k) in [0, n*C]
+        keep = jnp.stack(keeps, 1)
+
+        buf = jnp.zeros((n * C + 1, Dl), xt.dtype)
+        ebuf = jnp.full((n * C + 1,), -1, jnp.int32)
+        for j in range(k):
+            buf = buf.at[slot[:, j]].set(xt)
+            ebuf = ebuf.at[slot[:, j]].set(
+                jnp.where(keep[:, j], topi[:, j], -1))
+        buf = buf[: n * C].reshape(n, C, Dl)
+        ebuf = ebuf[: n * C].reshape(n, C)
+
+        # ---- ship to expert owners ---------------------------------------
+        rbuf = jax.lax.all_to_all(buf, "model", 0, 0, tiled=False)
+        rexp = jax.lax.all_to_all(ebuf, "model", 0, 0, tiled=False)
+        rt = rbuf.reshape(n * C, Dl)
+        re = rexp.reshape(n * C) - me * e_local      # local expert index
+
+        # ---- local per-expert capacity buffers + FFN ----------------------
+        live = (re >= 0) & (re < e_local)
+        oh = jax.nn.one_hot(jnp.where(live, re, e_local), e_local + 1,
+                            dtype=jnp.int32)[:, :e_local]
+        cum = jnp.cumsum(oh, axis=0)
+        pos2 = jnp.take_along_axis(
+            cum, jnp.clip(re, 0, e_local - 1)[:, None], 1)[:, 0] - 1
+        keep2 = live & (pos2 < C2)
+        slot2 = jnp.where(keep2, jnp.clip(re, 0, e_local - 1) * C2 + pos2,
+                          e_local * C2)
+        ebuf2 = jnp.zeros((e_local * C2 + 1, Dl), rt.dtype).at[slot2].set(rt)
+        ebuf2 = ebuf2[: e_local * C2].reshape(e_local, C2, Dl)
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", ebuf2, p_blk["wg"])) * \
+            jnp.einsum("ecd,edf->ecf", ebuf2, p_blk["wu"])
+        y = jnp.einsum("ecf,efd->ecd", h, p_blk["wd"])
+        flat_y = jnp.concatenate(
+            [y.reshape(e_local * C2, Dl),
+             jnp.zeros((1, Dl), y.dtype)], axis=0)
+        yt = jnp.where(keep2[:, None], flat_y[slot2], 0.0)   # (n*C, D)
+
+        # ---- ship results back + combine ----------------------------------
+        yback = jax.lax.all_to_all(yt.reshape(n, C, Dl), "model", 0, 0,
+                                   tiled=False).reshape(n * C, Dl)
+        yfull = jnp.concatenate([yback, jnp.zeros((1, Dl), yback.dtype)], 0)
+        out = jnp.zeros((Bl * Sl, Dl), jnp.float32)
+        for j in range(k):
+            w = (topv[:, j] * keep[:, j])[:, None]
+            out = out + yfull[slot[:, j]].astype(jnp.float32) * w
+        out = out.astype(x_blk.dtype)
+
+        if "shared" in p_blk:
+            sh = p_blk["shared"]
+            hs = jax.nn.silu(xt @ sh["wg"]) * (xt @ sh["wu"])
+            out = out + (hs @ sh["wd"]).astype(out.dtype)
+
+        aux = {
+            "moe_balance": load_balance_loss(probs, topi, E),
+            "moe_z": jnp.mean(jax.nn.logsumexp(logits, -1) ** 2),
+            "moe_drop_frac": 1.0 - jnp.mean(keep.astype(jnp.float32)),
+        }
+        aux = jax.tree.map(
+            lambda a: jax.lax.pmean(a, ("model",) + (baxes or ())), aux)
+        return out.reshape(Bl, Sl, Dl), aux
+
+    return _sharded(p, x)
+
+
+def _moe_param_specs(cfg):
+    specs = {
+        "router": P(None, None),
+        "wg": P("model", None, None),
+        "wu": P("model", None, None),
+        "wd": P("model", None, None),
+    }
+    if cfg.n_shared_experts:
+        specs["shared"] = {"wg": P(None, None), "wu": P(None, None),
+                           "wd": P(None, None)}
+    return specs
+
+
+def moe_aux_total(cfg, aux):
+    return (cfg.router_aux_weight * aux["moe_balance"]
+            + cfg.router_z_weight * aux["moe_z"])

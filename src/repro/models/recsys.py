@@ -1,0 +1,70 @@
+"""The paper's own model family: multi-hot embedding bags + FFNN (§6
+"a fully connected feed forward neural network with five hidden layers
+4096-2048-1024-512-256"), predicting one or more CTR/behaviour tasks.
+
+The embedding side lives in the Persia PS; this module is the NN-worker view:
+it consumes raw looked-up activations (B, F, L, D), pools the multi-hot bags
+(the 'embedding worker aggregation' in paper §4.1 step 4), concatenates
+Non-ID features and runs the dense MLP.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import shard
+from repro.models.layers import dense_init
+
+
+def recsys_init(cfg, key, dtype=jnp.float32):
+    d_in = cfg.n_id_fields * cfg.emb_dim + cfg.n_dense_features
+    dims = (d_in,) + tuple(cfg.mlp_dims) + (cfg.n_tasks,)
+    ks = jax.random.split(key, len(dims))
+    layers = []
+    for i in range(len(dims) - 1):
+        layers.append({
+            "w": dense_init(ks[i], dims[i], dims[i + 1], dtype,
+                            scale=math.sqrt(2.0 / dims[i])),
+            "b": jnp.zeros((dims[i + 1],), dtype),
+        })
+    return {"mlp": layers}
+
+
+def pool_bags(acts, ids):
+    """Sum-pool multi-hot bags; padding ids (<0) contribute zero.
+
+    acts: (B, F, L, D) raw per-id embeddings; ids: (B, F, L).
+    """
+    m = (ids >= 0).astype(acts.dtype)[..., None]
+    return jnp.sum(acts * m, axis=2)                                # (B, F, D)
+
+
+def recsys_forward(cfg, params, emb_acts, ids, dense_feats):
+    pooled = pool_bags(emb_acts, ids)                               # (B,F,D)
+    B = pooled.shape[0]
+    x = pooled.reshape(B, -1)
+    if cfg.n_dense_features:
+        x = jnp.concatenate([x, dense_feats.astype(x.dtype)], axis=-1)
+    x = shard(x, ("pod", "data"), None)
+    n = len(params["mlp"])
+    for i, lyr in enumerate(params["mlp"]):
+        x = x @ lyr["w"] + lyr["b"]
+        if i < n - 1:
+            x = jax.nn.relu(x)
+    return x                                                        # (B,n_tasks)
+
+
+def recsys_loss(cfg, params, emb_acts, batch):
+    """Binary cross-entropy per task (CTR-style)."""
+    logits = recsys_forward(cfg, params, emb_acts, batch["ids"],
+                            batch.get("dense"))
+    y = batch["labels"].astype(jnp.float32)
+    z = logits.astype(jnp.float32)
+    # stable BCE-with-logits
+    nll = jnp.maximum(z, 0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z)))
+    loss = jnp.mean(nll)
+    metrics = {"loss": loss,
+               "pred_mean": jnp.mean(jax.nn.sigmoid(z))}
+    return loss, metrics

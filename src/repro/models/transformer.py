@@ -1,0 +1,472 @@
+"""Layer-program transformer: one code path instantiates every assigned
+architecture (dense GQA, MLA+MoE, Mamba2 SSM, Jamba-style hybrid, VLM with
+interleaved cross-attention, Whisper-style encoder-decoder).
+
+The stack is a short ``pattern`` of heterogeneous blocks repeated
+``pattern_repeats`` times and lowered as a single ``lax.scan`` over stacked
+parameters, so a 100-layer model compiles with the HLO of one super-block.
+Token embeddings are *not* part of the dense parameters — they live in the
+Persia embedding PS (core.embedding_ps) and arrive here as activations, which
+is exactly the paper's NN-worker view of the world.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import shard
+from repro.configs.base import BlockCfg, ModelConfig
+from repro.models import layers as L
+from repro.models import mamba2 as M2
+from repro.models import moe as MOE
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _block_init(key, cfg: ModelConfig, blk: BlockCfg, dtype):
+    ks = jax.random.split(key, 8)
+    p: dict[str, Any] = {}
+    if blk.mixer == "gqa":
+        p["mixer_norm"] = L.norm_init(cfg, cfg.d_model)
+        p["mixer"] = L.gqa_init(ks[0], cfg, dtype)
+    elif blk.mixer == "mla":
+        p["mixer_norm"] = L.norm_init(cfg, cfg.d_model)
+        p["mixer"] = L.mla_init(ks[0], cfg, dtype)
+    elif blk.mixer == "mamba2":
+        p["mixer_norm"] = L.norm_init(cfg, cfg.d_model)
+        p["mixer"] = M2.mamba2_init(ks[0], cfg, dtype)
+    elif blk.mixer == "cross_attn":
+        p["mixer_norm"] = L.norm_init(cfg, cfg.d_model)
+        p["mixer"] = L.gqa_init(ks[0], cfg, dtype, cross=True)
+        p["xgate"] = jnp.zeros((), jnp.float32)
+    if getattr(blk, "cross", False):
+        p["cross_norm"] = L.norm_init(cfg, cfg.d_model)
+        p["cross"] = L.gqa_init(ks[1], cfg, dtype, cross=True)
+    if blk.ffn == "dense":
+        p["ffn_norm"] = L.norm_init(cfg, cfg.d_model)
+        p["ffn"] = L.mlp_init(ks[2], cfg, dtype=dtype)
+    elif blk.ffn == "moe":
+        p["ffn_norm"] = L.norm_init(cfg, cfg.d_model)
+        p["ffn"] = MOE.moe_init(ks[2], cfg, dtype)
+    return p
+
+
+def init_dense(cfg: ModelConfig, key, dtype=jnp.float32):
+    """Everything except the embedding table (that's the PS's job)."""
+    ks = jax.random.split(key, 8 + len(cfg.prologue))
+    params: dict[str, Any] = {}
+    for i, blk in enumerate(cfg.prologue):
+        params[f"prologue_{i}"] = _block_init(ks[i], cfg, blk, dtype)
+
+    def stack_init(k, blk):
+        kk = jax.random.split(k, cfg.pattern_repeats)
+        ps = [_block_init(kk[r], cfg, blk, dtype)
+              for r in range(cfg.pattern_repeats)]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *ps)
+
+    kstack = jax.random.split(ks[-1], len(cfg.pattern))
+    params["stack"] = {str(i): stack_init(kstack[i], blk)
+                       for i, blk in enumerate(cfg.pattern)}
+    params["final_norm"] = L.norm_init(cfg, cfg.d_model)
+    params["lm_head"] = L.dense_init(ks[-2], cfg.d_model, cfg.padded_vocab,
+                                     dtype, scale=1.0 / math.sqrt(cfg.d_model))
+    if cfg.is_encdec:
+        params["encoder"] = _init_encoder(cfg.encoder, ks[-3], dtype)
+        # learned decoder positions (Whisper style); 64k covers decode_32k
+        params["dec_pos_emb"] = L.embed_init(ks[-4], 1 << 16, cfg.d_model,
+                                             dtype)
+    return params
+
+
+def _init_encoder(ecfg: ModelConfig, key, dtype):
+    ks = jax.random.split(key, 4)
+    enc = {"pos_emb": L.embed_init(ks[0], ecfg.n_memory_tokens, ecfg.d_model,
+                                   dtype),
+           "in_proj": L.dense_init(ks[3], ecfg.d_memory, ecfg.d_model, dtype)}
+
+    def stack_init(k, blk):
+        kk = jax.random.split(k, ecfg.pattern_repeats)
+        ps = [_block_init(kk[r], ecfg, blk, dtype)
+              for r in range(ecfg.pattern_repeats)]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *ps)
+
+    kstack = jax.random.split(ks[1], len(ecfg.pattern))
+    enc["stack"] = {str(i): stack_init(kstack[i], blk)
+                    for i, blk in enumerate(ecfg.pattern)}
+    enc["final_norm"] = L.norm_init(ecfg, ecfg.d_model)
+    return enc
+
+
+# ---------------------------------------------------------------------------
+# Block application (full sequence)
+# ---------------------------------------------------------------------------
+
+def _apply_block(cfg, blk, p, x, positions, memory, *, want_cache):
+    aux = {}
+    cache = {}
+    if blk.mixer == "gqa":
+        h = L.apply_norm(cfg, p["mixer_norm"], x)
+        o, (k, v) = L.gqa_forward(p["mixer"], cfg, h, positions)
+        x = x + o
+        if want_cache:
+            cache["attn"] = {"k": k, "v": v,
+                             "len": jnp.full((x.shape[0],), x.shape[1],
+                                             jnp.int32)}
+    elif blk.mixer == "mla":
+        h = L.apply_norm(cfg, p["mixer_norm"], x)
+        o, c = L.mla_forward(p["mixer"], cfg, h, positions)
+        x = x + o
+        if want_cache:
+            cache["attn"] = c
+    elif blk.mixer == "mamba2":
+        h = L.apply_norm(cfg, p["mixer_norm"], x)
+        if want_cache:
+            o, c = M2.mamba2_forward(p["mixer"], cfg, h, return_state=True)
+            cache["ssm"] = c
+        else:
+            o = M2.mamba2_forward(p["mixer"], cfg, h)
+        x = x + o
+    elif blk.mixer == "cross_attn":
+        h = L.apply_norm(cfg, p["mixer_norm"], x)
+        o, (k, v) = L.cross_attn_forward(p["mixer"], cfg, h, memory)
+        x = x + jnp.tanh(p["xgate"]).astype(x.dtype) * o
+        if want_cache:
+            cache["cross"] = {"k": k, "v": v}
+    if getattr(blk, "cross", False):
+        h = L.apply_norm(cfg, p["cross_norm"], x)
+        o, (k, v) = L.cross_attn_forward(p["cross"], cfg, h, memory)
+        x = x + o
+        if want_cache:
+            cache["cross"] = {"k": k, "v": v}
+    if blk.ffn == "dense":
+        h = L.apply_norm(cfg, p["ffn_norm"], x)
+        x = x + L.mlp_forward(p["ffn"], cfg, h)
+    elif blk.ffn == "moe":
+        h = L.apply_norm(cfg, p["ffn_norm"], x)
+        o, aux = MOE.moe_forward(p["ffn"], cfg, h)
+        x = x + o
+    return x, cache, aux
+
+
+def _zero_aux(cfg):
+    if any(b.ffn == "moe" for b in cfg.prologue + cfg.pattern):
+        z = jnp.zeros((), jnp.float32)
+        return {"moe_balance": z, "moe_z": z, "moe_drop_frac": z}
+    return {}
+
+
+def _acc_aux(total, aux):
+    if not aux:
+        return total
+    return {k: total.get(k, jnp.zeros((), jnp.float32)) + aux[k] for k in aux}
+
+
+def forward(cfg: ModelConfig, params, acts, positions, memory=None,
+            *, want_cache=False):
+    """acts: (B, S, D) token embeddings from the PS. Returns hidden states
+    after final norm (+ caches when want_cache)."""
+    x = shard(acts, ("pod", "data"), None, None)
+    aux_total: dict = {}
+    caches: dict = {}
+    if cfg.is_encdec:
+        x = x + params["dec_pos_emb"][positions].astype(x.dtype)
+
+    for i, blk in enumerate(cfg.prologue):
+        x, c, aux = _apply_block(cfg, blk, params[f"prologue_{i}"], x,
+                                 positions, memory, want_cache=want_cache)
+        aux_total = _acc_aux(aux_total, aux)
+        if want_cache:
+            caches[f"prologue_{i}"] = c
+
+    # Remat granularity (A/B-able, see EXPERIMENTS.md §Perf):
+    #   'block' — each block rematted separately: smallest live set during
+    #             backward, but every block boundary re-gathers weights
+    #   'body'  — one checkpoint around the whole scanned super-block:
+    #             fewer re-gathers, larger recompute live set
+    import os
+    gran = os.environ.get("REPRO_REMAT_GRANULARITY", cfg.remat_granularity)
+
+    def one_block(blk):
+        def f(x, p):
+            return _apply_block(cfg, blk, p, x, positions, memory,
+                                want_cache=want_cache)
+        if cfg.remat and not want_cache and gran == "block":
+            return jax.checkpoint(f)
+        return f
+
+    block_fns = [one_block(blk) for blk in cfg.pattern]
+
+    def blocks(x, per_layer):
+        aux_layer: dict = {}
+        cache_layer = {}
+        for i, blk in enumerate(cfg.pattern):
+            x, c, aux = block_fns[i](x, per_layer[str(i)])
+            aux_layer = _acc_aux(aux_layer, aux)
+            cache_layer[str(i)] = c
+            if cfg.seq_shard:
+                # Megatron-SP style: residual stream seq-sharded over 'model'
+                # between blocks (drops to no-op without a mesh)
+                if x.shape[1] % 16 == 0:
+                    x = shard(x, ("pod", "data"), "model", None)
+        out = (cache_layer, aux_layer) if (want_cache or aux_layer) else None
+        return x, out
+
+    body = blocks
+    if cfg.remat and not want_cache and gran != "block":
+        body = jax.checkpoint(blocks)
+    x, emitted = jax.lax.scan(body, x, params["stack"])
+    if emitted is not None:
+        cache_stack, aux_stack = emitted
+        if want_cache:
+            caches["stack"] = cache_stack
+        if aux_stack:
+            aux_total = _acc_aux(aux_total,
+                                 jax.tree.map(jnp.sum, aux_stack))
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    if want_cache:
+        return x, caches, aux_total
+    return x, aux_total
+
+
+def encode(cfg: ModelConfig, params, frames):
+    """Whisper-style encoder over precomputed (stub) frame embeddings.
+    frames: (B, M, d_memory) -> (B, M, D)."""
+    ecfg = cfg.encoder
+    enc = params["encoder"]
+    x = frames @ enc["in_proj"]
+    x = x + enc["pos_emb"][None, : x.shape[1]].astype(x.dtype)
+    positions = jnp.arange(x.shape[1])[None].repeat(x.shape[0], 0)
+
+    def enc_body(x, per_layer):
+        for i, blk in enumerate(ecfg.pattern):
+            p = per_layer[str(i)]
+            h = L.apply_norm(ecfg, p["mixer_norm"], x)
+            B, S, _ = h.shape
+            q, k, v = L._qkv(p["mixer"], ecfg, h)
+            o = L.grouped_attention(q, k, v,
+                                    scale=1.0 / math.sqrt(ecfg.head_dim),
+                                    causal=False)
+            x = x + o.reshape(B, S, -1) @ p["mixer"]["wo"]
+            h = L.apply_norm(ecfg, p["ffn_norm"], x)
+            x = x + L.mlp_forward(p["ffn"], ecfg, h)
+        return x, None
+
+    body = jax.checkpoint(enc_body) if ecfg.remat else enc_body
+    x, _ = jax.lax.scan(body, x, enc["stack"])
+    return L.apply_norm(ecfg, enc["final_norm"], x)
+
+
+# ---------------------------------------------------------------------------
+# Loss (training): chunk-free CE over the model-sharded vocab
+# ---------------------------------------------------------------------------
+
+def lm_loss(cfg: ModelConfig, params, acts, targets, mask, memory=None):
+    """acts: (B,S,D) embedding activations; targets: (B,S) int32."""
+    B, S = targets.shape
+    positions = jnp.arange(S)[None].repeat(B, 0)
+    if cfg.is_encdec:
+        memory = encode(cfg, params, memory)
+    x, aux = forward(cfg, params, acts, positions, memory)
+    logits = x @ params["lm_head"]                                 # (B,S,Vp)
+    logits = shard(logits, ("pod", "data"), None, "model")
+    logits = logits.astype(jnp.float32)
+    if cfg.padded_vocab > cfg.vocab_size:                          # mask pads
+        logits = jnp.where(jnp.arange(cfg.padded_vocab) < cfg.vocab_size,
+                           logits, -1e30)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    tgt = jnp.sum(logits * jax.nn.one_hot(targets, cfg.padded_vocab,
+                                          dtype=logits.dtype), axis=-1)
+    nll = (lse - tgt) * mask
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum(nll) / denom
+    metrics = {"loss": loss, "ppl_log": loss}
+    if aux:
+        loss = loss + MOE.moe_aux_total(cfg, jax.tree.map(
+            lambda a: a / max(cfg.n_layers, 1), aux))
+        metrics.update({k: v for k, v in aux.items()})
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + single-token decode against per-layer caches
+# ---------------------------------------------------------------------------
+
+def _block_cache_init(cfg, blk, batch, max_len, dtype, memory_len):
+    c = {}
+    if blk.mixer in ("gqa",):
+        c["attn"] = L.gqa_cache_init(cfg, batch, max_len, dtype)
+    elif blk.mixer == "mla":
+        c["attn"] = L.mla_cache_init(cfg, batch, max_len, dtype)
+    elif blk.mixer == "mamba2":
+        c["ssm"] = M2.mamba2_cache_init(cfg, batch, dtype)
+    elif blk.mixer == "cross_attn":
+        c["cross"] = {"k": jnp.zeros((batch, memory_len, cfg.n_kv_heads,
+                                      cfg.head_dim), dtype),
+                      "v": jnp.zeros((batch, memory_len, cfg.n_kv_heads,
+                                      cfg.head_dim), dtype)}
+    if getattr(blk, "cross", False):
+        c["cross"] = {"k": jnp.zeros((batch, memory_len, cfg.n_kv_heads,
+                                      cfg.head_dim), dtype),
+                      "v": jnp.zeros((batch, memory_len, cfg.n_kv_heads,
+                                      cfg.head_dim), dtype)}
+    return c
+
+
+def cache_init(cfg: ModelConfig, batch, max_len, dtype, memory_len=0):
+    caches = {}
+    for i, blk in enumerate(cfg.prologue):
+        caches[f"prologue_{i}"] = _block_cache_init(cfg, blk, batch, max_len,
+                                                    dtype, memory_len)
+    per_pos = {str(i): _block_cache_init(cfg, blk, batch, max_len, dtype,
+                                         memory_len)
+               for i, blk in enumerate(cfg.pattern)}
+    caches["stack"] = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.pattern_repeats,) + x.shape),
+        per_pos)
+    caches["pos"] = jnp.zeros((batch,), jnp.int32)
+    return caches
+
+
+def _apply_block_decode(cfg, blk, p, x, cache, memory):
+    new_cache = dict(cache)
+    if blk.mixer == "gqa":
+        h = L.apply_norm(cfg, p["mixer_norm"], x)
+        o, new_attn = L.gqa_decode(p["mixer"], cfg, h, cache["attn"])
+        x = x + o
+        new_cache["attn"] = new_attn
+    elif blk.mixer == "mla":
+        h = L.apply_norm(cfg, p["mixer_norm"], x)
+        o, new_attn = L.mla_decode(p["mixer"], cfg, h, cache["attn"])
+        x = x + o
+        new_cache["attn"] = new_attn
+    elif blk.mixer == "mamba2":
+        h = L.apply_norm(cfg, p["mixer_norm"], x)
+        o, new_ssm = M2.mamba2_decode(p["mixer"], cfg, h, cache["ssm"])
+        x = x + o
+        new_cache["ssm"] = new_ssm
+    elif blk.mixer == "cross_attn":
+        h = L.apply_norm(cfg, p["mixer_norm"], x)
+        o = _cross_decode(p["mixer"], cfg, h, cache["cross"])
+        x = x + jnp.tanh(p["xgate"]).astype(x.dtype) * o
+    if getattr(blk, "cross", False):
+        h = L.apply_norm(cfg, p["cross_norm"], x)
+        x = x + _cross_decode(p["cross"], cfg, h, cache["cross"])
+    if blk.ffn == "dense":
+        h = L.apply_norm(cfg, p["ffn_norm"], x)
+        x = x + L.mlp_forward(p["ffn"], cfg, h)
+    elif blk.ffn == "moe":
+        h = L.apply_norm(cfg, p["ffn_norm"], x)
+        o, _ = MOE.moe_forward(p["ffn"], cfg, h)
+        x = x + o
+    return x, new_cache
+
+
+def _cross_decode(p, cfg, x, ckv):
+    B = x.shape[0]
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    G = H // Hkv
+    q = (x @ p["wq"]).reshape(B, 1, Hkv, G, Dh)
+    if cfg.qk_norm:
+        q = L.rmsnorm(q, p["q_norm"]["w"], cfg.norm_eps)
+    o = L.grouped_attention(q, ckv["k"], ckv["v"],
+                            scale=1.0 / math.sqrt(Dh), causal=False)
+    return o.reshape(B, 1, -1) @ p["wo"]
+
+
+def decode_step(cfg: ModelConfig, params, acts, caches):
+    """One-token decode. acts: (B, 1, D) embedding of the new token."""
+    x = shard(acts, ("pod", "data"), None, None)
+    if cfg.is_encdec:
+        x = x + params["dec_pos_emb"][caches["pos"][:, None]].astype(x.dtype)
+    new_caches = dict(caches)
+    for i, blk in enumerate(cfg.prologue):
+        x, c = _apply_block_decode(cfg, blk, params[f"prologue_{i}"], x,
+                                   caches[f"prologue_{i}"], None)
+        new_caches[f"prologue_{i}"] = c
+
+    # The stacked caches ride in the scan CARRY and are updated in place via
+    # dynamic_update_index — passing them as scan xs/ys would allocate BOTH
+    # an input and an output copy of the whole KV cache (2x cache temp).
+    def body(carry, inp):
+        x, cache_stack = carry
+        per_layer, li = inp
+        new_layer = {}
+        for i, blk in enumerate(cfg.pattern):
+            layer_cache = jax.tree.map(
+                lambda s: jax.lax.dynamic_index_in_dim(s, li, 0,
+                                                       keepdims=False),
+                cache_stack[str(i)])
+            x, c = _apply_block_decode(cfg, blk, per_layer[str(i)], x,
+                                       layer_cache, None)
+            new_layer[str(i)] = c
+        cache_stack = {
+            pos: jax.tree.map(
+                lambda s, n: jax.lax.dynamic_update_index_in_dim(
+                    s, n.astype(s.dtype), li, 0),
+                cache_stack[pos], new_layer[pos])
+            for pos in cache_stack
+        }
+        return (x, cache_stack), None
+
+    (x, new_stack), _ = jax.lax.scan(
+        body, (x, caches["stack"]),
+        (params["stack"], jnp.arange(cfg.pattern_repeats)))
+    new_caches["stack"] = new_stack
+    new_caches["pos"] = caches["pos"] + 1
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    logits = (x @ params["lm_head"]).astype(jnp.float32)
+    logits = shard(logits, ("pod", "data"), None, "model")
+    if cfg.padded_vocab > cfg.vocab_size:
+        logits = jnp.where(jnp.arange(cfg.padded_vocab) < cfg.vocab_size,
+                           logits, -1e30)
+    return logits, new_caches
+
+
+def _pad_cache_seq(caches, pad_to):
+    """Grow attention caches' sequence capacity to pad_to (for decode)."""
+    def fix(block_cache):
+        c = dict(block_cache)
+        if "attn" in c:
+            a = dict(c["attn"])
+            for key in ("k", "v", "ckv", "k_rope"):
+                if key in a:
+                    cur = a[key].shape[-3] if key in ("k", "v") else a[key].shape[-2]
+                    extra = pad_to - cur
+                    if extra > 0:
+                        seq_axis = a[key].ndim - (3 if key in ("k", "v") else 2)
+                        pads = [(0, 0)] * a[key].ndim
+                        pads[seq_axis] = (0, extra)
+                        a[key] = jnp.pad(a[key], pads)
+            c["attn"] = a
+        return c
+
+    out = {}
+    for name, c in caches.items():
+        if name == "pos":
+            out[name] = c
+        elif name == "stack":
+            out[name] = {pos: fix(blk) for pos, blk in c.items()}
+        else:
+            out[name] = fix(c)
+    return out
+
+
+def prefill(cfg: ModelConfig, params, acts, memory=None, max_len=None):
+    """Full-sequence prefill producing decode caches + last-token logits.
+    ``max_len`` pads attention caches so decode can append new tokens."""
+    B, S, _ = acts.shape
+    positions = jnp.arange(S)[None].repeat(B, 0)
+    if cfg.is_encdec:
+        memory = encode(cfg, params, memory)
+    x, caches, _ = forward(cfg, params, acts, positions, memory,
+                           want_cache=True)
+    caches["pos"] = jnp.full((B,), S, jnp.int32)
+    if max_len is not None and max_len > S:
+        caches = _pad_cache_seq(caches, max_len)
+    logits = (x[:, -1:] @ params["lm_head"]).astype(jnp.float32)
+    return logits, caches

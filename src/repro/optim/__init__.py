@@ -1,0 +1,2 @@
+from repro.optim.optimizers import (adam_init, adam_update, sgd_init,
+                                    sgd_update, make_optimizer)

@@ -1,0 +1,140 @@
+"""Dense-side optimizers (the NN-worker Omega^nn in Alg. 2), from scratch.
+
+State is a pytree mirroring params; everything works on arbitrary pytrees and
+under jit/GSPMD (states inherit the params' sharding).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def _zeros_like_f32(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+# -- SGD (+momentum) ---------------------------------------------------------
+
+def sgd_init(params, momentum=0.0):
+    if momentum:
+        return {"m": _zeros_like_f32(params), "t": jnp.zeros((), jnp.int32)}
+    return {"t": jnp.zeros((), jnp.int32)}
+
+
+def sgd_update(params, grads, state, *, lr, momentum=0.0, weight_decay=0.0):
+    t = state["t"] + 1
+
+    def upd(p, g, m=None):
+        g32 = g.astype(jnp.float32)
+        if weight_decay:
+            g32 = g32 + weight_decay * p.astype(jnp.float32)
+        if m is not None:
+            m_new = momentum * m + g32
+            step = m_new
+        else:
+            m_new, step = None, g32
+        p_new = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+        return p_new, m_new
+
+    if momentum:
+        out = jax.tree.map(upd, params, grads, state["m"])
+        new_p = jax.tree.map(lambda o: o[0], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"m": new_m, "t": t}
+    new_p = jax.tree.map(lambda p, g: upd(p, g)[0], params, grads)
+    return new_p, {"t": t}
+
+
+# -- Adam ---------------------------------------------------------------------
+
+def adam_init(params):
+    return {"m": _zeros_like_f32(params), "v": _zeros_like_f32(params),
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, *, lr, b1=0.9, b2=0.999, eps=1e-8,
+                weight_decay=0.0, grad_clip=0.0):
+    t = state["t"] + 1
+    if grad_clip > 0:
+        gn = global_norm(grads)
+        scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gn, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+    bc1 = 1.0 - jnp.power(jnp.float32(b1), t.astype(jnp.float32))
+    bc2 = 1.0 - jnp.power(jnp.float32(b2), t.astype(jnp.float32))
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * g32
+        v_new = b2 * v + (1 - b2) * jnp.square(g32)
+        step = (m_new / bc1) * jax.lax.rsqrt(v_new / bc2 + eps * eps)
+        # rsqrt(x + eps^2) ~ 1/(sqrt(x)+eps); cheaper and stable
+        p32 = p.astype(jnp.float32)
+        if weight_decay:
+            step = step + weight_decay * p32
+        return (p32 - lr * step).astype(p.dtype), m_new, v_new
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    is3 = lambda x: isinstance(x, tuple)
+    new_p = jax.tree.map(lambda o: o[0], out, is_leaf=is3)
+    new_m = jax.tree.map(lambda o: o[1], out, is_leaf=is3)
+    new_v = jax.tree.map(lambda o: o[2], out, is_leaf=is3)
+    return new_p, {"m": new_m, "v": new_v, "t": t}
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+# -- LR schedules --------------------------------------------------------------
+
+def linear_warmup_cosine(step, *, base_lr, warmup, total):
+    step = step.astype(jnp.float32)
+    warm = base_lr * step / jnp.maximum(warmup, 1)
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = base_lr * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < warmup, warm, cos)
+
+
+# -- Factory --------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class OptConfig:
+    kind: str = "adam"
+    lr: float = 3e-4
+    momentum: float = 0.0
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: float = 1.0
+
+
+def make_optimizer(cfg: OptConfig):
+    if cfg.kind == "adam":
+        def init(params):
+            return adam_init(params)
+
+        def update(params, grads, state, lr=None):
+            return adam_update(params, grads, state,
+                               lr=cfg.lr if lr is None else lr,
+                               b1=cfg.b1, b2=cfg.b2, eps=cfg.eps,
+                               weight_decay=cfg.weight_decay,
+                               grad_clip=cfg.grad_clip)
+        return init, update
+    if cfg.kind == "sgd":
+        def init(params):
+            return sgd_init(params, cfg.momentum)
+
+        def update(params, grads, state, lr=None):
+            return sgd_update(params, grads, state,
+                              lr=cfg.lr if lr is None else lr,
+                              momentum=cfg.momentum,
+                              weight_decay=cfg.weight_decay)
+        return init, update
+    raise ValueError(cfg.kind)

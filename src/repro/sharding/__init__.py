@@ -1,0 +1,2 @@
+from repro.sharding.partition import (dense_param_specs, state_specs,
+                                      batch_specs, cache_specs, to_shardings)

@@ -1,0 +1,215 @@
+"""PartitionSpec rules for every pytree the launcher ships to devices.
+
+Scheme (DESIGN.md §5): Megatron-style tensor parallelism over ``model`` x
+FSDP over ``data`` for the dense backbone; embedding PS tables row-sharded
+per their EmbeddingSpec mode; expert stacks over ``model`` (expert
+parallelism); decode caches sequence-sharded over ``model``; batch over
+(pod, data). Multi-pod: weights are replicated across pods (FSDP stays
+intra-pod — DCN-crossing all-gathers per layer would dominate), while the
+batch also shards over ``pod``.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.embedding_ps import EmbeddingSpec, table_spec
+
+BATCH = ("pod", "data")
+
+# ZeRO stage for the dense stack:
+#   3 (default) — params sharded ('data', 'model'): min memory, but every
+#       layer all-gathers its weights over 'data' in fwd + bwd (+ remat)
+#   2 — params replicated over 'data' (still TP over 'model'); optimizer
+#       m/v stay 'data'-sharded. Kills the per-layer weight all-gathers at
+#       the cost of one param-update broadcast per step + replicated storage.
+import os
+ZERO_STAGE = int(os.environ.get("REPRO_ZERO_STAGE", "3"))
+
+# param-name -> (spec for 2D (d_in, d_out)) rules
+_COL_PARALLEL = {"wq", "wk", "wv", "wg", "wu", "wuq", "wuk", "wuv", "wq_b",
+                 "lm_head"}
+_ROW_PARALLEL = {"wo", "wd", "out_proj"}
+_FSDP_ONLY = {"in_proj", "wdq", "wdkv", "w"}          # mixed/ragged out dims
+_REPLICATED = {"router", "conv_w", "b"}
+
+
+def _dense_leaf_spec(path: str, leaf, stage=None) -> P:
+    stage = ZERO_STAGE if stage is None else stage
+    name = re.findall(r"\['([^']+)'\]", path)[-1]
+    in_stack = "['stack']" in path
+    nd = leaf.ndim
+
+    def wrap(*spec):
+        # stacked (scan) params carry a leading repeats dim
+        return P(None, *spec) if in_stack else P(*spec)
+
+    base_nd = nd - 1 if in_stack else nd
+    # MoE expert stacks: (E, d_in, d_out) -> experts over model (expert
+    # parallelism) x FSDP over data on d_in; the MoE shard_map's in_spec
+    # (P('model', None, None)) makes the per-layer all-gather over 'data'
+    # explicit — ZeRO-3 on the expert weights.
+    if base_nd == 3 and name in ("wg", "wu", "wd"):
+        return wrap("model", "data" if stage >= 3 else None, None)
+    if base_nd == 2:
+        fsdp = "data" if stage >= 3 else None
+        if name in _COL_PARALLEL:
+            return wrap(fsdp, "model")
+        if name in _ROW_PARALLEL:
+            return wrap("model", fsdp)
+        if name in _FSDP_ONLY:
+            return wrap("data", None)
+        if name in ("pos_emb", "dec_pos_emb", "in_proj"):
+            return wrap("data", None)
+        return wrap(None, None)
+    if base_nd == 1 or base_nd == 0:
+        return wrap(*([None] * base_nd))
+    return wrap(*([None] * base_nd))
+
+
+def dense_param_specs(params, stage=None) -> Any:
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x: _dense_leaf_spec(jax.tree_util.keystr(p), x, stage),
+        params)
+
+
+def emb_state_specs(emb_state, spec: EmbeddingSpec):
+    t = table_spec(spec)
+    out = {"table": t}
+    if "acc" in emb_state:
+        out["acc"] = P(t[0])
+    return out
+
+
+def queue_specs(queue):
+    if queue is None:
+        return None
+    return {"ids": P(None, BATCH), "grads": P(None, BATCH, None),
+            "ptr": P(), "filled": P()}
+
+
+def state_specs(state, emb_spec: EmbeddingSpec):
+    """Spec tree for the hybrid train state."""
+    dense = dense_param_specs(state["dense"])
+    return {
+        "dense": dense,
+        "opt": _opt_specs(state["opt"], dense),
+        "emb": emb_state_specs(state["emb"], emb_spec),
+        "emb_queue": queue_specs(state["emb_queue"]),
+        "dense_queue": None if state["dense_queue"] is None else {
+            "grads": jax.tree.map(lambda s: P(None, *s), dense),
+            "ptr": P(), "filled": P()},
+        "step": P(),
+    }
+
+
+def _opt_specs(opt_state, dense_specs):
+    out = {}
+    for k, v in opt_state.items():
+        if k in ("m", "v"):
+            # optimizer moments always ZeRO-sharded over 'data' (stage >= 2)
+            out[k] = jax.tree_util.tree_map_with_path(
+                lambda p, x: _dense_leaf_spec(jax.tree_util.keystr(p), x, 3),
+                v)
+        else:
+            out[k] = P()
+    return out
+
+
+def batch_specs(batch) -> Any:
+    def leaf(path, x):
+        return P(BATCH, *([None] * (x.ndim - 1)))
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x: leaf(jax.tree_util.keystr(p), x), batch)
+
+
+# ---------------------------------------------------------------------------
+# Decode caches
+# ---------------------------------------------------------------------------
+
+def _cache_leaf_spec(path: str, leaf, cfg) -> P:
+    name = re.findall(r"\['([^']+)'\]", path)[-1]
+    in_stack = "['stack']" in path
+    nd = leaf.ndim
+
+    def wrap(*spec):
+        return P(None, *spec) if in_stack else P(*spec)
+
+    base_nd = nd - 1 if in_stack else nd
+    if name == "pos":
+        return P(BATCH)
+    if name in ("len", "filled", "ptr"):
+        return wrap(BATCH) if base_nd else wrap()
+    if name in ("k", "v"):
+        # (B, S_or_ring_or_M, Hkv, Dh): shard seq over model when full-length
+        S = leaf.shape[-3]
+        seq_shardable = (cfg.sliding_window <= 0 or S > cfg.sliding_window) \
+            and S % 16 == 0
+        # ring buffers & short memories stay replicated over model
+        if "cross" in path:
+            seq_shardable = S % 16 == 0
+        if cfg.sliding_window > 0 and S <= max(cfg.sliding_window, 8192):
+            seq_shardable = False
+        return wrap(BATCH, "model" if seq_shardable else None, None, None)
+    if name in ("ckv", "k_rope"):
+        return wrap(BATCH, "model", None)
+    if name == "h":                                   # SSM state (B,H,N,P)
+        return wrap(BATCH, "model", None, None)
+    if name == "conv":                                # (B, K-1, C)
+        return wrap(BATCH, None, None)
+    return wrap(*([None] * base_nd))
+
+
+def cache_specs(caches, cfg) -> Any:
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x: _cache_leaf_spec(jax.tree_util.keystr(p), x, cfg), caches)
+
+
+def to_shardings(mesh, spec_tree, shape_tree=None):
+    """NamedShardings from a spec tree; unknown axes dropped, and (when
+    shape_tree is given) axes that don't divide the dim are dropped too."""
+    if shape_tree is None:
+        return jax.tree.map(
+            lambda s: NamedSharding(mesh, _strip(s, mesh)), spec_tree,
+            is_leaf=lambda x: isinstance(x, P))
+    return jax.tree.map(
+        lambda s, x: NamedSharding(mesh, _guard(_strip(s, mesh), mesh, x)),
+        spec_tree, shape_tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def _axis_n(mesh, e) -> int:
+    if e is None:
+        return 1
+    if isinstance(e, (tuple, list)):
+        n = 1
+        for a in e:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[e]
+
+
+def _guard(spec: P, mesh, leaf) -> P:
+    parts = list(spec) + [None] * (leaf.ndim - len(spec))
+    for i, e in enumerate(parts):
+        if e is not None and leaf.shape[i] % _axis_n(mesh, e) != 0:
+            parts[i] = None
+    return P(*parts)
+
+
+def _strip(spec: P, mesh) -> P:
+    """Drop axis names the mesh doesn't have (e.g. 'pod' on single-pod)."""
+    names = set(mesh.axis_names)
+
+    def fix(e):
+        if e is None:
+            return None
+        if isinstance(e, (tuple, list)):
+            kept = tuple(x for x in e if x in names)
+            return kept if kept else None
+        return e if e in names else None
+
+    return P(*(fix(e) for e in spec))

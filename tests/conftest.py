@@ -1,0 +1,6 @@
+import os
+import sys
+
+# tests see the real single CPU device (the 512-device override is ONLY for
+# the dry-run); keep test jit cache warm across files.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

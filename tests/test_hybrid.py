@@ -1,0 +1,121 @@
+"""Hybrid trainer semantics: tau=0 == sync bit-exact, async dense delay,
+convergence ordering on the synthetic CTR task (paper §6.2 qualitative)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core import adapters, embedding_ps as PS, hybrid
+from repro.core.hybrid import TrainMode
+from repro.data.ctr import CTRDataset
+from repro.optim.optimizers import OptConfig, make_optimizer
+
+CFG = ModelConfig(name="t", arch_type="recsys", n_id_fields=4,
+                  ids_per_field=3, emb_dim=16, emb_rows=512,
+                  n_dense_features=4, mlp_dims=(32, 16), n_tasks=1)
+DS = CTRDataset("t", n_rows=512, n_fields=4, ids_per_field=3, n_dense=4)
+
+
+def _run(mode, n_steps=25, seed=0):
+    adapter = adapters.recsys_adapter(CFG, lr=5e-2)
+    opt_init, opt_update = make_optimizer(OptConfig(kind="adam", lr=5e-3))
+    it = DS.sampler(128, seed=seed)
+    batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+    state, spec = hybrid.init_train_state(adapter, mode, opt_init,
+                                          jax.random.PRNGKey(0), batch)
+    step = jax.jit(hybrid.make_train_step(adapter, spec, mode, opt_update))
+    losses = []
+    for _ in range(n_steps):
+        b = {k: jnp.asarray(v) for k, v in next(it).items()}
+        state, m = step(state, b)
+        losses.append(float(m["loss"]))
+    return state, losses
+
+
+def test_hybrid_tau0_equals_sync_exactly():
+    s1, l1 = _run(TrainMode("hybrid", 0, 0))
+    s2, l2 = _run(TrainMode.sync())
+    np.testing.assert_allclose(l1, l2, rtol=0)
+    for a, b in zip(jax.tree.leaves(s1["dense"]), jax.tree.leaves(s2["dense"])):
+        np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(s1["emb"]["table"], s2["emb"]["table"])
+
+
+def test_all_modes_learn():
+    for mode in [TrainMode.sync(), TrainMode.hybrid(3), TrainMode.async_(3, 3)]:
+        _, losses = _run(mode, n_steps=40)
+        assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.02, \
+            (mode.name, losses[:5], losses[-5:])
+
+
+def test_hybrid_close_to_sync_async_worse():
+    """Qualitative Table 2: |hybrid - sync| small; async trails."""
+    _, ls = _run(TrainMode.sync(), n_steps=60)
+    _, lh = _run(TrainMode.hybrid(3), n_steps=60)
+    _, la = _run(TrainMode.async_(5, 5), n_steps=60)
+    s, h, a = (np.mean(x[-10:]) for x in (ls, lh, la))
+    assert abs(h - s) < 0.05
+    assert a >= s - 0.01
+
+
+def test_emb_grads_flow_through_queue():
+    """After tau warmup steps the table must have changed."""
+    adapter = adapters.recsys_adapter(CFG, lr=5e-2)
+    opt_init, opt_update = make_optimizer(OptConfig(kind="adam", lr=5e-3))
+    it = DS.sampler(64)
+    batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+    mode = TrainMode.hybrid(2)
+    state, spec = hybrid.init_train_state(adapter, mode, opt_init,
+                                          jax.random.PRNGKey(0), batch)
+    t0 = state["emb"]["table"].copy()
+    step = jax.jit(hybrid.make_train_step(adapter, spec, mode, opt_update))
+    state, _ = step(state, batch)
+    state, _ = step(state, batch)
+    assert jnp.all(state["emb"]["table"] == t0)        # still queued
+    state, _ = step(state, batch)
+    assert not jnp.all(state["emb"]["table"] == t0)    # first put applied
+
+
+def test_decomposed_matches_fused():
+    """The decomposed (3-dispatch, donated) pipeline computes the same
+    updates as the fused train step."""
+    adapter = adapters.recsys_adapter(CFG, lr=5e-2)
+    opt_init, opt_update = make_optimizer(OptConfig(kind="adam", lr=5e-3))
+    mode = TrainMode.hybrid(2)
+    it = DS.sampler(64)
+    batches = [{k: jnp.asarray(v) for k, v in next(it).items()}
+               for _ in range(6)]
+    s1, spec = hybrid.init_train_state(adapter, mode, opt_init,
+                                       jax.random.PRNGKey(0), batches[0])
+    s2, _ = hybrid.init_train_state(adapter, mode, opt_init,
+                                    jax.random.PRNGKey(0), batches[0])
+    fused = jax.jit(hybrid.make_train_step(adapter, spec, mode, opt_update))
+    fns = hybrid.make_decomposed_fns(adapter, spec, mode, opt_update)
+    for b in batches:
+        s1, m1 = fused(s1, b)
+        s2, m2 = hybrid.decomposed_train_step(fns, s2, b, adapter)
+    np.testing.assert_allclose(np.asarray(s1["emb"]["table"]),
+                               np.asarray(s2["emb"]["table"]), atol=1e-5)
+    for a, b_ in zip(jax.tree.leaves(s1["dense"]),
+                     jax.tree.leaves(s2["dense"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_), atol=1e-5)
+
+
+def test_eval_step_runs():
+    adapter = adapters.recsys_adapter(CFG)
+    opt_init, _ = make_optimizer(OptConfig())
+    it = DS.sampler(32)
+    batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+    state, spec = hybrid.init_train_state(adapter, TrainMode.sync(), opt_init,
+                                          jax.random.PRNGKey(0), batch)
+    ev = jax.jit(hybrid.make_eval_step(adapter, spec))
+    m = ev(state, batch)
+    assert np.isfinite(float(m["loss"]))
+
+
+def test_auc_metric():
+    labels = np.array([1, 0, 1, 0, 1])
+    assert adapters.auc(labels, np.array([.9, .1, .8, .2, .7])) == 1.0
+    assert adapters.auc(labels, np.array([.1, .9, .2, .8, .3])) == 0.0
+    assert abs(adapters.auc(labels, np.full(5, 0.5)) - 0.5) < 1e-9

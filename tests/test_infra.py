@@ -1,0 +1,159 @@
+"""Infrastructure-layer tests: HLO cost walker, partition rules, input
+specs, data generators, config registry."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config
+from repro.data.ctr import CTRDataset
+from repro.data.lm import lm_batches
+from repro.launch import hlo_cost, input_specs as IS
+from repro.sharding import partition as PART
+
+
+# ---------------------------------------------------------------------------
+# HLO cost walker
+# ---------------------------------------------------------------------------
+
+def test_walker_multiplies_scan_trip_count():
+    def f(x, w):
+        def body(c, _):
+            return c @ w, None
+        out, _ = jax.lax.scan(body, x, None, length=10)
+        return out
+
+    x = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    w = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    txt = jax.jit(f).lower(x, w).compile().as_text()
+    st = hlo_cost.analyze(txt)
+    assert st["flops"] == pytest.approx(2 * 128 * 256 * 256 * 10, rel=0.01)
+
+
+def test_walker_counts_nested_scans():
+    def f(x, w):
+        def outer(c, _):
+            def inner(ci, _):
+                return ci @ w, None
+            c2, _ = jax.lax.scan(inner, c, None, length=3)
+            return c2, None
+        out, _ = jax.lax.scan(outer, x, None, length=4)
+        return out
+
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    txt = jax.jit(f).lower(x, w).compile().as_text()
+    st = hlo_cost.analyze(txt)
+    assert st["flops"] == pytest.approx(2 * 64 * 64 * 64 * 12, rel=0.01)
+
+
+def test_walker_shape_parse():
+    b, e = hlo_cost._shape_bytes_elems("(f32[2,3]{1,0}, bf16[4])")
+    assert e == 10 and b == 2 * 3 * 4 + 4 * 2
+
+
+# ---------------------------------------------------------------------------
+# Partition rules
+# ---------------------------------------------------------------------------
+
+def test_partition_rules_shapes():
+    params = {
+        "stack": {"0": {"mixer": {"wq": jnp.zeros((4, 64, 128)),
+                                  "wo": jnp.zeros((4, 128, 64))},
+                        "ffn": {"wg": jnp.zeros((4, 8, 64, 128))}}},
+        "lm_head": jnp.zeros((64, 1024)),
+        "final_norm": {"w": jnp.zeros((64,))},
+    }
+    specs = PART.dense_param_specs(params)
+    assert specs["stack"]["0"]["mixer"]["wq"] == P(None, "data", "model")
+    assert specs["stack"]["0"]["mixer"]["wo"] == P(None, "model", "data")
+    # stacked MoE experts: (repeats, E, d_in, d_out)
+    assert specs["stack"]["0"]["ffn"]["wg"] == P(None, "model", "data", None)
+    assert specs["lm_head"] == P("data", "model")
+    assert specs["final_norm"]["w"] == P(None)
+
+
+def test_to_shardings_divisibility_guard():
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    leaf = jax.ShapeDtypeStruct((7, 64), jnp.float32)   # 7 % 16 != 0
+    out = PART._guard(P("data", "model"), FakeMesh(), leaf)
+    assert out == P(None, "model")
+    leaf2 = jax.ShapeDtypeStruct((32, 13), jnp.float32)  # 13 % 16 != 0
+    assert PART._guard(P("data", "model"), FakeMesh(), leaf2) == \
+        P("data", None)
+
+
+# ---------------------------------------------------------------------------
+# input specs
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_input_specs_cover_model_inputs(arch):
+    cfg = get_config(arch)
+    tr = IS.train_inputs(cfg, INPUT_SHAPES["train_4k"])
+    assert tr["tokens"].shape == (256, 4096)
+    if cfg.is_encdec or cfg.n_memory_tokens:
+        assert "memory" in tr
+    dec = IS.decode_inputs(cfg, INPUT_SHAPES["decode_32k"])
+    assert dec["tokens"].shape == (128, 1)
+    pre = IS.prefill_inputs(cfg, INPUT_SHAPES["prefill_32k"])
+    assert pre["tokens"].shape == (32, 32768)
+
+
+# ---------------------------------------------------------------------------
+# data generators
+# ---------------------------------------------------------------------------
+
+def test_ctr_generator_statistics():
+    ds = CTRDataset("t", n_rows=10_000, n_fields=8, ids_per_field=4,
+                    n_dense=4)
+    b = next(ds.sampler(2048))
+    ids = b["ids"]
+    assert ids.shape == (2048, 8, 4)
+    valid = ids[ids >= 0]
+    assert valid.min() >= 0 and valid.max() < 10_000
+    # zipf skew: top-1% of ids should carry a large share of traffic
+    counts = np.bincount(valid, minlength=10_000)
+    top = np.sort(counts)[::-1]
+    assert top[:100].sum() > 0.2 * counts.sum()
+    # labels not degenerate
+    assert 0.02 < b["labels"].mean() < 0.98
+
+
+def test_ctr_planted_signal_learnable():
+    """The planted logistic truth must be recoverable: empirical label rate
+    differs between samples containing a hot id vs not."""
+    ds = CTRDataset("t", n_rows=1_000, n_fields=4, ids_per_field=4,
+                    n_dense=2)
+    b = next(ds.sampler(8192))
+    y = b["labels"][:, 0]
+    assert y.std() > 0.1
+
+
+def test_lm_generator_markov_structure():
+    it = lm_batches(vocab_size=64, batch=16, seq_len=32, branch=4)
+    b = next(it)
+    assert b["tokens"].shape == (16, 32)
+    # successor entropy bounded: each token has <= 4 frequent successors
+    pairs = {}
+    for row_t, row_y in zip(b["tokens"], b["targets"]):
+        for a, c in zip(row_t, row_y):
+            pairs.setdefault(int(a), set()).add(int(c))
+    # with 5% noise a few extras are possible; check the bulk
+    sizes = sorted(len(v) for v in pairs.values())
+    assert sizes[len(sizes) // 2] <= 6
+
+
+def test_registry_roundtrip():
+    for a in ARCH_IDS:
+        cfg = get_config(a)
+        red = get_config(a, reduced=True)
+        assert red.d_model <= 256
+        assert red.n_layers <= cfg.n_layers
+        kinds = {(b.mixer, b.ffn) for b in cfg.pattern}
+        red_kinds = {(b.mixer, b.ffn) for b in red.pattern}
+        assert red_kinds <= kinds or not cfg.pattern

@@ -1,0 +1,162 @@
+"""Per-kernel validation: shape/dtype sweeps + hypothesis properties, all
+against the pure-jnp ref.py oracles (interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels import blockscale as bs
+
+
+# ---------------------------------------------------------------------------
+# blockscale
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rows", [256, 512, 1024])
+def test_blockscale_matches_ref(rows):
+    key = jax.random.PRNGKey(rows)
+    v = jax.random.normal(key, (rows, 128)) * jnp.exp(
+        jax.random.normal(key, (rows, 1)) * 4)
+    c, s = ops.blockscale_compress(v)
+    cr, sr = ref.blockscale_compress_ref(v)
+    assert jnp.all(c == cr)
+    np.testing.assert_allclose(s, sr, rtol=1e-6)
+    out = ops.blockscale_decompress(c, s)
+    np.testing.assert_allclose(out, ref.blockscale_decompress_ref(cr, sr),
+                               rtol=1e-6)
+
+
+@settings(deadline=None, max_examples=25)
+@given(st.integers(1, 5), st.integers(1, 300), st.floats(-8, 8))
+def test_blockscale_roundtrip_error_bound(a, b, logscale):
+    """Property: per-block relative error <= fp16 quantisation of the
+    block's L_inf (the paper's non-uniform-mapping guarantee)."""
+    rng = np.random.default_rng(a * 1000 + b)
+    v = (rng.standard_normal((a, b)) * np.exp(logscale)).astype(np.float32)
+    out = np.asarray(ops.blockscale_roundtrip(jnp.asarray(v)))
+    linf = np.abs(v).max() if v.size else 0.0
+    # fp16 has 11 mantissa bits; values scaled to ~kappa so relative
+    # error per element is <= linf * 2^-10 (conservative)
+    assert np.all(np.abs(out - v) <= linf * 2 ** -10 + 1e-12)
+
+
+def test_blockscale_zero_block():
+    v = jnp.zeros((256, 128))
+    out = ops.blockscale_roundtrip(v)
+    assert jnp.all(out == 0)
+
+
+# ---------------------------------------------------------------------------
+# embedding_bag
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("V,D,B,L", [(64, 128, 4, 6), (128, 256, 8, 3),
+                                     (32, 128, 1, 1), (256, 128, 16, 12)])
+def test_embedding_bag_sweep(V, D, B, L):
+    key = jax.random.PRNGKey(V + D + B + L)
+    table = jax.random.normal(key, (V, D))
+    ids = jax.random.randint(key, (B, L), -3, V)
+    got = ops.embedding_bag(table, ids)
+    want = ref.embedding_bag_ref(table, ids)
+    np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+def test_embedding_bag_bf16():
+    key = jax.random.PRNGKey(0)
+    table = jax.random.normal(key, (64, 128)).astype(jnp.bfloat16)
+    ids = jax.random.randint(key, (4, 5), -1, 64)
+    got = ops.embedding_bag(table, ids)
+    want = ref.embedding_bag_ref(table, ids)
+    np.testing.assert_allclose(got.astype(jnp.float32),
+                               want.astype(jnp.float32), atol=1e-1)
+
+
+def test_embedding_bag_all_padding():
+    table = jnp.ones((16, 128))
+    ids = jnp.full((2, 3), -1, jnp.int32)
+    assert jnp.all(ops.embedding_bag(table, ids) == 0)
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.integers(1, 8), st.integers(1, 10), st.integers(8, 64))
+def test_embedding_bag_property(B, L, V):
+    rng = np.random.default_rng(B * 100 + L * 10 + V)
+    table = jnp.asarray(rng.standard_normal((V, 128)).astype(np.float32))
+    ids = jnp.asarray(rng.integers(-2, V, (B, L)).astype(np.int32))
+    got = ops.embedding_bag(table, ids)
+    want = ref.embedding_bag_ref(table, ids)
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# embedding_sgd
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("T", [1, 4, 17])
+def test_embedding_sgd(T):
+    key = jax.random.PRNGKey(T)
+    table = jax.random.normal(key, (64, 128))
+    # unique ids (kernel contract: pre-deduped puts)
+    ids = jnp.asarray(np.random.default_rng(T).permutation(64)[:T],
+                      jnp.int32)
+    ids = ids.at[0].set(-1) if T > 2 else ids
+    grads = jax.random.normal(key, (T, 128))
+    got = ops.embedding_sgd(table, ids, grads, lr=0.05)
+    want = ref.embedding_sgd_ref(table, ids, grads, lr=0.05)
+    np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# flash attention (Pallas fwd kernel vs jnp oracle)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("causal,window,dtype",
+                         [(True, 0, jnp.float32), (True, 24, jnp.float32),
+                          (False, 0, jnp.float32), (True, 0, jnp.bfloat16)])
+def test_flash_kernel_matches_naive(causal, window, dtype):
+    from repro.kernels.flash_attention import flash_attention_fwd
+    from repro.models.layers import _attn_naive
+    key = jax.random.PRNGKey(0)
+    B, Hq, Hkv, S, Dh = 2, 4, 2, 64, 32
+    q = jax.random.normal(key, (B, Hq, S, Dh)).astype(dtype)
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, Hkv, S, Dh)).astype(dtype)
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, Hkv, S, Dh)).astype(dtype)
+    o, lse = flash_attention_fwd(q, k, v, scale=0.2, causal=causal,
+                                 window=window, qblk=16, kblk=16,
+                                 interpret=True)
+    qg = q.reshape(B, Hkv, Hq // Hkv, S, Dh).transpose(0, 3, 1, 2, 4)
+    on = _attn_naive(qg, k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+                     scale=0.2, causal=causal, window=window, q_offset=0)
+    on = on.transpose(0, 2, 3, 1, 4).reshape(B, Hq, S, Dh)
+    atol = 1e-5 if dtype == jnp.float32 else 0.04
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(on, np.float32), atol=atol)
+
+
+@pytest.mark.parametrize("S,qblk,kblk", [(128, 32, 64), (96, 16, 32)])
+def test_flash_kernel_block_shapes(S, qblk, kblk):
+    from repro.kernels.flash_attention import flash_attention_fwd
+    from repro.models.layers import _attn_naive
+    key = jax.random.PRNGKey(3)
+    q = jax.random.normal(key, (1, 2, S, 16))
+    k = jax.random.normal(jax.random.PRNGKey(4), (1, 2, S, 16))
+    v = jax.random.normal(jax.random.PRNGKey(5), (1, 2, S, 16))
+    o, _ = flash_attention_fwd(q, k, v, scale=0.25, qblk=qblk, kblk=kblk,
+                               interpret=True)
+    qg = q.transpose(0, 2, 1, 3)[:, :, :, None]
+    on = _attn_naive(qg, k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+                     scale=0.25, causal=True, window=0, q_offset=0)
+    on = on[:, :, :, 0].transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(o, on, atol=1e-5)
+
+
+def test_embedding_sgd_untouched_rows_preserved():
+    table = jnp.arange(64 * 128, dtype=jnp.float32).reshape(64, 128)
+    ids = jnp.array([5], jnp.int32)
+    grads = jnp.ones((1, 128))
+    out = ops.embedding_sgd(table, ids, grads, lr=1.0)
+    assert jnp.all(out[6:] == table[6:])
+    assert jnp.all(out[:5] == table[:5])
+    np.testing.assert_allclose(out[5], table[5] - 1.0)

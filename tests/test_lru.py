@@ -1,0 +1,88 @@
+"""LRU embedding store (paper §4.2.2 array-list design) vs a reference
+OrderedDict implementation, including serialize/deserialize = memory copy."""
+from collections import OrderedDict
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.lru import LRUEmbeddingStore
+
+
+class RefLRU:
+    def __init__(self, cap):
+        self.cap = cap
+        self.d = OrderedDict()
+
+    def get(self, ids):
+        out = []
+        for i in ids:
+            i = int(i)
+            if i not in self.d:
+                if len(self.d) >= self.cap:
+                    self.d.popitem(last=False)
+                self.d[i] = True
+            else:
+                self.d.move_to_end(i)
+            out.append(i)
+        return out
+
+    def keys(self):
+        return set(self.d)
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.lists(st.integers(0, 30), min_size=1, max_size=200),
+       st.integers(2, 12))
+def test_lru_eviction_matches_reference(seq, cap):
+    store = LRUEmbeddingStore(cap, dim=4)
+    ref = RefLRU(cap)
+    for i in seq:
+        store.get(np.array([i]))
+        ref.get([i])
+    assert set(store.index) == ref.keys()
+
+
+def test_vectors_stable_across_hits():
+    store = LRUEmbeddingStore(8, dim=4)
+    v1 = store.get(np.array([3])).copy()
+    store.get(np.array([1, 2]))
+    v2 = store.get(np.array([3]))
+    np.testing.assert_array_equal(v1, v2)
+
+
+def test_eviction_reinitialises():
+    store = LRUEmbeddingStore(2, dim=4, seed=0)
+    v1 = store.get(np.array([1])).copy()
+    store.get(np.array([2, 3]))          # evicts 1
+    assert 1 not in store.index
+    assert store.evictions == 1
+
+
+def test_put_applies_adagrad():
+    store = LRUEmbeddingStore(4, dim=4)
+    v0 = store.get(np.array([7])).copy()
+    g = np.ones((1, 4), np.float32)
+    store.put(np.array([7]), g, lr=1.0, eps=0.0)
+    v1 = store.get(np.array([7]))
+    np.testing.assert_allclose(v1, v0 - 1.0, atol=1e-6)
+
+
+def test_put_on_missing_id_is_noop():
+    store = LRUEmbeddingStore(4, dim=4)
+    store.put(np.array([42]), np.ones((1, 4), np.float32))
+    assert 42 not in store.index
+
+
+def test_serialize_roundtrip():
+    store = LRUEmbeddingStore(8, dim=4, seed=1)
+    store.get(np.arange(12))              # with evictions
+    store.put(np.array([10]), np.ones((1, 4), np.float32))
+    blob = store.serialize()
+    back = LRUEmbeddingStore.deserialize(blob)
+    assert set(back.index) == set(store.index)
+    np.testing.assert_array_equal(back.vectors[: back.size],
+                                  store.vectors[: store.size])
+    # behaviourally identical afterwards
+    a = store.get(np.array([11, 4]))
+    b = back.get(np.array([11, 4]))
+    assert set(store.index) == set(back.index)

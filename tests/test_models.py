@@ -1,0 +1,173 @@
+"""Model-zoo behaviour: prefill/decode consistency per family, SSD vs naive
+recurrence, flash attention vs naive oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import BlockCfg, ModelConfig
+from repro.core import embedding_ps as PS
+from repro.models import mamba2 as M2
+from repro.models import transformer as T
+from repro.models.flash import flash_attention
+from repro.models.layers import _attn_naive
+
+
+def _consistency(cfg, S=12, extra=3, atol=3e-5):
+    key = jax.random.PRNGKey(0)
+    dense = T.init_dense(cfg, key)
+    spec = PS.EmbeddingSpec(rows=cfg.vocab_size, dim=cfg.d_model)
+    emb = PS.ps_init(key, spec)
+    tokens = jax.random.randint(key, (2, S + extra), 0, cfg.vocab_size)
+    acts = PS.lookup(emb, spec, tokens)
+    mem = None
+    if cfg.is_encdec:
+        mem = jax.random.normal(key, (2, cfg.encoder.n_memory_tokens,
+                                      cfg.encoder.d_memory)) * 0.1
+    elif cfg.n_memory_tokens:
+        mem = jax.random.normal(key, (2, cfg.n_memory_tokens,
+                                      cfg.d_memory)) * 0.1
+    pos = jnp.arange(S + extra)[None].repeat(2, 0)
+    memory = T.encode(cfg, dense, mem) if cfg.is_encdec else mem
+    h, _ = T.forward(cfg, dense, acts, pos, memory)
+    full = (h @ dense["lm_head"]).astype(jnp.float32)
+    logits, caches = T.prefill(cfg, dense, acts[:, :S], memory=mem,
+                               max_len=S + extra)
+    diffs = [float(jnp.max(jnp.abs(logits[:, 0] - full[:, S - 1])))]
+    for i in range(extra):
+        logits, caches = T.decode_step(cfg, dense, acts[:, S + i: S + i + 1],
+                                       caches)
+        diffs.append(float(jnp.max(jnp.abs(logits[:, 0, : cfg.vocab_size]
+                                           - full[:, S + i, : cfg.vocab_size]))))
+    assert max(diffs) < atol, diffs
+
+
+GQA = ModelConfig(name="gqa", d_model=64, n_heads=4, n_kv_heads=2,
+                  head_dim=16, d_ff=128, vocab_size=128, qk_norm=True,
+                  pattern=(BlockCfg("gqa", "dense"),), pattern_repeats=2)
+MLA = ModelConfig(name="mla", d_model=64, n_heads=4, head_dim=16,
+                  rope_head_dim=8, v_head_dim=16, kv_lora_rank=32,
+                  q_lora_rank=24, d_ff=128, vocab_size=128,
+                  pattern=(BlockCfg("mla", "moe"),), pattern_repeats=2,
+                  n_experts=4, moe_top_k=2, moe_d_ff=64, n_shared_experts=1,
+                  capacity_factor=8.0, prologue=(BlockCfg("mla", "dense"),))
+SSM = ModelConfig(name="ssm", d_model=64, n_heads=0, n_kv_heads=0,
+                  head_dim=16, d_ff=0, vocab_size=128, ssm_state=16,
+                  ssm_head_dim=16, ssm_chunk=4,
+                  pattern=(BlockCfg("mamba2", "none"),), pattern_repeats=2)
+HYBRID = ModelConfig(name="hyb", d_model=64, n_heads=4, n_kv_heads=2,
+                     head_dim=16, d_ff=128, vocab_size=128, ssm_state=16,
+                     ssm_head_dim=16, ssm_chunk=4, n_experts=4, moe_top_k=2,
+                     moe_d_ff=64, capacity_factor=8.0,
+                     pattern=(BlockCfg("mamba2", "dense"),
+                              BlockCfg("gqa", "moe")), pattern_repeats=2)
+VLM = ModelConfig(name="vlm", d_model=64, n_heads=4, n_kv_heads=2,
+                  head_dim=16, d_ff=128, vocab_size=128, n_memory_tokens=8,
+                  pattern=(BlockCfg("gqa", "dense"),
+                           BlockCfg("cross_attn", "dense")),
+                  pattern_repeats=2)
+_ENC = ModelConfig(name="enc", d_model=48, n_heads=4, n_kv_heads=4,
+                   head_dim=12, d_ff=96, ffn_act="gelu", norm="layernorm",
+                   n_memory_tokens=10, d_memory=16,
+                   pattern=(BlockCfg("gqa", "dense"),), pattern_repeats=2)
+ENCDEC = ModelConfig(name="whisper", d_model=48, n_heads=4, n_kv_heads=4,
+                     head_dim=12, d_ff=96, ffn_act="gelu", norm="layernorm",
+                     vocab_size=128, encoder=_ENC,
+                     pattern=(BlockCfg("gqa", "dense", cross=True),),
+                     pattern_repeats=2)
+SLIDING = GQA.replace(sliding_window=6, qk_norm=False, name="sliding")
+
+
+@pytest.mark.parametrize("cfg", [GQA, MLA, SSM, HYBRID, VLM, ENCDEC, SLIDING],
+                         ids=lambda c: c.name)
+def test_prefill_decode_consistency(cfg):
+    _consistency(cfg)
+
+
+def test_sliding_window_ring_long():
+    """Decode far beyond the window with a ring cache == full forward."""
+    cfg = SLIDING.replace(pattern_repeats=1)
+    _consistency(cfg, S=16, extra=8)
+
+
+# ---------------------------------------------------------------------------
+# SSD chunked == naive recurrence
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("S", [7, 32, 61])
+def test_ssd_matches_recurrence(S):
+    cfg = SSM
+    key = jax.random.PRNGKey(S)
+    p = M2.mamba2_init(key, cfg)
+    x = jax.random.normal(key, (2, S, cfg.d_model)) * 0.5
+    y1 = M2.mamba2_forward(p, cfg, x)
+    y2 = M2.mamba2_reference_scan(p, cfg, x)
+    np.testing.assert_allclose(y1, y2, atol=2e-5)
+
+
+def test_ssd_state_handoff():
+    cfg = SSM
+    key = jax.random.PRNGKey(9)
+    p = M2.mamba2_init(key, cfg)
+    x = jax.random.normal(key, (2, 13, cfg.d_model)) * 0.5
+    _, st = M2.mamba2_forward(p, cfg, x, return_state=True)
+    xn = jax.random.normal(jax.random.PRNGKey(1), (2, 1, cfg.d_model)) * 0.5
+    yd, _ = M2.mamba2_decode(p, cfg, xn, st)
+    yfull = M2.mamba2_reference_scan(p, cfg, jnp.concatenate([x, xn], 1))
+    np.testing.assert_allclose(yd[:, 0], yfull[:, -1], atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention vs naive
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("causal,window,triangle",
+                         [(True, 0, False), (True, 9, False),
+                          (False, 0, False), (True, 0, True)])
+def test_flash_matches_naive(causal, window, triangle, monkeypatch):
+    import repro.models.flash as F
+    monkeypatch.setattr(F, "TRIANGLE", triangle)
+    F._make_flash.cache_clear()
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (2, 37, 2, 3, 16))
+    k = jax.random.normal(jax.random.PRNGKey(1), (2, 37, 2, 16))
+    v = jax.random.normal(jax.random.PRNGKey(2), (2, 37, 2, 16))
+
+    def f(q, k, v):
+        return flash_attention(q, k, v, scale=0.25, causal=causal,
+                               window=window, qblk=16, kblk=16)
+
+    def n(q, k, v):
+        return _attn_naive(q, k, v, scale=0.25, causal=causal, window=window,
+                           q_offset=0)
+
+    np.testing.assert_allclose(f(q, k, v), n(q, k, v), atol=2e-6)
+    gf = jax.grad(lambda *a: jnp.sum(jnp.sin(f(*a))), argnums=(0, 1, 2))(q, k, v)
+    gn = jax.grad(lambda *a: jnp.sum(jnp.sin(n(*a))), argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gf, gn):
+        np.testing.assert_allclose(a, b, atol=2e-5)
+
+
+def test_training_step_decreases_loss_tiny_lm():
+    """A tiny LM learns the synthetic Markov data (loss drops)."""
+    from repro.core import adapters, hybrid
+    from repro.core.hybrid import TrainMode
+    from repro.data.lm import lm_batches
+    from repro.optim.optimizers import OptConfig, make_optimizer
+
+    cfg = GQA.replace(vocab_size=64)
+    adapter = adapters.lm_adapter(cfg, lr=0.2)
+    opt_init, opt_update = make_optimizer(OptConfig(kind="adam", lr=3e-3))
+    it = lm_batches(64, 8, 32, seed=0)
+    batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+    state, spec = hybrid.init_train_state(adapter, TrainMode.hybrid(2),
+                                          opt_init, jax.random.PRNGKey(0),
+                                          batch)
+    step = jax.jit(hybrid.make_train_step(adapter, spec, TrainMode.hybrid(2),
+                                          opt_update))
+    losses = []
+    for _ in range(30):
+        batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.3, losses

@@ -1,0 +1,97 @@
+"""Optimizers + checkpointing + theory calculator."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import load_checkpoint, save_checkpoint, CheckpointManager
+from repro.core.theory import estimate_alpha, hybrid_rate_bound, optimal_lr
+from repro.optim.optimizers import (OptConfig, adam_init, adam_update,
+                                    linear_warmup_cosine, make_optimizer,
+                                    sgd_init, sgd_update)
+
+
+def test_sgd_momentum_matches_formula():
+    p = {"w": jnp.array([1.0, 2.0])}
+    g = {"w": jnp.array([0.5, -0.5])}
+    st = sgd_init(p, momentum=0.9)
+    p1, st = sgd_update(p, g, st, lr=0.1, momentum=0.9)
+    np.testing.assert_allclose(p1["w"], [1 - 0.05, 2 + 0.05])
+    p2, st = sgd_update(p1, g, st, lr=0.1, momentum=0.9)
+    m2 = 0.9 * 0.5 + 0.5
+    np.testing.assert_allclose(p2["w"][0], p1["w"][0] - 0.1 * m2, rtol=1e-6)
+
+
+def test_adam_converges_on_quadratic():
+    p = {"w": jnp.array([5.0, -3.0])}
+    st = adam_init(p)
+    for _ in range(300):
+        g = {"w": 2 * p["w"]}
+        p, st = adam_update(p, g, st, lr=0.05)
+    assert float(jnp.max(jnp.abs(p["w"]))) < 0.05
+
+
+def test_grad_clip_equals_prescaled():
+    """Clipping to c is identical to feeding grads scaled by c/||g||
+    (adam itself is scale-invariant, so compare against that oracle)."""
+    p = {"w": jnp.array([1.0, -2.0, 3.0])}
+    g = {"w": jnp.array([3.0, 4.0, 0.0])}       # norm 5
+    p1, s1 = adam_update(p, g, adam_init(p), lr=0.1, grad_clip=1.0)
+    g_scaled = {"w": g["w"] / 5.0}
+    p2, s2 = adam_update(p, g_scaled, adam_init(p), lr=0.1, grad_clip=0.0)
+    np.testing.assert_allclose(p1["w"], p2["w"], rtol=1e-6)
+
+
+def test_lr_schedule():
+    import numpy as _np
+    s = jnp.arange(0, 100)
+    lr = linear_warmup_cosine(s, base_lr=1.0, warmup=10, total=100)
+    assert float(lr[0]) == 0.0
+    assert abs(float(lr[10]) - 1.0) < 1e-6
+    assert float(lr[99]) < 0.01
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": np.arange(6, dtype=np.float32).reshape(2, 3),
+            "nested": {"b": np.ones(4, np.int32)},
+            "lst": [np.zeros(2), np.ones(2)]}
+    emb = {"table": np.random.default_rng(0).standard_normal((8, 4))
+           .astype(np.float32)}
+    save_checkpoint(str(tmp_path), 7, tree, emb)
+    step, dense, emb2 = load_checkpoint(str(tmp_path))
+    assert step == 7
+    np.testing.assert_array_equal(dense["a"], tree["a"])
+    np.testing.assert_array_equal(dense["nested"]["b"], tree["nested"]["b"])
+    np.testing.assert_array_equal(dense["lst"][1], tree["lst"][1])
+    np.testing.assert_array_equal(emb2["table"], emb["table"])
+
+
+def test_checkpoint_manager_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), every=1, keep=2)
+    for s in range(5):
+        mgr.maybe_save(s, {"w": np.zeros(2)})
+    steps = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert len(steps) == 2 and steps[-1].endswith("00000004")
+
+
+def test_theory_bound_monotone_in_tau_and_alpha():
+    b0 = hybrid_rate_bound(1000, sigma=1.0, tau=0, alpha=0.1)
+    b5 = hybrid_rate_bound(1000, sigma=1.0, tau=5, alpha=0.1)
+    assert b5["total"] > b0["total"]
+    ba = hybrid_rate_bound(1000, sigma=1.0, tau=5, alpha=1.0)
+    assert ba["staleness_term"] > b5["staleness_term"]
+    # alpha << 1 => staleness negligible vs sgd term (the paper's claim)
+    b = hybrid_rate_bound(10_000, sigma=1.0, tau=5, alpha=1e-3)
+    assert b["stale_fraction"] < 0.01
+
+
+def test_optimal_lr_decreasing_in_tau():
+    assert optimal_lr(1000, 1.0, 0, 0.1) > optimal_lr(1000, 1.0, 10, 0.1)
+
+
+def test_estimate_alpha():
+    b1 = np.array([[0, 1, -1], [0, 2, 3]])
+    b2 = np.array([[0, 4, -1], [5, 6, 7]])
+    a = estimate_alpha([b1, b2], n_rows=8)
+    assert abs(a - 3 / 4) < 1e-9        # id 0 in 3 of 4 samples
