@@ -16,11 +16,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core import adapters, hybrid
-from repro.core.hybrid import TrainMode
+from repro.core import adapters
+from repro.core.hybrid import PersiaTrainer, TrainMode
 from repro.core.lru import LRUEmbeddingStore
 from repro.data.ctr import CTRDataset, criteo_syn_rows
-from repro.optim.optimizers import OptConfig, make_optimizer
+from repro.optim.optimizers import OptConfig
 
 
 def step_time_for_rows(rows: int, batch=512, iters=5) -> float:
@@ -29,22 +29,20 @@ def step_time_for_rows(rows: int, batch=512, iters=5) -> float:
     cfg = ModelConfig(name="syn", arch_type="recsys", n_id_fields=26,
                       ids_per_field=2, emb_dim=16, emb_rows=rows,
                       n_dense_features=13, mlp_dims=(128, 64))
-    adapter = adapters.recsys_adapter(cfg)
-    opt_init, opt_update = make_optimizer(OptConfig(kind="adam", lr=1e-3))
+    adapter = adapters.recsys_adapter(cfg, field_rows=ds.field_rows())
+    trainer = PersiaTrainer(adapter, TrainMode.hybrid(2),
+                            OptConfig(kind="adam", lr=1e-3))
     it = ds.sampler(batch)
     b = {k: jnp.asarray(v) for k, v in next(it).items()}
-    mode = TrainMode.hybrid(2)
-    state, spec = hybrid.init_train_state(adapter, mode, opt_init,
-                                          jax.random.PRNGKey(0), b)
+    state = trainer.init(jax.random.PRNGKey(0), b)
     # decomposed pipeline — the runtime-faithful path (separate get / dense /
-    # put dispatches; the donated put aliases the PS table in place)
-    fns = hybrid.make_decomposed_fns(adapter, spec, mode, opt_update)
-    state, _ = hybrid.decomposed_train_step(fns, state, b, adapter)
-    jax.block_until_ready(state["emb"]["table"])
+    # put dispatches; the donated put aliases the PS tables in place)
+    state, _ = trainer.decomposed_step(state, b)
+    jax.block_until_ready(state.emb)
     t0 = time.perf_counter()
     for _ in range(iters):
-        state, _ = hybrid.decomposed_train_step(fns, state, b, adapter)
-    jax.block_until_ready(state["emb"]["table"])
+        state, _ = trainer.decomposed_step(state, b)
+    jax.block_until_ready(state.emb)
     return (time.perf_counter() - t0) / iters
 
 

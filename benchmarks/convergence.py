@@ -10,10 +10,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core import adapters, embedding_ps as PS, hybrid
-from repro.core.hybrid import TrainMode
+from repro.core import adapters
+from repro.core.hybrid import PersiaTrainer, TrainMode
 from repro.data.ctr import CTRDataset
-from repro.optim.optimizers import OptConfig, make_optimizer
+from repro.optim.optimizers import OptConfig
 
 DATASETS = {
     "taobao": CTRDataset("taobao", n_rows=8_000, n_fields=8, ids_per_field=4,
@@ -42,20 +42,17 @@ def _cfg(ds: CTRDataset) -> ModelConfig:
 def train_mode(ds: CTRDataset, mode: TrainMode, steps=120, batch=512,
                seed=0, curve=False):
     cfg = _cfg(ds)
-    adapter = adapters.recsys_adapter(cfg, lr=5e-2)
-    opt_init, opt_update = make_optimizer(OptConfig(kind="adam", lr=5e-3))
+    adapter = adapters.recsys_adapter(cfg, lr=5e-2,
+                                      field_rows=ds.field_rows())
+    trainer = PersiaTrainer(adapter, mode, OptConfig(kind="adam", lr=5e-3))
     it = ds.sampler(batch, seed=seed)
     ev = ds.sampler(2048, seed=4242)
     eval_batch = {k: jnp.asarray(v) for k, v in next(ev).items()}
     b0 = {k: jnp.asarray(v) for k, v in next(it).items()}
-    state, spec = hybrid.init_train_state(adapter, mode, opt_init,
-                                          jax.random.PRNGKey(seed), b0)
-    step = jax.jit(hybrid.make_train_step(adapter, spec, mode, opt_update),
-                   donate_argnums=(0,))
+    state = trainer.init(jax.random.PRNGKey(seed), b0)
 
     def eval_auc():
-        acts = PS.lookup(state["emb"], spec, eval_batch["ids"])
-        preds = adapter.predict(state["dense"], acts, eval_batch)
+        preds = trainer.predict(state, eval_batch)
         return adapters.auc(np.asarray(eval_batch["labels"]),
                             np.asarray(preds))
 
@@ -63,7 +60,7 @@ def train_mode(ds: CTRDataset, mode: TrainMode, steps=120, batch=512,
     points = []
     for s in range(steps):
         b = {k: jnp.asarray(v) for k, v in next(it).items()}
-        state, m = step(state, b)
+        state, m = trainer.step(state, b)
         if curve and (s + 1) % 20 == 0:
             points.append((s + 1, eval_auc()))
     wall = time.perf_counter() - t0

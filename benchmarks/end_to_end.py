@@ -12,31 +12,29 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.convergence import DATASETS, MODES, _cfg
-from repro.core import adapters, embedding_ps as PS, hybrid
-from repro.optim.optimizers import OptConfig, make_optimizer
+from repro.core import adapters
+from repro.core.hybrid import PersiaTrainer
+from repro.optim.optimizers import OptConfig
 
 
 def time_to_auc(ds, mode, target=0.70, max_steps=400, batch=512, seed=0):
     cfg = _cfg(ds)
-    adapter = adapters.recsys_adapter(cfg, lr=5e-2)
-    opt_init, opt_update = make_optimizer(OptConfig(kind="adam", lr=5e-3))
+    adapter = adapters.recsys_adapter(cfg, lr=5e-2,
+                                      field_rows=ds.field_rows())
+    trainer = PersiaTrainer(adapter, mode, OptConfig(kind="adam", lr=5e-3))
     it = ds.sampler(batch, seed=seed)
     ev = ds.sampler(2048, seed=4242)
     eval_batch = {k: jnp.asarray(v) for k, v in next(ev).items()}
     b0 = {k: jnp.asarray(v) for k, v in next(it).items()}
-    state, spec = hybrid.init_train_state(adapter, mode, opt_init,
-                                          jax.random.PRNGKey(seed), b0)
-    step = jax.jit(hybrid.make_train_step(adapter, spec, mode, opt_update),
-                   donate_argnums=(0,))
+    state = trainer.init(jax.random.PRNGKey(seed), b0)
     # warm the jit out of the timing
-    state, _ = step(state, b0)
+    state, _ = trainer.step(state, b0)
     t0 = time.perf_counter()
     for s in range(max_steps):
         b = {k: jnp.asarray(v) for k, v in next(it).items()}
-        state, _ = step(state, b)
+        state, _ = trainer.step(state, b)
         if (s + 1) % 20 == 0:
-            acts = PS.lookup(state["emb"], spec, eval_batch["ids"])
-            preds = adapter.predict(state["dense"], acts, eval_batch)
+            preds = trainer.predict(state, eval_batch)
             auc = adapters.auc(np.asarray(eval_batch["labels"]),
                                np.asarray(preds))
             if auc >= target:

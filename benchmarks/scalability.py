@@ -25,8 +25,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.convergence import DATASETS, _cfg
-from repro.core import adapters, embedding_ps as PS, hybrid
-from repro.core.hybrid import TrainMode
+from repro.core import adapters
+from repro.core.hybrid import PersiaTrainer, TrainMode
 from repro.optim.optimizers import OptConfig, make_optimizer
 from repro.utils import tree_bytes
 
@@ -46,35 +46,38 @@ def _time(fn, *args, iters=5):
 
 def measure_phases(ds, batch=512, seed=0):
     cfg = _cfg(ds)
-    adapter = adapters.recsys_adapter(cfg, lr=5e-2)
+    adapter = adapters.recsys_adapter(cfg, lr=5e-2,
+                                      field_rows=ds.field_rows())
     opt_init, opt_update = make_optimizer(OptConfig(kind="adam", lr=5e-3))
+    trainer = PersiaTrainer(adapter, TrainMode.sync(),
+                            (opt_init, opt_update))
+    coll = trainer.collection
     it = ds.sampler(batch, seed=seed)
     b = {k: jnp.asarray(v) for k, v in next(it).items()}
-    state, spec = hybrid.init_train_state(adapter, TrainMode.sync(), opt_init,
-                                          jax.random.PRNGKey(0), b)
+    state = trainer.init(jax.random.PRNGKey(0), b)
+    ids = adapter.emb_ids(b)
 
-    lookup = jax.jit(lambda st, ids: PS.lookup(st, spec, ids))
-    acts = lookup(state["emb"], b["ids"])
+    lookup = jax.jit(lambda st, idd: coll.lookup(st, idd))
+    acts = lookup(state.emb, ids)
 
     def fwd(dense, acts, b):
         return adapter.loss(dense, acts, b)[0]
 
     fwd_j = jax.jit(fwd)
     grad_j = jax.jit(jax.grad(fwd, argnums=(0, 1)))
-    dgrads, agrads = grad_j(state["dense"], acts, b)
+    dgrads, agrads = grad_j(state.dense, acts, b)
     upd_j = jax.jit(lambda d, g, o: opt_update(d, g, o, lr=None))
-    put_j = jax.jit(lambda st, ids, g: PS.apply_put(
-        st, spec, ids.reshape(-1), g.reshape(-1, spec.dim)))
+    put_j = jax.jit(lambda st, idd, g: coll.apply_put(st, idd, g))
 
-    t_E = _time(lookup, state["emb"], b["ids"])
-    t_F = _time(fwd_j, state["dense"], acts, b)
-    t_FB = _time(grad_j, state["dense"], acts, b)
+    t_E = _time(lookup, state.emb, ids)
+    t_F = _time(fwd_j, state.dense, acts, b)
+    t_FB = _time(grad_j, state.dense, acts, b)
     t_B = max(t_FB - t_F, 1e-9)
-    t_opt = _time(upd_j, state["dense"], dgrads, state["opt"])
-    t_U = _time(put_j, state["emb"], b["ids"], agrads)
+    t_opt = _time(upd_j, state.dense, dgrads, state.opt)
+    t_U = _time(put_j, state.emb, ids, agrads)
 
-    dense_bytes = tree_bytes(state["dense"])
-    emb_act_bytes = acts.size * acts.dtype.itemsize
+    dense_bytes = tree_bytes(state.dense)
+    emb_act_bytes = sum(a.size * a.dtype.itemsize for a in acts.values())
     return dict(E=t_E, F=t_F, B=t_B, OPT=t_opt, U=t_U,
                 dense_bytes=dense_bytes, emb_act_bytes=emb_act_bytes,
                 batch=batch)

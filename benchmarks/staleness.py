@@ -12,14 +12,21 @@ from repro.core.theory import estimate_alpha, hybrid_rate_bound
 from repro.data.ctr import CTRDataset
 
 
+def _global_ids(ds: CTRDataset, batch) -> np.ndarray:
+    """Per-field local ids -> one global id space (for alpha estimation)."""
+    ids = batch["ids"]                                    # (B, F, L), -1 pad
+    offs = (np.arange(ds.n_fields) * ds.rows_per_field)[None, :, None]
+    return np.where(ids >= 0, ids + offs, -1).reshape(ids.shape[0], -1)
+
+
 def run(steps=150, seeds=(0, 1)):
     rows = []
     ds = CTRDataset("stale", n_rows=4_000, n_fields=8, ids_per_field=4,
                     n_dense=8, zipf_a=1.3)
     # empirical alpha of this dataset
     it = ds.sampler(512)
-    batches = [next(it)["ids"].reshape(512, -1) for _ in range(4)]
-    alpha = estimate_alpha(batches, ds.n_rows)
+    batches = [_global_ids(ds, next(it)) for _ in range(4)]
+    alpha = estimate_alpha(batches, ds.rows_per_field * ds.n_fields)
     aucs = {}
     for tau in (0, 1, 2, 4, 8, 16):
         mode = TrainMode("hybrid", tau, 0)
@@ -47,8 +54,8 @@ def run(steps=150, seeds=(0, 1)):
         dsa = CTRDataset("a", n_rows=nrows, n_fields=8, ids_per_field=4,
                          n_dense=8, zipf_a=a)
         it = dsa.sampler(512)
-        batches = [next(it)["ids"].reshape(512, -1) for _ in range(4)]
-        alpha_e = estimate_alpha(batches, nrows)
+        batches = [_global_ids(dsa, next(it)) for _ in range(4)]
+        alpha_e = estimate_alpha(batches, dsa.rows_per_field * dsa.n_fields)
         auc0 = float(np.mean([train_mode(dsa, TrainMode("hybrid", 0, 0),
                                          steps=steps, seed=sd)[0]
                               for sd in seeds]))

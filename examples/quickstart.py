@@ -1,6 +1,8 @@
 """Quickstart: train a CTR recommender with Persia's hybrid algorithm in
-~30 lines. Embedding tables live in the sharded PS and update asynchronously
-(bounded staleness tau=3); the dense FFNN updates synchronously.
+~25 lines. Each ID feature field gets its own embedding table in the
+sharded PS (an EmbeddingCollection) and updates asynchronously (bounded
+staleness tau=3); the dense FFNN updates synchronously. The PersiaTrainer
+facade owns the whole loop: init, fused step, eval, checkpointing.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -9,10 +11,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core import adapters, embedding_ps as PS, hybrid
-from repro.core.hybrid import TrainMode
+from repro.core import adapters
+from repro.core.hybrid import PersiaTrainer, TrainMode
 from repro.data.ctr import CTRDataset
-from repro.optim.optimizers import OptConfig, make_optimizer
+from repro.optim.optimizers import OptConfig
 
 # 1. a dataset (synthetic Taobao-shaped CTR stream) and a matching model
 ds = CTRDataset("demo", n_rows=20_000, n_fields=8, ids_per_field=4, n_dense=8)
@@ -20,29 +22,27 @@ cfg = ModelConfig(name="demo-dlrm", arch_type="recsys", n_id_fields=8,
                   ids_per_field=4, emb_dim=32, emb_rows=20_000,
                   n_dense_features=8, mlp_dims=(256, 128, 64))
 
-# 2. the hybrid trainer: async embeddings (tau=3), sync dense
-adapter = adapters.recsys_adapter(cfg, lr=5e-2)
-opt_init, opt_update = make_optimizer(OptConfig(kind="adam", lr=5e-3))
-mode = TrainMode.hybrid(tau=3)
+# 2. the hybrid trainer: one embedding table per ID field (async, tau=3),
+#    sync dense — all behind one facade
+adapter = adapters.recsys_adapter(cfg, lr=5e-2, field_rows=ds.field_rows())
+trainer = PersiaTrainer(adapter, TrainMode.hybrid(tau=3),
+                        OptConfig(kind="adam", lr=5e-3))
 stream = ds.sampler(batch_size=512)
 batch = {k: jnp.asarray(v) for k, v in next(stream).items()}
-state, spec = hybrid.init_train_state(adapter, mode, opt_init,
-                                      jax.random.PRNGKey(0), batch)
-step = jax.jit(hybrid.make_train_step(adapter, spec, mode, opt_update),
-               donate_argnums=(0,))
+state = trainer.init(jax.random.PRNGKey(0), batch)
 
 # 3. train + evaluate AUC
 for i in range(150):
     batch = {k: jnp.asarray(v) for k, v in next(stream).items()}
-    state, metrics = step(state, batch)
+    state, metrics = trainer.step(state, batch)
     if (i + 1) % 30 == 0:
         eval_b = {k: jnp.asarray(v) for k, v in next(stream).items()}
-        acts = PS.lookup(state["emb"], spec, eval_b["ids"])
-        preds = adapter.predict(state["dense"], acts, eval_b)
+        preds = trainer.predict(state, eval_b)
         auc = adapters.auc(np.asarray(eval_b["labels"]), np.asarray(preds))
         print(f"step {i+1:4d}  loss {float(metrics['loss']):.4f}  "
               f"AUC {auc:.4f}")
 
-print("done — the embedding PS held", state["emb"]["table"].shape[0],
-      "rows; dense params:",
-      sum(x.size for x in jax.tree.leaves(state["dense"])))
+rows = sum(st["table"].shape[0] for st in state.emb.values())
+print(f"done — the embedding PS held {len(state.emb)} tables "
+      f"({rows} rows); dense params:",
+      sum(x.size for x in jax.tree.leaves(state.dense)))

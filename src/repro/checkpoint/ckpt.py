@@ -141,6 +141,16 @@ class CheckpointManager:
         self._gc()
         return path
 
+    def maybe_save_state(self, step: int, trainer, state):
+        """Full-state periodic save through PersiaTrainer.save: dense params
+        + optimizer moments, every PS table with its adagrad accumulator,
+        and the staleness queues — so a restore resumes bit-identically."""
+        if step % self.every != 0:
+            return None
+        path = trainer.save(self.directory, state, step=step)
+        self._gc()
+        return path
+
     def _gc(self):
         steps = sorted(int(d.split("_")[1]) for d in os.listdir(self.directory)
                        if d.startswith("step_"))

@@ -2,5 +2,7 @@
 and the embedding-PS tier it runs against."""
 from repro.core.embedding_ps import (EmbeddingSpec, ps_init, lookup,
                                      apply_put, hybrid_emb_update, queue_init)
-from repro.core.hybrid import (TrainMode, ModelAdapter, init_train_state,
+from repro.core.collection import EmbeddingCollection
+from repro.core.hybrid import (TrainMode, ModelAdapter, PersiaTrainer,
+                               TrainState, init_train_state,
                                make_train_step, make_eval_step)

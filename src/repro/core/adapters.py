@@ -1,51 +1,97 @@
 """ModelAdapter constructors: recsys (the paper's family) and LM (the
-assigned architectures) views of the hybrid trainer."""
+assigned architectures) views of the hybrid trainer.
+
+The recsys adapter emits one embedding table per ID feature field (the
+paper's heterogeneous feature groups, Table 1); the LM adapter is a
+one-table collection over the vocabulary.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.collection import EmbeddingCollection
 from repro.core.embedding_ps import EmbeddingSpec
 from repro.core.hybrid import ModelAdapter
 from repro.models import recsys as R
 from repro.models import transformer as T
 
 
-def recsys_adapter(cfg, *, lr=1e-2, dtype=jnp.float32) -> ModelAdapter:
-    spec = EmbeddingSpec(rows=cfg.emb_rows, dim=cfg.emb_dim, mode="full",
-                         optimizer=cfg.emb_optimizer, lr=lr,
-                         staleness=cfg.emb_staleness, dtype=dtype)
+def field_table_name(i: int) -> str:
+    return f"field_{i:02d}"
 
-    def predict(dense, acts, batch):
+
+def ctr_collection(cfg, *, lr=1e-2, dtype=jnp.float32,
+                   field_rows=None) -> EmbeddingCollection:
+    """Per-field tables from a recsys ModelConfig: ``cfg.emb_rows`` total
+    rows split evenly over ``cfg.n_id_fields`` fields (matching
+    ``CTRDataset``'s per-field id spaces), each its own full-mode table."""
+    from repro.utils import default_field_rows
+    F = cfg.n_id_fields
+    if field_rows is None:
+        field_rows = (default_field_rows(cfg.emb_rows, F),) * F
+    assert len(field_rows) == F, (len(field_rows), F)
+    return EmbeddingCollection.from_dict({
+        field_table_name(i): EmbeddingSpec(
+            rows=int(r), dim=cfg.emb_dim, mode="full",
+            optimizer=cfg.emb_optimizer, lr=lr,
+            staleness=cfg.emb_staleness, dtype=dtype)
+        for i, r in enumerate(field_rows)})
+
+
+def recsys_adapter(cfg, *, lr=1e-2, dtype=jnp.float32,
+                   field_rows=None,
+                   collection: EmbeddingCollection | None = None
+                   ) -> ModelAdapter:
+    """Multi-table CTR adapter. ``batch["ids"]`` is (B, F, L) with
+    *per-field local* ids (each field indexes its own table from 0); field i
+    maps to the collection's i-th table. Pass ``field_rows=ds.field_rows()``
+    so the tables are sized by the dataset's actual per-field id spaces, or
+    ``collection`` to override the per-field specs entirely (heterogeneous
+    rows / dims / optimizers / staleness)."""
+    coll = collection if collection is not None \
+        else ctr_collection(cfg, lr=lr, dtype=dtype, field_rows=field_rows)
+    names = coll.names
+    assert len(names) == cfg.n_id_fields, (len(names), cfg.n_id_fields)
+    d_in = sum(spec.dim for _, spec in coll.items()) + cfg.n_dense_features
+
+    def emb_ids(b):
+        return {n: b["ids"][:, i] for i, n in enumerate(names)}
+
+    def loss(dense, acts, b):
+        return R.recsys_loss_tables(cfg, dense, acts, emb_ids(b), b)
+
+    def predict(dense, acts, b):
         return jax.nn.sigmoid(
-            R.recsys_forward(cfg, dense, acts, batch["ids"],
-                             batch.get("dense")).astype(jnp.float32))
+            R.recsys_forward_tables(cfg, dense, acts, emb_ids(b),
+                                    b.get("dense")).astype(jnp.float32))
 
     return ModelAdapter(
         cfg=cfg,
-        emb_spec=spec,
-        init_dense=lambda k: R.recsys_init(cfg, k, dtype),
-        emb_ids=lambda b: b["ids"],
-        loss=lambda dense, acts, b: R.recsys_loss(cfg, dense, acts, b),
+        collection=coll,
+        init_dense=lambda k: R.recsys_init(cfg, k, dtype, d_in=d_in),
+        emb_ids=emb_ids,
+        loss=loss,
         predict=predict,
     )
 
 
 def lm_adapter(cfg, *, lr=1e-2, dtype=jnp.float32) -> ModelAdapter:
-    spec = EmbeddingSpec(rows=cfg.vocab_size, dim=cfg.d_model, mode="model",
-                         optimizer=cfg.emb_optimizer, lr=lr,
-                         staleness=cfg.emb_staleness, dtype=dtype)
+    coll = EmbeddingCollection.single("vocab", EmbeddingSpec(
+        rows=cfg.vocab_size, dim=cfg.d_model, mode="model",
+        optimizer=cfg.emb_optimizer, lr=lr,
+        staleness=cfg.emb_staleness, dtype=dtype))
 
     def loss(dense, acts, b):
-        return T.lm_loss(cfg, dense, acts, b["targets"], b["mask"],
+        return T.lm_loss(cfg, dense, acts["vocab"], b["targets"], b["mask"],
                          b.get("memory"))
 
     return ModelAdapter(
         cfg=cfg,
-        emb_spec=spec,
+        collection=coll,
         init_dense=lambda k: T.init_dense(cfg, k, dtype),
-        emb_ids=lambda b: b["tokens"],
+        emb_ids=lambda b: {"vocab": b["tokens"]},
         loss=loss,
     )
 

@@ -1,0 +1,181 @@
+"""EmbeddingCollection — a registry of named embedding tables.
+
+Persia's production models (paper §4.1, Table 1) are built from many
+heterogeneous ID feature groups: different cardinalities, embedding dims,
+optimizers and staleness budgets. This module makes that heterogeneity
+first-class: a collection maps table *names* to independent
+:class:`~repro.core.embedding_ps.EmbeddingSpec` s, and every collection-level
+operation (``init`` / ``lookup`` / ``apply_put`` / ``hybrid_update``) fans
+out to the per-table PS primitives — so each table keeps its own
+uniform-shuffle row placement, dedup-put path and bounded-staleness queue.
+
+All per-table state flows through plain dicts keyed by table name:
+
+    states : {name: {"table": (R, D), "acc": (R,)?}}       (PS shard state)
+    ids    : {name: int32 array, any shape, -1 = padding}
+    acts   : {name: (*ids.shape, dim) activations}
+    queues : {name: staleness FIFO or None}
+
+which keeps everything jit-able, shardable and checkpointable as one pytree.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Iterator, Mapping
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import embedding_ps as PS
+from repro.core.embedding_ps import EmbeddingSpec
+
+
+@dataclass(frozen=True)
+class EmbeddingCollection:
+    """Ordered, immutable registry of named embedding tables."""
+
+    tables: tuple[tuple[str, EmbeddingSpec], ...]
+
+    def __post_init__(self):
+        seen = set()
+        for n, _ in self.tables:
+            # names become checkpoint blob paths: '/' would split the path,
+            # and all-digit names deserialize as list indices, not keys
+            if not n or "/" in n or n.isdigit():
+                raise ValueError(
+                    f"invalid table name {n!r}: names must be non-empty, "
+                    "contain no '/', and not be all digits (they key the "
+                    "checkpoint blob paths)")
+            if n in seen:
+                raise ValueError(f"duplicate table name {n!r}")
+            seen.add(n)
+
+    # -- construction -------------------------------------------------------
+
+    @staticmethod
+    def from_dict(specs: Mapping[str, EmbeddingSpec]) -> "EmbeddingCollection":
+        return EmbeddingCollection(tuple(specs.items()))
+
+    @staticmethod
+    def single(name: str, spec: EmbeddingSpec) -> "EmbeddingCollection":
+        return EmbeddingCollection(((name, spec),))
+
+    # -- mapping protocol ----------------------------------------------------
+
+    @property
+    def names(self) -> tuple[str, ...]:
+        return tuple(n for n, _ in self.tables)
+
+    @property
+    def specs(self) -> dict[str, EmbeddingSpec]:
+        return dict(self.tables)
+
+    def items(self):
+        return self.tables
+
+    def __len__(self) -> int:
+        return len(self.tables)
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(self.names)
+
+    def __contains__(self, name: str) -> bool:
+        return any(n == name for n, _ in self.tables)
+
+    def __getitem__(self, name: str) -> EmbeddingSpec:
+        for n, s in self.tables:
+            if n == name:
+                return s
+        raise KeyError(name)
+
+    # -- derived sizes -------------------------------------------------------
+
+    @property
+    def total_rows(self) -> int:
+        return sum(s.rows for _, s in self.tables)
+
+    @property
+    def total_params(self) -> int:
+        return sum(s.rows * s.dim for _, s in self.tables)
+
+    # -- spec surgery --------------------------------------------------------
+
+    def map_specs(self, fn: Callable[[str, EmbeddingSpec], EmbeddingSpec]
+                  ) -> "EmbeddingCollection":
+        return EmbeddingCollection(tuple((n, fn(n, s)) for n, s in self.tables))
+
+    def with_staleness(self, tau: int) -> "EmbeddingCollection":
+        """Set every table's staleness to ``tau`` (mode-wide override)."""
+        return self.map_specs(
+            lambda _, s: dataclasses.replace(s, staleness=tau))
+
+    # -- collection-level PS ops ---------------------------------------------
+
+    def _shards_for(self, name: str, shards) -> int:
+        if isinstance(shards, Mapping):
+            return int(shards.get(name, 1))
+        return int(shards)
+
+    def init(self, key, shards: int | Mapping[str, int] = 1,
+             scale: float = 0.02) -> dict[str, Any]:
+        """Per-table PS state (table + row-wise optimizer accumulator)."""
+        keys = jax.random.split(key, max(len(self.tables), 1))
+        return {n: PS.ps_init(keys[i], s, self._shards_for(n, shards), scale)
+                for i, (n, s) in enumerate(self.tables)}
+
+    def _check_ids(self, ids: Mapping[str, Any]) -> None:
+        unknown = set(ids) - set(self.names)
+        if unknown:
+            raise KeyError(f"ids for unknown tables {sorted(unknown)}; "
+                           f"collection has {list(self.names)}")
+
+    def lookup(self, states: Mapping[str, Any], ids: Mapping[str, Any]
+               ) -> dict[str, jax.Array]:
+        """Batched per-table gets; ids of any shape -> (..., dim) acts."""
+        self._check_ids(ids)
+        return {n: PS.lookup(states[n], self[n], ids[n]) for n in ids}
+
+    def apply_put(self, states: Mapping[str, Any], ids: Mapping[str, Any],
+                  grads: Mapping[str, Any]) -> dict[str, Any]:
+        """Apply activation-gradient puts table-by-table (dedup per table)."""
+        self._check_ids(ids)
+        out = dict(states)
+        for n in ids:
+            spec = self[n]
+            out[n] = PS.apply_put(states[n], spec, ids[n].reshape(-1),
+                                  grads[n].reshape(-1, spec.dim))
+        return out
+
+    def queue_init(self, ids_shapes: Mapping[str, tuple]) -> dict[str, Any]:
+        """Per-table staleness FIFOs (None for synchronous tables)."""
+        out = {}
+        for n, spec in self.tables:
+            shape = ids_shapes.get(n)
+            if shape is None or spec.staleness <= 0:
+                out[n] = None
+                continue
+            n_ids = 1
+            for s in shape:
+                n_ids *= int(s)
+            out[n] = PS.queue_init(spec, (n_ids,), spec.dim)
+        return out
+
+    def hybrid_update(self, states: Mapping[str, Any],
+                      queues: Mapping[str, Any] | None,
+                      ids: Mapping[str, Any], grads: Mapping[str, Any]
+                      ) -> tuple[dict[str, Any], dict[str, Any]]:
+        """One hybrid-algorithm update per table: push this step's put,
+        apply the tau-stale put that pops out (tau=0 applies in place)."""
+        self._check_ids(ids)
+        queues = queues or {}
+        new_states = dict(states)
+        new_queues = dict(queues)
+        for n in ids:
+            spec = self[n]
+            st, q = PS.hybrid_emb_update(
+                states[n], queues.get(n), spec,
+                ids[n].reshape(-1), grads[n].reshape(-1, spec.dim))
+            new_states[n] = st
+            new_queues[n] = q
+        return new_states, new_queues

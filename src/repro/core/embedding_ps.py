@@ -334,7 +334,7 @@ def queue_init(spec: EmbeddingSpec, put_ids_shape, put_dim):
     tau = spec.staleness
     if tau <= 0:
         return None
-    gdtype = jnp.float32 if spec.dtype == jnp.float32 else spec.dtype
+    gdtype = spec.dtype
     return {
         "ids": jnp.full((tau,) + tuple(put_ids_shape), -1, jnp.int32),
         "grads": jnp.zeros((tau,) + tuple(put_ids_shape) + (put_dim,),

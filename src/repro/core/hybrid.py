@@ -2,24 +2,33 @@
 
 One train step =
   (1) lookup: fetch embedding activations for the batch's ID features from
-      the (possibly tau-stale) PS table                      [Alg.1 forward]
+      the (possibly tau-stale) PS tables                     [Alg.1 forward]
   (2) dense forward/backward on the NN-worker side; gradients of the dense
       parameters are combined synchronously (the AllReduce paradigm — under
       GSPMD this is the automatic psum of replicated-param grads over the
       batch axes)                                            [Alg.2]
   (3) gradients *of the embedding activations* (F^emb') are sent back and
-      pushed through the bounded-staleness queue; the put that pops out
-      (from step t - tau) is applied by the PS-side optimizer [Alg.1 backward]
+      pushed through each table's bounded-staleness queue; the put that pops
+      out (from step t - tau) is applied by the PS-side optimizer
+                                                             [Alg.1 backward]
 
 Three modes reproduce the paper's comparison:
   * hybrid — emb staleness tau>0, dense sync              (Persia)
   * sync   — tau=0 everywhere                              (XDL-sync analog)
   * async  — emb stale AND dense grads applied tau_d steps late
              (Hogwild-style; XDL-async / aggressive-PaddlePaddle analog)
+
+The public surface is :class:`PersiaTrainer`, a facade over a multi-table
+:class:`~repro.core.collection.EmbeddingCollection`: it owns the pytree
+:class:`TrainState`, the fused jitted step, the decomposed (3-dispatch,
+donated) pipeline, eval, and full-state checkpoint/restore. The module-level
+free functions (``init_train_state`` / ``make_train_step`` / ...) are kept as
+thin single-table shims for the pre-collection API.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+import dataclasses
+from dataclasses import dataclass
 from functools import partial
 from typing import Any, Callable, Optional
 
@@ -27,6 +36,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import embedding_ps as PS
+from repro.core.collection import EmbeddingCollection
 from repro.core.embedding_ps import EmbeddingSpec
 
 
@@ -51,43 +61,47 @@ class TrainMode:
 
 @dataclass(frozen=True)
 class ModelAdapter:
-    """Bridges a concrete model family to the hybrid trainer."""
+    """Bridges a concrete model family to the hybrid trainer.
+
+    ``emb_ids`` maps a batch to a dict of per-table id arrays keyed by the
+    collection's table names; ``loss``/``predict`` receive the matching dict
+    of looked-up activations.
+    """
     cfg: Any
-    emb_spec: EmbeddingSpec
+    collection: EmbeddingCollection
     init_dense: Callable[[jax.Array], Any]
-    emb_ids: Callable[[dict], jax.Array]          # batch -> ids (any shape)
-    loss: Callable[[Any, jax.Array, dict], tuple] # (dense, acts, batch)
-    predict: Optional[Callable] = None            # (dense, acts, batch) -> preds
+    emb_ids: Callable[[dict], dict[str, jax.Array]]
+    loss: Callable[[Any, dict[str, jax.Array], dict], tuple]
+    predict: Optional[Callable] = None       # (dense, acts, batch) -> preds
+
+    @property
+    def emb_spec(self) -> EmbeddingSpec:
+        """Legacy single-table view (pre-collection API)."""
+        return _sole_table(self)[1]
 
 
-def init_train_state(adapter: ModelAdapter, mode: TrainMode, opt_init,
-                     key, batch_example=None, emb_shards: int = 1):
-    """batch_example: abstract or concrete batch (for queue shapes)."""
-    import dataclasses
-    kd, ke = jax.random.split(key)
-    dense = adapter.init_dense(kd)
-    spec = dataclasses.replace(adapter.emb_spec,
-                               staleness=mode.emb_staleness)
-    emb = PS.ps_init(ke, spec, emb_shards)
-    state = {
-        "dense": dense,
-        "opt": opt_init(dense),
-        "emb": emb,
-        "emb_queue": None,
-        "dense_queue": None,
-        "step": jnp.zeros((), jnp.int32),
-    }
-    if batch_example is not None:
-        ids = adapter.emb_ids(batch_example)
-        n_ids = 1
-        for s in ids.shape:
-            n_ids *= s
-        if mode.emb_staleness > 0:
-            state["emb_queue"] = PS.queue_init(spec, (n_ids,), spec.dim)
-        if mode.dense_staleness > 0:
-            state["dense_queue"] = _dense_queue_init(dense,
-                                                     mode.dense_staleness)
-    return state, spec
+# -- the train state ----------------------------------------------------------
+
+@dataclass
+class TrainState:
+    """Everything one training run owns, as a single registered pytree:
+    dense params + optimizer, per-table PS states, per-table staleness
+    queues, the async-dense delay queue, and the step counter."""
+    dense: Any
+    opt: Any
+    emb: dict                  # name -> {"table", "acc"?}
+    emb_queue: Any             # name -> staleness FIFO | None
+    dense_queue: Any           # delay queue for 'async' mode | None
+    step: jax.Array
+
+    def replace(self, **kw) -> "TrainState":
+        return dataclasses.replace(self, **kw)
+
+
+jax.tree_util.register_dataclass(
+    TrainState,
+    data_fields=("dense", "opt", "emb", "emb_queue", "dense_queue", "step"),
+    meta_fields=())
 
 
 # -- dense gradient delay queue (async baseline) ------------------------------
@@ -117,19 +131,342 @@ def _dense_queue_push_pop(queue, grads):
             "filled": jnp.minimum(queue["filled"] + 1, n_tau)}, old
 
 
-# -- the train step ------------------------------------------------------------
+def _emb_grad_norm(agrads: dict) -> jax.Array:
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in agrads.values())
+    return jnp.sqrt(sq)
+
+
+# =============================================================================
+# PersiaTrainer — the unified facade
+# =============================================================================
+
+class PersiaTrainer:
+    """One object owning the whole hybrid training loop.
+
+    >>> trainer = PersiaTrainer(adapter, TrainMode.hybrid(3),
+    ...                         OptConfig(kind="adam", lr=3e-3))
+    >>> state = trainer.init(jax.random.PRNGKey(0), batch)
+    >>> state, metrics = trainer.step(state, batch)          # fused, donated
+    >>> state, metrics = trainer.decomposed_step(state, batch)  # 3 dispatches
+    >>> metrics = trainer.eval(state, batch)
+    >>> trainer.save(ckpt_dir, state)                        # full state
+    >>> state = trainer.restore(ckpt_dir)                    # bit-identical
+
+    ``opt`` is either an ``OptConfig`` or a pre-built ``(opt_init,
+    opt_update)`` pair. By default every table's staleness is overridden by
+    ``mode.emb_staleness`` (matching the legacy API); pass
+    ``per_table_staleness=True`` to honour each table's own
+    ``EmbeddingSpec.staleness`` (heterogeneous update policies).
+    """
+
+    def __init__(self, adapter: ModelAdapter, mode: TrainMode | None = None,
+                 opt: Any = None, lr_fn=None,
+                 per_table_staleness: bool = False):
+        from repro.optim.optimizers import OptConfig, make_optimizer
+        self.adapter = adapter
+        self.mode = mode or TrainMode.hybrid()
+        if opt is None:
+            opt = OptConfig()
+        if isinstance(opt, OptConfig):
+            self.opt_init, self.opt_update = make_optimizer(opt)
+        else:
+            self.opt_init, self.opt_update = opt
+        self.lr_fn = lr_fn
+        if per_table_staleness:
+            self.collection = adapter.collection
+        else:
+            self.collection = adapter.collection.with_staleness(
+                self.mode.emb_staleness)
+        self._fused = None
+        self._eval = None
+        self._decomposed = None
+
+    # -- init -----------------------------------------------------------------
+
+    def init(self, key, batch_example=None, emb_shards=1) -> TrainState:
+        """batch_example: abstract or concrete batch (for queue shapes).
+        Required whenever any staleness is in play — without it the queues
+        cannot be sized and tau>0 would silently train synchronously."""
+        max_tau = max((s.staleness for _, s in self.collection.items()),
+                      default=0)
+        if batch_example is None and \
+                (max_tau > 0 or self.mode.dense_staleness > 0):
+            raise ValueError(
+                "init() needs a batch_example to size the staleness queues "
+                f"(emb tau up to {max_tau}, dense tau_d="
+                f"{self.mode.dense_staleness})")
+        kd, ke = jax.random.split(key)
+        dense = self.adapter.init_dense(kd)
+        emb = self.collection.init(ke, emb_shards)
+        emb_queue = {n: None for n in self.collection.names}
+        dense_queue = None
+        if batch_example is not None:
+            ids = self.adapter.emb_ids(batch_example)
+            emb_queue = self.collection.queue_init(
+                {n: tuple(a.shape) for n, a in ids.items()})
+            if self.mode.dense_staleness > 0:
+                dense_queue = _dense_queue_init(dense,
+                                                self.mode.dense_staleness)
+        return TrainState(dense=dense, opt=self.opt_init(dense), emb=emb,
+                          emb_queue=emb_queue, dense_queue=dense_queue,
+                          step=jnp.zeros((), jnp.int32))
+
+    # -- fused step (one program, one schedule) -------------------------------
+
+    def train_step(self, state: TrainState, batch):
+        """The fused step as a pure traceable function (jit it yourself, or
+        use :meth:`step` for the cached donated jit)."""
+        adapter, coll, mode = self.adapter, self.collection, self.mode
+        ids = adapter.emb_ids(batch)
+        acts = coll.lookup(state.emb, ids)                      # Alg.1 fwd
+
+        def loss_fn(dense, acts_):
+            return adapter.loss(dense, acts_, batch)
+
+        (loss, metrics), (dgrads, agrads) = jax.value_and_grad(
+            loss_fn, argnums=(0, 1), has_aux=True)(state.dense, acts)
+
+        lr = self.lr_fn(state.step) if self.lr_fn is not None else None
+
+        # ---- dense side (Alg.2): synchronous, or delayed for 'async' ----
+        dense_queue = state.dense_queue
+        if mode.dense_staleness > 0 and dense_queue is not None:
+            dense_queue, dgrads_apply = _dense_queue_push_pop(dense_queue,
+                                                              dgrads)
+        else:
+            dgrads_apply = dgrads
+        dense, opt = self.opt_update(state.dense, dgrads_apply, state.opt,
+                                     lr=lr)
+
+        # ---- embedding side (Alg.1 bwd): async puts through the queues ----
+        emb, emb_queue = coll.hybrid_update(state.emb, state.emb_queue,
+                                            ids, agrads)
+
+        metrics = dict(metrics)
+        metrics["emb_grad_norm"] = _emb_grad_norm(agrads)
+        return state.replace(dense=dense, opt=opt, emb=emb,
+                             emb_queue=emb_queue, dense_queue=dense_queue,
+                             step=state.step + 1), metrics
+
+    def step(self, state: TrainState, batch):
+        """Fused step through a cached jit; donates ``state``."""
+        if self._fused is None:
+            self._fused = jax.jit(self.train_step, donate_argnums=(0,))
+        return self._fused(state, batch)
+
+    # -- decomposed pipeline ---------------------------------------------------
+    #
+    # The fused step is what the dry-run lowers (one program, one schedule).
+    # At runtime Persia's architecture is *decomposed*: the embedding get,
+    # the dense step and the embedding put are separate dispatches (separate
+    # RPCs in the paper), which lets the runtime overlap them and — crucially
+    # — lets XLA alias the donated PS tables in the put (in-place row
+    # scatter, O(#puts) instead of an O(rows) defensive copy).
+
+    def decomposed_fns(self):
+        """(lookup_fn, dense_step, emb_put) — separate jitted dispatches."""
+        if self._decomposed is not None:
+            return self._decomposed
+        adapter, coll, mode = self.adapter, self.collection, self.mode
+        lr_fn, opt_update = self.lr_fn, self.opt_update
+
+        @jax.jit
+        def lookup_fn(emb_states, ids):
+            return coll.lookup(emb_states, ids)                # Alg.1 fwd
+
+        @partial(jax.jit, donate_argnums=(0, 1, 2))
+        def dense_step(dense, opt, dense_queue, acts, batch, step_no):
+            def loss_fn(dense_, acts_):                        # Alg.2
+                return adapter.loss(dense_, acts_, batch)
+
+            (loss, metrics), (dgrads, agrads) = jax.value_and_grad(
+                loss_fn, argnums=(0, 1), has_aux=True)(dense, acts)
+            lr = lr_fn(step_no) if lr_fn is not None else None
+            if mode.dense_staleness > 0 and dense_queue is not None:
+                dense_queue, dgrads = _dense_queue_push_pop(dense_queue,
+                                                            dgrads)
+            dense, opt = opt_update(dense, dgrads, opt, lr=lr)
+            metrics = dict(metrics)
+            metrics["emb_grad_norm"] = _emb_grad_norm(agrads)
+            return dense, opt, dense_queue, agrads, metrics
+
+        @partial(jax.jit, donate_argnums=(0, 1))
+        def emb_put(emb_states, queues, ids, agrads):          # Alg.1 bwd
+            return coll.hybrid_update(emb_states, queues, ids, agrads)
+
+        self._decomposed = (lookup_fn, dense_step, emb_put)
+        return self._decomposed
+
+    def decomposed_step(self, state: TrainState, batch):
+        """One iteration through the decomposed pipeline (host-driven)."""
+        lookup_fn, dense_step, emb_put = self.decomposed_fns()
+        ids = self.adapter.emb_ids(batch)
+        acts = lookup_fn(state.emb, ids)
+        dense, opt, dense_queue, agrads, metrics = dense_step(
+            state.dense, state.opt, state.dense_queue, acts, batch,
+            state.step)
+        # the put is dispatched without blocking — the async leg of the hybrid
+        emb, queues = emb_put(state.emb, state.emb_queue, ids, agrads)
+        return state.replace(dense=dense, opt=opt, dense_queue=dense_queue,
+                             emb=emb, emb_queue=queues,
+                             step=state.step + 1), metrics
+
+    # -- eval / predict --------------------------------------------------------
+
+    def eval_step(self, state: TrainState, batch):
+        ids = self.adapter.emb_ids(batch)
+        acts = self.collection.lookup(state.emb, ids)
+        _, metrics = self.adapter.loss(state.dense, acts, batch)
+        return metrics
+
+    def eval(self, state: TrainState, batch):
+        if self._eval is None:
+            self._eval = jax.jit(self.eval_step)
+        return self._eval(state, batch)
+
+    def lookup(self, state: TrainState, batch):
+        return self.collection.lookup(state.emb,
+                                      self.adapter.emb_ids(batch))
+
+    def predict(self, state: TrainState, batch):
+        if self.adapter.predict is None:
+            raise ValueError("adapter has no predict fn")
+        acts = self.lookup(state, batch)
+        return self.adapter.predict(state.dense, acts, batch)
+
+    # -- checkpoint (full state, paper §4.2.4 policy) --------------------------
+    #
+    # The dense tree (params + optimizer + delay queue) is saved atomically;
+    # the per-table PS states and staleness queues ride in the independent
+    # embedding blob. Everything round-trips — including the adagrad
+    # accumulators and queue contents — so a restore resumes bit-identically.
+
+    def save(self, directory: str, state: TrainState,
+             step: int | None = None) -> str:
+        from repro.checkpoint.ckpt import save_checkpoint
+        import numpy as np
+        step = int(state.step) if step is None else int(step)
+        to_np = lambda t: jax.tree.map(np.asarray, t)  # noqa: E731
+        dense_tree = {"dense": to_np(state.dense), "opt": to_np(state.opt)}
+        if state.dense_queue is not None:
+            dense_tree["dense_queue"] = to_np(state.dense_queue)
+        emb_tree = {"emb": to_np(state.emb),
+                    "emb_queue": to_np(state.emb_queue)}
+        return save_checkpoint(directory, step, dense_tree, emb_tree)
+
+    def restore(self, directory: str, step: int | None = None) -> TrainState:
+        from repro.checkpoint.ckpt import load_checkpoint
+        step_no, dense_tree, emb_tree = load_checkpoint(directory, step)
+        if not emb_tree or "emb" not in emb_tree or "dense" not in dense_tree:
+            raise ValueError(
+                f"checkpoint at {directory!r} is not a PersiaTrainer "
+                "full-state snapshot (no per-table embedding blob) — it was "
+                "likely written by the legacy save_checkpoint API")
+        want, got = set(self.collection.names), set(emb_tree["emb"])
+        if want != got:
+            raise ValueError(
+                f"checkpoint tables {sorted(got)} do not match this "
+                f"trainer's collection {sorted(want)}")
+        for n in self.collection.names:
+            spec, table = self.collection[n], emb_tree["emb"][n]["table"]
+            if table.shape[1] != spec.dim or table.shape[0] < spec.rows:
+                raise ValueError(
+                    f"checkpoint table {n!r} has shape {tuple(table.shape)} "
+                    f"but this trainer's spec wants >= ({spec.rows}, "
+                    f"{spec.dim}) — collection changed since the save?")
+        queues = emb_tree.get("emb_queue", {})
+        emb_queue = {n: queues.get(n) for n in self.collection.names}
+        for n in self.collection.names:
+            tau, q = self.collection[n].staleness, emb_queue[n]
+            if (tau > 0) != (q is not None) or \
+                    (q is not None and q["ids"].shape[0] != tau):
+                saved = 0 if q is None else int(q["ids"].shape[0])
+                raise ValueError(
+                    f"checkpoint table {n!r} was saved with staleness "
+                    f"tau={saved} but this trainer runs tau={tau} — "
+                    "restoring across modes would silently drop or bypass "
+                    "the pending-put queue; rebuild the trainer with the "
+                    "mode the checkpoint was trained under")
+        dq = dense_tree.get("dense_queue")
+        tau_d = self.mode.dense_staleness
+        dq_depth = 0 if dq is None else \
+            int(jax.tree.leaves(dq["grads"])[0].shape[0])
+        if (tau_d > 0) != (dq is not None) or dq_depth not in (0, tau_d):
+            raise ValueError(
+                f"checkpoint was saved with dense staleness tau_d="
+                f"{dq_depth} but this trainer runs tau_d={tau_d} — "
+                "rebuild the trainer with the mode the checkpoint was "
+                "trained under")
+        return TrainState(
+            dense=dense_tree["dense"], opt=dense_tree["opt"],
+            emb=emb_tree["emb"], emb_queue=emb_queue,
+            dense_queue=dq,
+            step=jnp.asarray(step_no, jnp.int32))
+
+
+# =============================================================================
+# Legacy single-table shims (pre-collection free-function API)
+# =============================================================================
+#
+# These keep the original dict-state surface working for adapters whose
+# collection holds exactly one table (the LM family). Multi-table models
+# must use PersiaTrainer. The step logic is intentionally duplicated rather
+# than delegated: the legacy factories receive opt_init and opt_update at
+# different call sites, which doesn't map onto one facade construction, and
+# freezing the old behavior here keeps the deprecated surface stable until
+# its callers are migrated.
+
+def _sole_table(adapter: ModelAdapter) -> tuple[str, EmbeddingSpec]:
+    items = adapter.collection.items()
+    if len(items) != 1:
+        raise ValueError(
+            "the legacy free-function API supports single-table adapters "
+            f"only (got {len(items)} tables); use PersiaTrainer instead")
+    return items[0]
+
+
+def init_train_state(adapter: ModelAdapter, mode: TrainMode, opt_init,
+                     key, batch_example=None, emb_shards: int = 1):
+    """batch_example: abstract or concrete batch (for queue shapes)."""
+    name, spec0 = _sole_table(adapter)
+    kd, ke = jax.random.split(key)
+    dense = adapter.init_dense(kd)
+    spec = dataclasses.replace(spec0, staleness=mode.emb_staleness)
+    emb = PS.ps_init(ke, spec, emb_shards)
+    state = {
+        "dense": dense,
+        "opt": opt_init(dense),
+        "emb": emb,
+        "emb_queue": None,
+        "dense_queue": None,
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if batch_example is not None:
+        ids = adapter.emb_ids(batch_example)[name]
+        n_ids = 1
+        for s in ids.shape:
+            n_ids *= s
+        if mode.emb_staleness > 0:
+            state["emb_queue"] = PS.queue_init(spec, (n_ids,), spec.dim)
+        if mode.dense_staleness > 0:
+            state["dense_queue"] = _dense_queue_init(dense,
+                                                     mode.dense_staleness)
+    return state, spec
+
 
 def make_train_step(adapter: ModelAdapter, spec: EmbeddingSpec,
                     mode: TrainMode, opt_update, lr_fn=None):
     """Returns train_step(state, batch) -> (state, metrics); jit-able,
-    lowerable on any mesh."""
+    lowerable on any mesh. Single-table legacy surface."""
+    name, _ = _sole_table(adapter)
 
     def train_step(state, batch):
-        ids = adapter.emb_ids(batch)
+        ids = adapter.emb_ids(batch)[name]
         acts = PS.lookup(state["emb"], spec, ids)                 # Alg.1 fwd
 
         def loss_fn(dense, acts_):
-            return adapter.loss(dense, acts_, batch)
+            return adapter.loss(dense, {name: acts_}, batch)
 
         (loss, metrics), (dgrads, agrads) = jax.value_and_grad(
             loss_fn, argnums=(0, 1), has_aux=True)(state["dense"], acts)
@@ -165,27 +502,18 @@ def make_train_step(adapter: ModelAdapter, spec: EmbeddingSpec,
     return train_step
 
 
-# -- decomposed pipeline -----------------------------------------------------
-#
-# The fused train_step above is what the dry-run lowers (one program, one
-# schedule). At runtime Persia's architecture is *decomposed*: the embedding
-# get, the dense step and the embedding put are separate dispatches (separate
-# RPCs in the paper), which lets the runtime overlap them and — crucially —
-# lets XLA alias the donated PS table in the put (in-place row scatter, O(#puts)
-# instead of an O(rows) defensive copy).
-
 def make_decomposed_fns(adapter: ModelAdapter, spec: EmbeddingSpec,
                         mode: TrainMode, opt_update, lr_fn=None):
-    from repro.core import embedding_ps as _PS
+    name, _ = _sole_table(adapter)
 
     @jax.jit
     def lookup_fn(emb_state, ids):
-        return _PS.lookup(emb_state, spec, ids)                # Alg.1 fwd
+        return PS.lookup(emb_state, spec, ids)                 # Alg.1 fwd
 
     @partial(jax.jit, donate_argnums=(0, 1))
     def dense_step(dense, opt, acts, batch, step_no):          # Alg.2
         def loss_fn(dense_, acts_):
-            return adapter.loss(dense_, acts_, batch)
+            return adapter.loss(dense_, {name: acts_}, batch)
 
         (loss, metrics), (dgrads, agrads) = jax.value_and_grad(
             loss_fn, argnums=(0, 1), has_aux=True)(dense, acts)
@@ -204,8 +532,9 @@ def make_decomposed_fns(adapter: ModelAdapter, spec: EmbeddingSpec,
 
 def decomposed_train_step(fns, state, batch, adapter):
     """One iteration through the decomposed pipeline (host-driven)."""
+    name, _ = _sole_table(adapter)
     lookup_fn, dense_step, emb_put = fns
-    ids = adapter.emb_ids(batch)
+    ids = adapter.emb_ids(batch)[name]
     acts = lookup_fn(state["emb"], ids)
     dense, opt, agrads, metrics = dense_step(state["dense"], state["opt"],
                                              acts, batch, state["step"])
@@ -217,12 +546,12 @@ def decomposed_train_step(fns, state, batch, adapter):
     return new_state, metrics
 
 
-# -- eval step -------------------------------------------------------------------
-
 def make_eval_step(adapter: ModelAdapter, spec: EmbeddingSpec):
+    name, _ = _sole_table(adapter)
+
     def eval_step(state, batch):
-        ids = adapter.emb_ids(batch)
+        ids = adapter.emb_ids(batch)[name]
         acts = PS.lookup(state["emb"], spec, ids)
-        _, metrics = adapter.loss(state["dense"], acts, batch)
+        _, metrics = adapter.loss(state["dense"], {name: acts}, batch)
         return metrics
     return eval_step

@@ -7,6 +7,10 @@ features, and a planted logistic ground truth so AUC is a meaningful,
 monotone-in-training signal. Scales follow Table 1 of the paper (sparse
 rows scaled down by a constant factor; Criteo-Syn keeps the paper's exact
 row counts for the capacity dry-runs where nothing is materialised).
+
+Batches carry ``ids`` of shape (B, n_fields, ids_per_field) with *per-field
+local* id spaces: field ``i`` indexes its own ``rows_per_field``-row table
+(matching the per-field tables that ``adapters.ctr_collection`` builds).
 """
 from __future__ import annotations
 
@@ -26,6 +30,17 @@ class CTRDataset:
     zipf_a: float = 1.2         # popularity skew
     seed: int = 0
 
+    @property
+    def rows_per_field(self) -> int:
+        """Rows of each field's own id space (per-field embedding table)."""
+        from repro.utils import default_field_rows
+        return default_field_rows(self.n_rows, self.n_fields)
+
+    def field_rows(self) -> tuple[int, ...]:
+        """Per-field table row counts, in field order — feed this to
+        ``adapters.ctr_collection(..., field_rows=...)``."""
+        return (self.rows_per_field,) * self.n_fields
+
     def sampler(self, batch_size: int, *, seed: int | None = None):
         """Infinite generator of batches (online-learning setting, no
         shuffling schema — paper §4.2.4).
@@ -35,7 +50,7 @@ class CTRDataset:
         varies just the samples drawn from it."""
         truth = np.random.default_rng(self.seed)
         rng = np.random.default_rng(self.seed if seed is None else seed)
-        rows_per_field = max(self.n_rows // self.n_fields, 4)
+        rows_per_field = self.rows_per_field
         # planted logistic model over hashed id buckets + dense features
         w_buckets = truth.standard_normal((self.n_fields, 256)) \
             .astype(np.float32)
@@ -51,9 +66,9 @@ class CTRDataset:
                 ((rows_per_field ** (1 - self.zipf_a) - 1) * u + 1)
                 ** (1 / (1 - self.zipf_a)) - 1)
             ranks = np.clip(ranks, 0, rows_per_field - 1).astype(np.int64)
-            # per-field offset so fields occupy disjoint row ranges
-            offs = (np.arange(self.n_fields) * rows_per_field)[None, :, None]
-            ids = ranks + offs
+            # per-field LOCAL ids: each field indexes its own embedding
+            # table from 0 (the multi-table EmbeddingCollection layout)
+            ids = ranks
             # random multi-hot length: pad tail with -1
             lens = rng.integers(1, self.ids_per_field + 1,
                                 (batch_size, self.n_fields))

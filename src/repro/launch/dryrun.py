@@ -24,14 +24,14 @@ import jax.numpy as jnp
 from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config
 from repro.configs.base import InputShape, ModelConfig
 from repro.core import embedding_ps as PS
-from repro.core import hybrid
-from repro.core.hybrid import TrainMode
+from repro.core.collection import EmbeddingCollection
+from repro.core.hybrid import PersiaTrainer, TrainMode
 from repro.launch import input_specs as IS
 from repro.launch.mesh import (make_production_mesh, mesh_all_shards,
                                mesh_model_shards)
 from repro.launch import hlo_cost
 from repro.models import transformer as T
-from repro.optim.optimizers import OptConfig, make_optimizer
+from repro.optim.optimizers import OptConfig
 from repro.sharding import partition as PART
 from repro.sharding.partition import to_shardings
 from repro.core.adapters import lm_adapter
@@ -73,26 +73,20 @@ def _abstract(fn, *args, **kw):
 
 def build_train_case(cfg: ModelConfig, shape: InputShape, mesh):
     adapter = lm_adapter(cfg, dtype=COMPUTE_DTYPE)
-    import dataclasses
-    spec = dataclasses.replace(adapter.emb_spec, staleness=cfg.emb_staleness)
     mode = TrainMode("hybrid", cfg.emb_staleness, 0)
-    opt_init, opt_update = make_optimizer(OptConfig(kind="adam", lr=3e-4))
+    trainer = PersiaTrainer(adapter, mode, OptConfig(kind="adam", lr=3e-4))
     batch = IS.train_inputs(cfg, shape, COMPUTE_DTYPE)
     n_model = mesh_model_shards(mesh)
 
-    def init(key):
-        state, _ = hybrid.init_train_state(adapter, mode, opt_init, key,
-                                           batch, emb_shards=n_model)
-        return state
+    state_shape = _abstract(
+        lambda key: trainer.init(key, batch, emb_shards=n_model),
+        jax.random.PRNGKey(0))
 
-    state_shape = _abstract(init, jax.random.PRNGKey(0))
-    train_step = hybrid.make_train_step(adapter, spec, mode, opt_update)
-
-    state_specs = PART.state_specs(state_shape, spec)
+    state_specs = PART.train_state_specs(state_shape, trainer.collection)
     state_sh = to_shardings(mesh, state_specs, state_shape)
     batch_sh = to_shardings(mesh, _batch_specs(batch, mesh))
-    fn = train_step
-    return fn, (state_shape, batch), (state_sh, batch_sh), (0,)
+    return trainer.train_step, (state_shape, batch), \
+        (state_sh, batch_sh), (0,)
 
 
 def _batch_specs(batch, mesh):
@@ -114,22 +108,24 @@ def _serve_params(cfg: ModelConfig, mesh):
     n_model = mesh_model_shards(mesh)
     spec = PS.EmbeddingSpec(rows=cfg.vocab_size, dim=cfg.d_model,
                             mode="model", dtype=COMPUTE_DTYPE)
-    emb = {"table": SDS((spec.padded_rows(n_model), cfg.d_model),
-                        COMPUTE_DTYPE)}
+    coll = EmbeddingCollection.single("vocab", spec)
+    emb = {"vocab": {"table": SDS((spec.padded_rows(n_model), cfg.d_model),
+                                  COMPUTE_DTYPE)}}
     dense = _abstract(lambda k: T.init_dense(cfg, k, COMPUTE_DTYPE),
                       jax.random.PRNGKey(0))
     params = {"emb": emb, "dense": dense}
-    specs = {"emb": {"table": PS.table_spec(spec)},
+    specs = {"emb": PART.collection_state_specs(emb, coll),
              "dense": PART.dense_param_specs(dense)}
-    return params, specs, spec
+    return params, specs, coll
 
 
 def build_prefill_case(cfg: ModelConfig, shape: InputShape, mesh):
-    params, pspecs, spec = _serve_params(cfg, mesh)
+    params, pspecs, coll = _serve_params(cfg, mesh)
     batch = IS.prefill_inputs(cfg, shape, COMPUTE_DTYPE)
 
     def prefill_fn(params, batch):
-        acts = PS.lookup(params["emb"], spec, batch["tokens"])
+        acts = coll.lookup(params["emb"],
+                           {"vocab": batch["tokens"]})["vocab"]
         return T.prefill(cfg, params["dense"], acts,
                          memory=batch.get("memory"))
 
@@ -139,7 +135,7 @@ def build_prefill_case(cfg: ModelConfig, shape: InputShape, mesh):
 
 
 def build_decode_case(cfg: ModelConfig, shape: InputShape, mesh):
-    params, pspecs, spec = _serve_params(cfg, mesh)
+    params, pspecs, coll = _serve_params(cfg, mesh)
     batch = IS.decode_inputs(cfg, shape)
     B, S = shape.global_batch, shape.seq_len
     mlen = IS.memory_len(cfg)
@@ -148,7 +144,8 @@ def build_decode_case(cfg: ModelConfig, shape: InputShape, mesh):
         lambda: T.cache_init(cfg, B, S, COMPUTE_DTYPE, memory_len=mlen))
 
     def decode_fn(params, caches, batch):
-        acts = PS.lookup(params["emb"], spec, batch["tokens"])
+        acts = coll.lookup(params["emb"],
+                           {"vocab": batch["tokens"]})["vocab"]
         return T.decode_step(cfg, params["dense"], acts, caches)
 
     params_sh = to_shardings(mesh, pspecs, params)

@@ -16,15 +16,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import embedding_ps as PS
+from repro.core.collection import EmbeddingCollection
+from repro.core.embedding_ps import EmbeddingSpec
 from repro.models import transformer as T
 
 
 def serve(cfg, batch=4, prompt_len=32, gen=16, seed=0, temperature=0.0):
     key = jax.random.PRNGKey(seed)
     dense = T.init_dense(cfg, key)
-    spec = PS.EmbeddingSpec(rows=cfg.vocab_size, dim=cfg.d_model)
-    emb = PS.ps_init(key, spec)
+    coll = EmbeddingCollection.single("vocab", EmbeddingSpec(
+        rows=cfg.vocab_size, dim=cfg.d_model))
+    emb = coll.init(key)
     rng = np.random.default_rng(seed)
     prompts = jnp.asarray(rng.integers(0, cfg.vocab_size,
                                        (batch, prompt_len)), jnp.int32)
@@ -39,13 +41,13 @@ def serve(cfg, batch=4, prompt_len=32, gen=16, seed=0, temperature=0.0):
 
     @jax.jit
     def prefill_fn(emb_state, dense, prompts, memory):
-        acts = PS.lookup(emb_state, spec, prompts)
+        acts = coll.lookup(emb_state, {"vocab": prompts})["vocab"]
         return T.prefill(cfg, dense, acts, memory=memory,
                          max_len=prompt_len + gen)
 
     @jax.jit
     def decode_fn(emb_state, dense, tok, caches, key):
-        acts = PS.lookup(emb_state, spec, tok)
+        acts = coll.lookup(emb_state, {"vocab": tok})["vocab"]
         logits, caches = T.decode_step(cfg, dense, acts, caches)
         logits = logits[:, 0, : cfg.vocab_size]
         if temperature > 0:

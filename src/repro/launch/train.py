@@ -5,11 +5,20 @@ Usage:
   PYTHONPATH=src python -m repro.launch.train --task ctr --dataset taobao_ad \
       --mode hybrid --steps 300 --batch 512
   PYTHONPATH=src python -m repro.launch.train --task lm --steps 200 --batch 8
+  PYTHONPATH=src python -m repro.launch.train --task ctr --pipeline decomposed \
+      --ckpt-dir /tmp/ck --resume
+
+Both tasks run through the PersiaTrainer facade: the CTR path trains one
+embedding table per ID feature field (the multi-table EmbeddingCollection);
+checkpoints carry the FULL train state — dense params, optimizer moments,
+every PS table with its adagrad accumulator, and the staleness queues — so
+``--resume`` continues bit-identically.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 
 import jax
@@ -17,13 +26,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import BlockCfg, ModelConfig
-from repro.configs import recsys_configs as RC
-from repro.core import adapters, embedding_ps as PS, hybrid
-from repro.core.hybrid import TrainMode
+from repro.core import adapters
+from repro.core.hybrid import PersiaTrainer, TrainMode
 from repro.checkpoint import CheckpointManager
-from repro.data.ctr import CTR_BENCHMARKS, CTRDataset
+from repro.data.ctr import CTR_BENCHMARKS
 from repro.data.lm import lm_batches
-from repro.optim.optimizers import OptConfig, make_optimizer
+from repro.optim.optimizers import OptConfig
 
 
 def scaled_recsys_cfg(dataset: str, scale: float = 1.0) -> ModelConfig:
@@ -54,63 +62,86 @@ def mode_from_name(name: str, tau: int) -> TrainMode:
     raise ValueError(name)
 
 
+def _step_fn(trainer: PersiaTrainer, pipeline: str):
+    if pipeline == "decomposed":
+        return trainer.decomposed_step
+    return trainer.step
+
+
 def train_ctr(args):
     ds = CTR_BENCHMARKS[args.dataset]
     cfg = scaled_recsys_cfg(args.dataset)
-    adapter = adapters.recsys_adapter(cfg, lr=args.emb_lr)
-    opt_init, opt_update = make_optimizer(OptConfig(kind="adam", lr=args.lr))
+    adapter = adapters.recsys_adapter(cfg, lr=args.emb_lr,
+                                      field_rows=ds.field_rows())
     mode = mode_from_name(args.mode, args.tau)
+    trainer = PersiaTrainer(adapter, mode,
+                            OptConfig(kind="adam", lr=args.lr))
     it = ds.sampler(args.batch)
     eval_it = ds.sampler(args.batch, seed=999)
     batch = {k: jnp.asarray(v) for k, v in next(it).items()}
-    state, spec = hybrid.init_train_state(adapter, mode, opt_init,
-                                          jax.random.PRNGKey(args.seed), batch)
-    step_fn = jax.jit(hybrid.make_train_step(adapter, spec, mode, opt_update),
-                      donate_argnums=(0,))
+    start = 0
     mgr = CheckpointManager(args.ckpt_dir, every=args.ckpt_every) \
         if args.ckpt_dir else None
+    if args.resume and not mgr:
+        raise SystemExit("--resume requires --ckpt-dir")
+    have_ckpt = mgr and os.path.isdir(args.ckpt_dir) and \
+        any(d.startswith("step_") for d in os.listdir(args.ckpt_dir))
+    if args.resume and not have_ckpt:
+        print(f"--resume: no checkpoints under {args.ckpt_dir!r}, "
+              "starting fresh")
+    if args.resume and have_ckpt:
+        state = trainer.restore(args.ckpt_dir)
+        start = int(state.step)
+        # fast-forward the deterministic streams to where the run stopped,
+        # so resumed training sees the batches an uninterrupted run would
+        for _ in range(start):
+            next(it)
+        for _ in range(start // args.eval_every):
+            next(eval_it)
+        print(f"resumed full state from step {start}")
+    else:
+        state = trainer.init(jax.random.PRNGKey(args.seed), batch)
+    step_fn = _step_fn(trainer, args.pipeline)
 
     history = []
     t0 = time.time()
-    for step in range(args.steps):
+    for step in range(start, args.steps):
         b = {k: jnp.asarray(v) for k, v in next(it).items()}
         state, metrics = step_fn(state, b)
         if (step + 1) % args.eval_every == 0:
             eb = {k: jnp.asarray(v) for k, v in next(eval_it).items()}
-            acts = PS.lookup(state["emb"], spec, eb["ids"])
-            preds = adapter.predict(state["dense"], acts, eb)
+            preds = trainer.predict(state, eb)
             a = adapters.auc(np.asarray(eb["labels"]), np.asarray(preds))
             dt = time.time() - t0
-            thr = (step + 1) * args.batch / dt
+            thr = (step + 1 - start) * args.batch / dt
             print(f"step {step+1:5d} loss {float(metrics['loss']):.4f} "
                   f"AUC {a:.4f} thr {thr:,.0f} samples/s")
             history.append({"step": step + 1, "time_s": dt,
                             "loss": float(metrics["loss"]), "auc": a,
                             "throughput": thr})
         if mgr:
-            mgr.maybe_save(step + 1, state["dense"],
-                           {"table": state["emb"]["table"]})
+            mgr.maybe_save_state(step + 1, trainer, state)
     if args.out:
         with open(args.out, "w") as f:
             json.dump({"mode": args.mode, "dataset": args.dataset,
-                       "history": history}, f, indent=1)
+                       "pipeline": args.pipeline, "history": history}, f,
+                      indent=1)
     return history
 
 
 def train_lm(args):
     cfg = small_lm_cfg()
     adapter = adapters.lm_adapter(cfg, lr=args.emb_lr)
-    opt_init, opt_update = make_optimizer(OptConfig(kind="adam", lr=args.lr))
     mode = mode_from_name(args.mode, args.tau)
+    trainer = PersiaTrainer(adapter, mode,
+                            OptConfig(kind="adam", lr=args.lr))
     it = lm_batches(cfg.vocab_size, args.batch, args.seq_len)
     batch = {k: jnp.asarray(v) for k, v in next(it).items()}
-    state, spec = hybrid.init_train_state(adapter, mode, opt_init,
-                                          jax.random.PRNGKey(args.seed), batch)
-    n_params = sum(x.size for x in jax.tree.leaves(state["dense"]))
+    state = trainer.init(jax.random.PRNGKey(args.seed), batch)
+    n_params = sum(x.size for x in jax.tree.leaves(state.dense))
     print(f"dense params: {n_params/1e6:.1f}M + emb "
-          f"{state['emb']['table'].size/1e6:.1f}M")
-    step_fn = jax.jit(hybrid.make_train_step(adapter, spec, mode, opt_update),
-                      donate_argnums=(0,))
+          f"{state.emb['vocab']['table'].size/1e6:.1f}M")
+    step_fn = _step_fn(trainer, args.pipeline)
     history = []
     t0 = time.time()
     for step in range(args.steps):
@@ -135,6 +166,8 @@ def main():
     ap.add_argument("--dataset", default="taobao_ad")
     ap.add_argument("--mode", choices=["sync", "hybrid", "async"],
                     default="hybrid")
+    ap.add_argument("--pipeline", choices=["fused", "decomposed"],
+                    default="fused")
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--batch", type=int, default=512)
     ap.add_argument("--seq-len", type=int, default=128)
@@ -144,12 +177,15 @@ def main():
     ap.add_argument("--eval-every", type=int, default=25)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--resume", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
     if args.task == "ctr":
         train_ctr(args)
     else:
+        if args.resume:
+            raise SystemExit("--resume is only supported for --task ctr")
         train_lm(args)
 
 

@@ -18,8 +18,11 @@ from repro.utils import shard
 from repro.models.layers import dense_init
 
 
-def recsys_init(cfg, key, dtype=jnp.float32):
-    d_in = cfg.n_id_fields * cfg.emb_dim + cfg.n_dense_features
+def recsys_init(cfg, key, dtype=jnp.float32, d_in=None):
+    """d_in overrides the pooled-embedding input width (heterogeneous
+    per-table dims sum to something other than n_id_fields * emb_dim)."""
+    if d_in is None:
+        d_in = cfg.n_id_fields * cfg.emb_dim + cfg.n_dense_features
     dims = (d_in,) + tuple(cfg.mlp_dims) + (cfg.n_tasks,)
     ks = jax.random.split(key, len(dims))
     layers = []
@@ -41,25 +44,46 @@ def pool_bags(acts, ids):
     return jnp.sum(acts * m, axis=2)                                # (B, F, D)
 
 
-def recsys_forward(cfg, params, emb_acts, ids, dense_feats):
-    pooled = pool_bags(emb_acts, ids)                               # (B,F,D)
-    B = pooled.shape[0]
-    x = pooled.reshape(B, -1)
-    if cfg.n_dense_features:
-        x = jnp.concatenate([x, dense_feats.astype(x.dtype)], axis=-1)
-    x = shard(x, ("pod", "data"), None)
+def pool_bag(acts, ids):
+    """Sum-pool one table's multi-hot bag: (B, L, D), (B, L) -> (B, D)."""
+    m = (ids >= 0).astype(acts.dtype)[..., None]
+    return jnp.sum(acts * m, axis=1)
+
+
+def _mlp(params, x):
     n = len(params["mlp"])
     for i, lyr in enumerate(params["mlp"]):
         x = x @ lyr["w"] + lyr["b"]
         if i < n - 1:
             x = jax.nn.relu(x)
-    return x                                                        # (B,n_tasks)
+    return x
 
 
-def recsys_loss(cfg, params, emb_acts, batch):
-    """Binary cross-entropy per task (CTR-style)."""
-    logits = recsys_forward(cfg, params, emb_acts, batch["ids"],
-                            batch.get("dense"))
+def recsys_forward_tables(cfg, params, acts, ids, dense_feats):
+    """Multi-table forward: per-table pooled bags concatenated in SORTED
+    table-name order (dims may differ per table), then the shared FFNN.
+
+    acts: {name: (B, L_t, D_t)}; ids: {name: (B, L_t)} with -1 padding.
+    Sorted order is load-bearing: jax rebuilds dict pytrees key-sorted when
+    they cross a jit/grad flatten boundary, so iterating insertion order
+    would wire the MLP input differently in the train and eval paths.
+    """
+    pooled = [pool_bag(acts[n], ids[n]) for n in sorted(acts)]  # [(B, D_t)]
+    x = jnp.concatenate(pooled, axis=-1)
+    if cfg.n_dense_features:
+        x = jnp.concatenate([x, dense_feats.astype(x.dtype)], axis=-1)
+    x = shard(x, ("pod", "data"), None)
+    return _mlp(params, x)                                      # (B,n_tasks)
+
+
+def recsys_loss_tables(cfg, params, acts, ids, batch):
+    """Binary cross-entropy per task (CTR-style), multi-table front-end."""
+    logits = recsys_forward_tables(cfg, params, acts, ids,
+                                   batch.get("dense"))
+    return _bce_loss(logits, batch)
+
+
+def _bce_loss(logits, batch):
     y = batch["labels"].astype(jnp.float32)
     z = logits.astype(jnp.float32)
     # stable BCE-with-logits
@@ -68,3 +92,20 @@ def recsys_loss(cfg, params, emb_acts, batch):
     metrics = {"loss": loss,
                "pred_mean": jnp.mean(jax.nn.sigmoid(z))}
     return loss, metrics
+
+
+def recsys_forward(cfg, params, emb_acts, ids, dense_feats):
+    pooled = pool_bags(emb_acts, ids)                               # (B,F,D)
+    B = pooled.shape[0]
+    x = pooled.reshape(B, -1)
+    if cfg.n_dense_features:
+        x = jnp.concatenate([x, dense_feats.astype(x.dtype)], axis=-1)
+    x = shard(x, ("pod", "data"), None)
+    return _mlp(params, x)                                          # (B,n_tasks)
+
+
+def recsys_loss(cfg, params, emb_acts, batch):
+    """Binary cross-entropy per task (CTR-style)."""
+    logits = recsys_forward(cfg, params, emb_acts, batch["ids"],
+                            batch.get("dense"))
+    return _bce_loss(logits, batch)

@@ -93,7 +93,7 @@ def queue_specs(queue):
 
 
 def state_specs(state, emb_spec: EmbeddingSpec):
-    """Spec tree for the hybrid train state."""
+    """Spec tree for the legacy (dict, single-table) hybrid train state."""
     dense = dense_param_specs(state["dense"])
     return {
         "dense": dense,
@@ -105,6 +105,32 @@ def state_specs(state, emb_spec: EmbeddingSpec):
             "ptr": P(), "filled": P()},
         "step": P(),
     }
+
+
+def collection_state_specs(emb_states, collection):
+    """Per-table PS-state specs for an EmbeddingCollection's state dict."""
+    return {n: emb_state_specs(emb_states[n], collection[n])
+            for n in emb_states}
+
+
+def collection_queue_specs(queues):
+    return {n: queue_specs(q) for n, q in queues.items()}
+
+
+def train_state_specs(state, collection):
+    """Spec tree for a PersiaTrainer TrainState (mirrors its pytree)."""
+    from repro.core.hybrid import TrainState
+    dense = dense_param_specs(state.dense)
+    return TrainState(
+        dense=dense,
+        opt=_opt_specs(state.opt, dense),
+        emb=collection_state_specs(state.emb, collection),
+        emb_queue=collection_queue_specs(state.emb_queue),
+        dense_queue=None if state.dense_queue is None else {
+            "grads": jax.tree.map(lambda s: P(None, *s), dense),
+            "ptr": P(), "filled": P()},
+        step=P(),
+    )
 
 
 def _opt_specs(opt_state, dense_specs):

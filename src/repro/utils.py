@@ -144,6 +144,13 @@ class Policy:
         raise ValueError(f"unknown policy {name!r}")
 
 
+def default_field_rows(total_rows: int, n_fields: int) -> int:
+    """Rows of each field's id space when one flat row budget is split
+    evenly over fields — the single source of the formula shared by
+    CTRDataset (id generation) and ctr_collection (table sizing)."""
+    return max(total_rows // max(n_fields, 1), 4)
+
+
 def cdiv(a: int, b: int) -> int:
     return -(-a // b)
 

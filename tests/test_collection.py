@@ -1,0 +1,328 @@
+"""EmbeddingCollection + PersiaTrainer semantics.
+
+* multi-table lookup/update parity against an equivalent single flat table
+  (per-field tables are a partition of one big id space);
+* heterogeneous per-table (rows, dim, optimizer, staleness) end-to-end
+  training in both fused and decomposed modes;
+* full-state checkpoint round-trip: resumed training is bit-identical to an
+  uninterrupted run, including the adagrad accumulators and queues.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core import adapters, embedding_ps as PS
+from repro.core.collection import EmbeddingCollection
+from repro.core.embedding_ps import EmbeddingSpec
+from repro.core.hybrid import PersiaTrainer, TrainMode
+from repro.data.ctr import CTRDataset
+from repro.optim.optimizers import OptConfig
+
+F, R, D = 4, 64, 8          # fields x rows-per-field x dim
+
+
+def _uniform_collection(optimizer="sgd", lr=0.5, staleness=0):
+    return EmbeddingCollection.from_dict({
+        f"f{i}": EmbeddingSpec(rows=R, dim=D, optimizer=optimizer, lr=lr,
+                               staleness=staleness)
+        for i in range(F)})
+
+
+def test_collection_registry_basics():
+    coll = _uniform_collection()
+    assert coll.names == ("f0", "f1", "f2", "f3")
+    assert len(coll) == F and "f2" in coll
+    assert coll["f1"].rows == R
+    assert coll.total_rows == F * R
+    assert coll.total_params == F * R * D
+    taued = coll.with_staleness(5)
+    assert all(s.staleness == 5 for _, s in taued.items())
+    with pytest.raises(KeyError):
+        coll["nope"]
+    states = coll.init(jax.random.PRNGKey(0))
+    with pytest.raises(KeyError):
+        coll.lookup(states, {"ghost": jnp.zeros((2,), jnp.int32)})
+
+
+def test_collection_rejects_codec_hostile_names():
+    spec = EmbeddingSpec(rows=8, dim=4)
+    for bad in ("", "a/b", "0", "42"):
+        with pytest.raises(ValueError, match="table name"):
+            EmbeddingCollection.single(bad, spec)
+    with pytest.raises(ValueError, match="duplicate"):
+        EmbeddingCollection((("a", spec), ("a", spec)))
+
+
+def test_init_requires_batch_example_for_stale_modes():
+    adapter = adapters.recsys_adapter(HET_CFG, collection=HET)
+    trainer = PersiaTrainer(adapter, TrainMode.hybrid(3))
+    with pytest.raises(ValueError, match="batch_example"):
+        trainer.init(jax.random.PRNGKey(0))
+    # fully synchronous trainers can still init without a batch
+    sync = PersiaTrainer(adapter, TrainMode.sync())
+    state = sync.init(jax.random.PRNGKey(0))
+    assert all(q is None for q in state.emb_queue.values())
+
+
+def _flat_equivalent(field_states):
+    """Build the single flat table holding the same row values: global id
+    i*R + j lands where the flat uniform shuffle puts it."""
+    flat_spec = EmbeddingSpec(rows=F * R, dim=D, optimizer="sgd", lr=0.5)
+    table = np.zeros((F * R, D), np.float32)
+    for i, st in enumerate(field_states.values()):
+        gpos = np.asarray(PS.shuffle_pos(jnp.arange(R) + i * R, F * R))
+        lpos = np.asarray(PS.shuffle_pos(jnp.arange(R), R))
+        table[gpos] = np.asarray(st["table"])[lpos]
+    return flat_spec, {"table": jnp.asarray(table)}
+
+
+def test_multi_table_lookup_parity_with_flat_table():
+    coll = _uniform_collection()
+    states = coll.init(jax.random.PRNGKey(7))
+    flat_spec, flat_state = _flat_equivalent(states)
+
+    rng = np.random.default_rng(0)
+    ids = rng.integers(-1, R, (16, F, 3)).astype(np.int32)
+    per_field = {f"f{i}": jnp.asarray(ids[:, i]) for i in range(F)}
+    acts = coll.lookup(states, per_field)
+
+    offs = (np.arange(F) * R)[None, :, None]
+    flat_ids = np.where(ids >= 0, ids + offs, -1).astype(np.int32)
+    flat_acts = PS.lookup(flat_state, flat_spec, jnp.asarray(flat_ids))
+
+    for i in range(F):
+        np.testing.assert_allclose(np.asarray(acts[f"f{i}"]),
+                                   np.asarray(flat_acts[:, i]), atol=1e-6)
+
+
+def test_multi_table_update_parity_with_flat_table():
+    coll = _uniform_collection()
+    states = coll.init(jax.random.PRNGKey(7))
+    flat_spec, flat_state = _flat_equivalent(states)
+
+    rng = np.random.default_rng(1)
+    ids = rng.integers(-1, R, (8, F, 3)).astype(np.int32)
+    grads = rng.standard_normal((8, F, 3, D)).astype(np.float32)
+    per_field_ids = {f"f{i}": jnp.asarray(ids[:, i]) for i in range(F)}
+    per_field_g = {f"f{i}": jnp.asarray(grads[:, i]) for i in range(F)}
+    new_states = coll.apply_put(states, per_field_ids, per_field_g)
+
+    offs = (np.arange(F) * R)[None, :, None]
+    flat_ids = np.where(ids >= 0, ids + offs, -1).astype(np.int32)
+    new_flat = PS.apply_put(flat_state, flat_spec,
+                            jnp.asarray(flat_ids).reshape(-1),
+                            jnp.asarray(grads).reshape(-1, D))
+
+    # every row of every field must match the flat table's updated row
+    probe = {f"f{i}": jnp.arange(R, dtype=jnp.int32) for i in range(F)}
+    after = coll.lookup(new_states, probe)
+    flat_probe = jnp.asarray(
+        np.concatenate([np.arange(R) + i * R for i in range(F)])
+        .astype(np.int32))
+    flat_after = PS.lookup(new_flat, flat_spec, flat_probe)
+    for i in range(F):
+        np.testing.assert_allclose(np.asarray(after[f"f{i}"]),
+                                   np.asarray(flat_after[i * R:(i + 1) * R]),
+                                   atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous tables end-to-end (the acceptance scenario)
+# ---------------------------------------------------------------------------
+
+HET = EmbeddingCollection.from_dict({
+    "user": EmbeddingSpec(rows=128, dim=16, optimizer="adagrad", lr=5e-2,
+                          staleness=0),
+    "item": EmbeddingSpec(rows=64, dim=8, optimizer="sgd", lr=1e-2,
+                          staleness=2),
+    "ctx": EmbeddingSpec(rows=32, dim=4, optimizer="adagrad", lr=5e-2,
+                         staleness=4),
+})
+HET_CFG = ModelConfig(name="het", arch_type="recsys", n_id_fields=3,
+                      ids_per_field=3, emb_dim=0, emb_rows=0,
+                      n_dense_features=4, mlp_dims=(32, 16), n_tasks=1)
+
+
+def _het_batches(n, batch=32, seed=0):
+    rng = np.random.default_rng(seed)
+    rows = [HET[n_].rows for n_ in HET.names]
+    out = []
+    for _ in range(n):
+        ids = np.stack([rng.integers(-1, r, (batch, 3)) for r in rows],
+                       axis=1).astype(np.int32)
+        out.append({
+            "ids": jnp.asarray(ids),
+            "dense": jnp.asarray(rng.standard_normal((batch, 4))
+                                 .astype(np.float32)),
+            "labels": jnp.asarray((rng.random((batch, 1)) < 0.3)
+                                  .astype(np.float32)),
+        })
+    return out
+
+
+def _het_trainer():
+    adapter = adapters.recsys_adapter(HET_CFG, collection=HET)
+    return PersiaTrainer(adapter, TrainMode.hybrid(1),
+                         OptConfig(kind="adam", lr=5e-3),
+                         per_table_staleness=True)
+
+
+def test_train_and_eval_paths_agree_on_unsorted_names():
+    """Regression: jax re-sorts dict pytrees at jit/grad flatten boundaries,
+    so the multi-table concat order must not depend on dict insertion order
+    (HET's names are deliberately not lexicographically sorted)."""
+    trainer = _het_trainer()
+    b = _het_batches(1, seed=11)[0]
+    state = trainer.init(jax.random.PRNGKey(2), b)
+    m_eval = trainer.eval(state, b)                    # eval path (no grad)
+    _, m_train = jax.jit(trainer.train_step)(state, b)  # grad path
+    np.testing.assert_allclose(float(m_eval["loss"]),
+                               float(m_train["loss"]), rtol=1e-6)
+    preds = trainer.predict(state, b)
+    assert np.isfinite(np.asarray(preds)).all()
+
+
+def test_heterogeneous_tables_train_fused_and_decomposed():
+    trainer = _het_trainer()
+    # per-table staleness survives the trainer (no mode-wide override)
+    assert [trainer.collection[n].staleness for n in HET.names] == [0, 2, 4]
+    batches = _het_batches(7)
+    s_f = trainer.init(jax.random.PRNGKey(0), batches[0])
+    s_d = trainer.init(jax.random.PRNGKey(0), batches[0])
+    assert s_f.emb_queue["user"] is None          # sync table: no queue
+    assert s_f.emb_queue["item"]["ids"].shape[0] == 2
+    assert s_f.emb_queue["ctx"]["ids"].shape[0] == 4
+    t0 = {n: np.asarray(st["table"]) for n, st in s_f.emb.items()}
+
+    for b in batches:
+        s_f, m_f = trainer.step(s_f, b)
+        s_d, m_d = trainer.decomposed_step(s_d, b)
+    assert np.isfinite(float(m_f["loss"]))
+    # fused == decomposed on every table and the dense stack
+    for n in HET.names:
+        np.testing.assert_allclose(np.asarray(s_f.emb[n]["table"]),
+                                   np.asarray(s_d.emb[n]["table"]),
+                                   atol=1e-5)
+    for a, b_ in zip(jax.tree.leaves(s_f.dense), jax.tree.leaves(s_d.dense)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_), atol=1e-5)
+    # every table learned (7 steps > max tau)
+    for n in HET.names:
+        assert not np.array_equal(np.asarray(s_f.emb[n]["table"]), t0[n]), n
+
+
+def test_heterogeneous_staleness_delays_per_table():
+    trainer = _het_trainer()
+    batches = _het_batches(5, seed=3)
+    state = trainer.init(jax.random.PRNGKey(1), batches[0])
+    t0 = {n: np.asarray(st["table"]) for n, st in state.emb.items()}
+    step = jax.jit(trainer.train_step)
+    state, _ = step(state, batches[0])
+    # tau=0 applies immediately; tau=2 and tau=4 still queued
+    assert not np.array_equal(np.asarray(state.emb["user"]["table"]),
+                              t0["user"])
+    assert np.array_equal(np.asarray(state.emb["item"]["table"]), t0["item"])
+    assert np.array_equal(np.asarray(state.emb["ctx"]["table"]), t0["ctx"])
+    state, _ = step(state, batches[1])
+    state, _ = step(state, batches[2])
+    assert not np.array_equal(np.asarray(state.emb["item"]["table"]),
+                              t0["item"])          # tau=2 put arrived
+    assert np.array_equal(np.asarray(state.emb["ctx"]["table"]), t0["ctx"])
+
+
+# ---------------------------------------------------------------------------
+# checkpoint: save -> restore -> continue == uninterrupted, bit for bit
+# ---------------------------------------------------------------------------
+
+def _flatten_named(state):
+    flat, _ = jax.tree_util.tree_flatten_with_path(state)
+    return {jax.tree_util.keystr(p): np.asarray(x) for p, x in flat}
+
+
+def test_checkpoint_resume_bit_identical(tmp_path):
+    cfg = ModelConfig(name="ck", arch_type="recsys", n_id_fields=4,
+                      ids_per_field=3, emb_dim=16, emb_rows=512,
+                      n_dense_features=4, mlp_dims=(32, 16), n_tasks=1)
+    ds = CTRDataset("ck", n_rows=512, n_fields=4, ids_per_field=3, n_dense=4)
+    it = ds.sampler(64)
+    batches = [{k: jnp.asarray(v) for k, v in next(it).items()}
+               for _ in range(9)]
+
+    def make_trainer():
+        adapter = adapters.recsys_adapter(cfg, lr=5e-2)
+        return PersiaTrainer(adapter, TrainMode.hybrid(2),
+                             OptConfig(kind="adam", lr=5e-3))
+
+    # uninterrupted run: 5 + 4 steps
+    tr_a = make_trainer()
+    state = tr_a.init(jax.random.PRNGKey(0), batches[0])
+    for b in batches[:5]:
+        state, _ = tr_a.step(state, b)
+    tr_a.save(str(tmp_path), state)
+    for b in batches[5:]:
+        state, _ = tr_a.step(state, b)
+
+    # interrupted run: restore the step-5 snapshot with a FRESH trainer
+    tr_b = make_trainer()
+    resumed = tr_b.restore(str(tmp_path))
+    assert int(resumed.step) == 5
+    # the snapshot carries the adagrad accumulators and queue contents
+    assert "acc" in resumed.emb["field_00"]
+    assert resumed.emb_queue["field_00"] is not None
+    for b in batches[5:]:
+        resumed, _ = tr_b.step(resumed, b)
+
+    fa, fb = _flatten_named(state), _flatten_named(resumed)
+    assert set(fa) == set(fb)
+    for k in fa:
+        np.testing.assert_array_equal(fa[k], fb[k], err_msg=k)
+
+
+def test_restore_rejects_legacy_and_mismatched_checkpoints(tmp_path):
+    from repro.checkpoint import save_checkpoint
+    adapter = adapters.recsys_adapter(HET_CFG, collection=HET)
+    trainer = PersiaTrainer(adapter, TrainMode.sync())
+    # legacy checkpoint: raw dense tree, no per-table embedding blob
+    save_checkpoint(str(tmp_path / "legacy"), 3, {"w": np.zeros(2)})
+    with pytest.raises(ValueError, match="full-state"):
+        trainer.restore(str(tmp_path / "legacy"))
+    # full-state checkpoint from a different collection: table-name mismatch
+    other = adapters.recsys_adapter(
+        HET_CFG.replace(n_id_fields=2, emb_rows=64, emb_dim=8))
+    tr2 = PersiaTrainer(other, TrainMode.sync())
+    b = {"ids": jnp.zeros((4, 2, 3), jnp.int32),
+         "dense": jnp.zeros((4, 4)), "labels": jnp.zeros((4, 1))}
+    tr2.save(str(tmp_path / "other"), tr2.init(jax.random.PRNGKey(0), b))
+    with pytest.raises(ValueError, match="do not match"):
+        trainer.restore(str(tmp_path / "other"))
+    # same names but a grown table: shape validation catches it
+    bigger = HET.map_specs(
+        lambda n, s: dataclasses.replace(s, rows=s.rows * 2))
+    tr3 = PersiaTrainer(adapters.recsys_adapter(HET_CFG, collection=bigger),
+                        TrainMode.sync())
+    trainer.save(str(tmp_path / "small"),
+                 trainer.init(jax.random.PRNGKey(0), _het_batches(1)[0]))
+    with pytest.raises(ValueError, match="collection changed"):
+        tr3.restore(str(tmp_path / "small"))
+    # sync checkpoint into a tau>0 trainer: queue/mode mismatch is refused
+    tr_tau = _het_trainer()          # per-table staleness 0/2/4
+    with pytest.raises(ValueError, match="staleness"):
+        tr_tau.restore(str(tmp_path / "small"))
+    # sync checkpoint into an async trainer: dense-queue mismatch is refused
+    tr_async = PersiaTrainer(adapter, TrainMode.async_(0, 2))
+    with pytest.raises(ValueError, match="tau_d"):
+        tr_async.restore(str(tmp_path / "small"))
+
+
+def test_ctr_dataset_emits_per_field_local_ids():
+    ds = CTRDataset("loc", n_rows=1000, n_fields=8, ids_per_field=4,
+                    n_dense=2)
+    b = next(ds.sampler(256))
+    ids = b["ids"]
+    assert ids.shape == (256, 8, 4)
+    live = ids[ids >= 0]
+    assert live.max() < ds.rows_per_field
+    assert ds.field_rows() == (125,) * 8

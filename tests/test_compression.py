@@ -3,14 +3,18 @@ error bounds, on-device put dedup vs oracle — paper §4.2.3."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:        # optional dep: property tests get fixed sweeps
+    HAVE_HYPOTHESIS = False
 
 from repro.core import compression as C
 
 
-@settings(deadline=None, max_examples=30)
-@given(st.integers(1, 40), st.integers(1, 8), st.integers(2, 500))
-def test_index_compression_lossless(B, L, rows):
+def _index_lossless_case(B, L, rows):
     rng = np.random.default_rng(B * 31 + L)
     ids = rng.integers(0, rows, (B, L))
     lens = rng.integers(0, L + 1, B)
@@ -24,21 +28,42 @@ def test_index_compression_lossless(B, L, rows):
         assert a == b
 
 
+if HAVE_HYPOTHESIS:
+    @settings(deadline=None, max_examples=30)
+    @given(st.integers(1, 40), st.integers(1, 8), st.integers(2, 500))
+    def test_index_compression_lossless(B, L, rows):
+        _index_lossless_case(B, L, rows)
+else:
+    @pytest.mark.parametrize("B,L,rows", [(1, 1, 2), (7, 8, 500),
+                                          (40, 3, 13)])
+    def test_index_compression_lossless(B, L, rows):
+        _index_lossless_case(B, L, rows)
+
+
 def test_index_compression_ratio_gt1_on_skewed():
     rng = np.random.default_rng(0)
     ids = rng.zipf(1.5, (1024, 8)) % 1000            # heavy repeats
     assert C.index_compression_ratio(ids) > 1.0
 
 
-@settings(deadline=None, max_examples=25)
-@given(st.integers(0, 10_000))
-def test_blockscale_jnp_roundtrip(seed):
+def _blockscale_roundtrip_case(seed):
     rng = np.random.default_rng(seed)
     v = (rng.standard_normal(rng.integers(1, 400))
          * 10 ** rng.uniform(-4, 4)).astype(np.float32)
     out = np.asarray(C.blockscale_roundtrip(jnp.asarray(v)))
     linf_blocks = np.abs(v).max()
     assert np.all(np.abs(out - v) <= linf_blocks * 2 ** -10 + 1e-20)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(deadline=None, max_examples=25)
+    @given(st.integers(0, 10_000))
+    def test_blockscale_jnp_roundtrip(seed):
+        _blockscale_roundtrip_case(seed)
+else:
+    @pytest.mark.parametrize("seed", [0, 17, 4242, 9999])
+    def test_blockscale_jnp_roundtrip(seed):
+        _blockscale_roundtrip_case(seed)
 
 
 def test_blockscale_beats_uniform_fp16_on_wide_range():
@@ -66,9 +91,7 @@ def test_dedup_put_aggregates():
     np.testing.assert_allclose(got[9], 5 * np.ones(4))
 
 
-@settings(deadline=None, max_examples=25)
-@given(st.integers(1, 64), st.integers(2, 32))
-def test_dedup_put_property(T, rows):
+def _dedup_put_case(T, rows):
     rng = np.random.default_rng(T * 7 + rows)
     ids = jnp.asarray(rng.integers(-1, rows, T).astype(np.int32))
     g = jnp.asarray(rng.standard_normal((T, 3)).astype(np.float32))
@@ -82,3 +105,14 @@ def test_dedup_put_property(T, rows):
     assert set(got) == set(want)
     for k in want:
         np.testing.assert_allclose(got[k], want[k], atol=1e-5)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(deadline=None, max_examples=25)
+    @given(st.integers(1, 64), st.integers(2, 32))
+    def test_dedup_put_property(T, rows):
+        _dedup_put_case(T, rows)
+else:
+    @pytest.mark.parametrize("T,rows", [(1, 2), (16, 5), (64, 32)])
+    def test_dedup_put_property(T, rows):
+        _dedup_put_case(T, rows)

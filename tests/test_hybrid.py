@@ -1,15 +1,17 @@
-"""Hybrid trainer semantics: tau=0 == sync bit-exact, async dense delay,
-convergence ordering on the synthetic CTR task (paper §6.2 qualitative)."""
+"""Hybrid trainer semantics through the PersiaTrainer facade: tau=0 == sync
+bit-exact, async dense delay, convergence ordering on the synthetic CTR task
+(paper §6.2 qualitative). The CTR model trains one embedding table per ID
+feature field (the multi-table EmbeddingCollection path)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.configs.base import ModelConfig
-from repro.core import adapters, embedding_ps as PS, hybrid
-from repro.core.hybrid import TrainMode
+from repro.core import adapters, hybrid
+from repro.core.hybrid import PersiaTrainer, TrainMode
 from repro.data.ctr import CTRDataset
-from repro.optim.optimizers import OptConfig, make_optimizer
+from repro.optim.optimizers import OptConfig
 
 CFG = ModelConfig(name="t", arch_type="recsys", n_id_fields=4,
                   ids_per_field=3, emb_dim=16, emb_rows=512,
@@ -17,29 +19,38 @@ CFG = ModelConfig(name="t", arch_type="recsys", n_id_fields=4,
 DS = CTRDataset("t", n_rows=512, n_fields=4, ids_per_field=3, n_dense=4)
 
 
-def _run(mode, n_steps=25, seed=0):
+def _trainer(mode):
     adapter = adapters.recsys_adapter(CFG, lr=5e-2)
-    opt_init, opt_update = make_optimizer(OptConfig(kind="adam", lr=5e-3))
+    return PersiaTrainer(adapter, mode, OptConfig(kind="adam", lr=5e-3))
+
+
+def _run(mode, n_steps=25, seed=0):
+    trainer = _trainer(mode)
     it = DS.sampler(128, seed=seed)
     batch = {k: jnp.asarray(v) for k, v in next(it).items()}
-    state, spec = hybrid.init_train_state(adapter, mode, opt_init,
-                                          jax.random.PRNGKey(0), batch)
-    step = jax.jit(hybrid.make_train_step(adapter, spec, mode, opt_update))
+    state = trainer.init(jax.random.PRNGKey(0), batch)
     losses = []
     for _ in range(n_steps):
         b = {k: jnp.asarray(v) for k, v in next(it).items()}
-        state, m = step(state, b)
+        state, m = trainer.step(state, b)
         losses.append(float(m["loss"]))
     return state, losses
+
+
+def _tables(state):
+    return {n: np.asarray(st["table"]) for n, st in state.emb.items()}
 
 
 def test_hybrid_tau0_equals_sync_exactly():
     s1, l1 = _run(TrainMode("hybrid", 0, 0))
     s2, l2 = _run(TrainMode.sync())
     np.testing.assert_allclose(l1, l2, rtol=0)
-    for a, b in zip(jax.tree.leaves(s1["dense"]), jax.tree.leaves(s2["dense"])):
+    for a, b in zip(jax.tree.leaves(s1.dense), jax.tree.leaves(s2.dense)):
         np.testing.assert_array_equal(a, b)
-    np.testing.assert_array_equal(s1["emb"]["table"], s2["emb"]["table"])
+    t1, t2 = _tables(s1), _tables(s2)
+    assert set(t1) == set(t2) and len(t1) == CFG.n_id_fields
+    for n in t1:
+        np.testing.assert_array_equal(t1[n], t2[n])
 
 
 def test_all_modes_learn():
@@ -60,58 +71,66 @@ def test_hybrid_close_to_sync_async_worse():
 
 
 def test_emb_grads_flow_through_queue():
-    """After tau warmup steps the table must have changed."""
-    adapter = adapters.recsys_adapter(CFG, lr=5e-2)
-    opt_init, opt_update = make_optimizer(OptConfig(kind="adam", lr=5e-3))
+    """After tau warmup steps every table must have changed."""
+    trainer = _trainer(TrainMode.hybrid(2))
     it = DS.sampler(64)
     batch = {k: jnp.asarray(v) for k, v in next(it).items()}
-    mode = TrainMode.hybrid(2)
-    state, spec = hybrid.init_train_state(adapter, mode, opt_init,
-                                          jax.random.PRNGKey(0), batch)
-    t0 = state["emb"]["table"].copy()
-    step = jax.jit(hybrid.make_train_step(adapter, spec, mode, opt_update))
+    state = trainer.init(jax.random.PRNGKey(0), batch)
+    t0 = _tables(state)
+    step = jax.jit(trainer.train_step)         # no donation: t0 stays alive
     state, _ = step(state, batch)
     state, _ = step(state, batch)
-    assert jnp.all(state["emb"]["table"] == t0)        # still queued
+    for n, t in _tables(state).items():
+        assert np.array_equal(t, t0[n]), n     # still queued
     state, _ = step(state, batch)
-    assert not jnp.all(state["emb"]["table"] == t0)    # first put applied
+    for n, t in _tables(state).items():
+        assert not np.array_equal(t, t0[n]), n  # first put applied
 
 
-def test_decomposed_matches_fused():
+@pytest.mark.parametrize("mode", [TrainMode.hybrid(2),
+                                  TrainMode.async_(2, 2)],
+                         ids=["hybrid", "async"])
+def test_decomposed_matches_fused(mode):
     """The decomposed (3-dispatch, donated) pipeline computes the same
-    updates as the fused train step."""
-    adapter = adapters.recsys_adapter(CFG, lr=5e-2)
-    opt_init, opt_update = make_optimizer(OptConfig(kind="adam", lr=5e-3))
-    mode = TrainMode.hybrid(2)
+    updates as the fused train step — including the async dense-delay
+    queue."""
     it = DS.sampler(64)
     batches = [{k: jnp.asarray(v) for k, v in next(it).items()}
                for _ in range(6)]
-    s1, spec = hybrid.init_train_state(adapter, mode, opt_init,
-                                       jax.random.PRNGKey(0), batches[0])
-    s2, _ = hybrid.init_train_state(adapter, mode, opt_init,
-                                    jax.random.PRNGKey(0), batches[0])
-    fused = jax.jit(hybrid.make_train_step(adapter, spec, mode, opt_update))
-    fns = hybrid.make_decomposed_fns(adapter, spec, mode, opt_update)
+    trainer = _trainer(mode)
+    s1 = trainer.init(jax.random.PRNGKey(0), batches[0])
+    s2 = trainer.init(jax.random.PRNGKey(0), batches[0])
     for b in batches:
-        s1, m1 = fused(s1, b)
-        s2, m2 = hybrid.decomposed_train_step(fns, s2, b, adapter)
-    np.testing.assert_allclose(np.asarray(s1["emb"]["table"]),
-                               np.asarray(s2["emb"]["table"]), atol=1e-5)
-    for a, b_ in zip(jax.tree.leaves(s1["dense"]),
-                     jax.tree.leaves(s2["dense"])):
+        s1, m1 = trainer.step(s1, b)
+        s2, m2 = trainer.decomposed_step(s2, b)
+    assert set(m1) == set(m2)          # same metric schema in both pipelines
+    t1, t2 = _tables(s1), _tables(s2)
+    for n in t1:
+        np.testing.assert_allclose(t1[n], t2[n], atol=1e-5)
+    for a, b_ in zip(jax.tree.leaves(s1.dense), jax.tree.leaves(s2.dense)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b_), atol=1e-5)
+    if mode.dense_staleness > 0:
+        for a, b_ in zip(jax.tree.leaves(s1.dense_queue),
+                         jax.tree.leaves(s2.dense_queue)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                       atol=1e-5)
 
 
 def test_eval_step_runs():
-    adapter = adapters.recsys_adapter(CFG)
-    opt_init, _ = make_optimizer(OptConfig())
+    trainer = _trainer(TrainMode.sync())
     it = DS.sampler(32)
     batch = {k: jnp.asarray(v) for k, v in next(it).items()}
-    state, spec = hybrid.init_train_state(adapter, TrainMode.sync(), opt_init,
-                                          jax.random.PRNGKey(0), batch)
-    ev = jax.jit(hybrid.make_eval_step(adapter, spec))
-    m = ev(state, batch)
+    state = trainer.init(jax.random.PRNGKey(0), batch)
+    m = trainer.eval(state, batch)
     assert np.isfinite(float(m["loss"]))
+
+
+def test_legacy_free_functions_reject_multi_table():
+    """The pre-collection shims only serve single-table adapters."""
+    adapter = adapters.recsys_adapter(CFG)
+    with pytest.raises(ValueError, match="PersiaTrainer"):
+        hybrid.init_train_state(adapter, TrainMode.sync(), lambda p: {},
+                                jax.random.PRNGKey(0))
 
 
 def test_auc_metric():

@@ -4,7 +4,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:        # optional dep: property tests get a fixed sweep
+    HAVE_HYPOTHESIS = False
 
 from repro.kernels import ops, ref
 from repro.kernels import blockscale as bs
@@ -28,9 +33,7 @@ def test_blockscale_matches_ref(rows):
                                rtol=1e-6)
 
 
-@settings(deadline=None, max_examples=25)
-@given(st.integers(1, 5), st.integers(1, 300), st.floats(-8, 8))
-def test_blockscale_roundtrip_error_bound(a, b, logscale):
+def _blockscale_error_bound_case(a, b, logscale):
     """Property: per-block relative error <= fp16 quantisation of the
     block's L_inf (the paper's non-uniform-mapping guarantee)."""
     rng = np.random.default_rng(a * 1000 + b)
@@ -40,6 +43,19 @@ def test_blockscale_roundtrip_error_bound(a, b, logscale):
     # fp16 has 11 mantissa bits; values scaled to ~kappa so relative
     # error per element is <= linf * 2^-10 (conservative)
     assert np.all(np.abs(out - v) <= linf * 2 ** -10 + 1e-12)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(deadline=None, max_examples=25)
+    @given(st.integers(1, 5), st.integers(1, 300), st.floats(-8, 8))
+    def test_blockscale_roundtrip_error_bound(a, b, logscale):
+        _blockscale_error_bound_case(a, b, logscale)
+else:
+    @pytest.mark.parametrize("a,b,logscale",
+                             [(1, 1, 0.0), (2, 37, -8.0), (5, 300, 8.0),
+                              (3, 128, 3.5)])
+    def test_blockscale_roundtrip_error_bound(a, b, logscale):
+        _blockscale_error_bound_case(a, b, logscale)
 
 
 def test_blockscale_zero_block():
@@ -79,15 +95,24 @@ def test_embedding_bag_all_padding():
     assert jnp.all(ops.embedding_bag(table, ids) == 0)
 
 
-@settings(deadline=None, max_examples=20)
-@given(st.integers(1, 8), st.integers(1, 10), st.integers(8, 64))
-def test_embedding_bag_property(B, L, V):
+def _embedding_bag_case(B, L, V):
     rng = np.random.default_rng(B * 100 + L * 10 + V)
     table = jnp.asarray(rng.standard_normal((V, 128)).astype(np.float32))
     ids = jnp.asarray(rng.integers(-2, V, (B, L)).astype(np.int32))
     got = ops.embedding_bag(table, ids)
     want = ref.embedding_bag_ref(table, ids)
     np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(deadline=None, max_examples=20)
+    @given(st.integers(1, 8), st.integers(1, 10), st.integers(8, 64))
+    def test_embedding_bag_property(B, L, V):
+        _embedding_bag_case(B, L, V)
+else:
+    @pytest.mark.parametrize("B,L,V", [(1, 1, 8), (4, 7, 33), (8, 10, 64)])
+    def test_embedding_bag_property(B, L, V):
+        _embedding_bag_case(B, L, V)
 
 
 # ---------------------------------------------------------------------------

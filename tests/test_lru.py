@@ -3,7 +3,13 @@ OrderedDict implementation, including serialize/deserialize = memory copy."""
 from collections import OrderedDict
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:        # optional dep: property test gets a fixed sweep
+    HAVE_HYPOTHESIS = False
 
 from repro.core.lru import LRUEmbeddingStore
 
@@ -30,16 +36,27 @@ class RefLRU:
         return set(self.d)
 
 
-@settings(deadline=None, max_examples=20)
-@given(st.lists(st.integers(0, 30), min_size=1, max_size=200),
-       st.integers(2, 12))
-def test_lru_eviction_matches_reference(seq, cap):
+def _lru_eviction_case(seq, cap):
     store = LRUEmbeddingStore(cap, dim=4)
     ref = RefLRU(cap)
     for i in seq:
         store.get(np.array([i]))
         ref.get([i])
     assert set(store.index) == ref.keys()
+
+
+if HAVE_HYPOTHESIS:
+    @settings(deadline=None, max_examples=20)
+    @given(st.lists(st.integers(0, 30), min_size=1, max_size=200),
+           st.integers(2, 12))
+    def test_lru_eviction_matches_reference(seq, cap):
+        _lru_eviction_case(seq, cap)
+else:
+    @pytest.mark.parametrize("seed,n,cap", [(0, 1, 2), (1, 50, 5),
+                                            (2, 200, 12)])
+    def test_lru_eviction_matches_reference(seed, n, cap):
+        seq = np.random.default_rng(seed).integers(0, 31, n).tolist()
+        _lru_eviction_case(seq, cap)
 
 
 def test_vectors_stable_across_hits():
