@@ -3,9 +3,13 @@ embedding table scales (Criteo-Syn family, up to 100T parameters).
 
 Device side: per-step time of the hybrid step while the device-resident
 table grows 64x — lookups are O(batch), not O(rows), so the curve is flat.
-Host side: the LRU store (the out-of-core PS tier backing the >RAM scales)
-get/put throughput vs working-set size, plus the 100T deployment arithmetic
-(rows x dim x fp32 across 30 PS nodes, as in the paper's GCP run).
+Out-of-core side: the SAME model trained through PersiaTrainer with the
+``host_lru`` storage backend — logical rows grow 8..64x past a fixed device
+cache, faults/write-backs move rows over the host boundary, and the
+device-resident bytes stay constant while host-resident bytes grow.
+Host side: raw LRUEmbeddingStore get/put throughput vs working-set size,
+plus the 100T deployment arithmetic (rows x dim x fp32 across 30 PS nodes,
+as in the paper's GCP run).
 """
 from __future__ import annotations
 
@@ -23,27 +27,55 @@ from repro.data.ctr import CTRDataset, criteo_syn_rows
 from repro.optim.optimizers import OptConfig
 
 
-def step_time_for_rows(rows: int, batch=512, iters=5) -> float:
-    ds = CTRDataset("syn", n_rows=rows, n_fields=26, ids_per_field=2,
+def _syn_trainer(rows: int, backend: str = "dense", cache_rows: int = 0,
+                 n_fields: int = 26, tau: int = 2):
+    ds = CTRDataset("syn", n_rows=rows, n_fields=n_fields, ids_per_field=2,
                     n_dense=13)
-    cfg = ModelConfig(name="syn", arch_type="recsys", n_id_fields=26,
+    cfg = ModelConfig(name="syn", arch_type="recsys", n_id_fields=n_fields,
                       ids_per_field=2, emb_dim=16, emb_rows=rows,
                       n_dense_features=13, mlp_dims=(128, 64))
-    adapter = adapters.recsys_adapter(cfg, field_rows=ds.field_rows())
-    trainer = PersiaTrainer(adapter, TrainMode.hybrid(2),
+    coll = adapters.ctr_collection(cfg, field_rows=ds.field_rows())
+    coll = coll.with_backend(backend, cache_rows or None)
+    adapter = adapters.recsys_adapter(cfg, field_rows=ds.field_rows(),
+                                      collection=coll)
+    trainer = PersiaTrainer(adapter, TrainMode.hybrid(tau),
                             OptConfig(kind="adam", lr=1e-3))
+    return ds, trainer
+
+
+def step_time_for_rows(rows: int, batch=512, iters=5, backend="dense",
+                       cache_rows=0, n_fields=26):
+    ds, trainer = _syn_trainer(rows, backend, cache_rows, n_fields)
     it = ds.sampler(batch)
     b = {k: jnp.asarray(v) for k, v in next(it).items()}
     state = trainer.init(jax.random.PRNGKey(0), b)
     # decomposed pipeline — the runtime-faithful path (separate get / dense /
-    # put dispatches; the donated put aliases the PS tables in place)
+    # put dispatches; host_lru additionally runs the host fault-in phase)
     state, _ = trainer.decomposed_step(state, b)
     jax.block_until_ready(state.emb)
     t0 = time.perf_counter()
     for _ in range(iters):
+        b = {k: jnp.asarray(v) for k, v in next(it).items()}
         state, _ = trainer.decomposed_step(state, b)
     jax.block_until_ready(state.emb)
-    return (time.perf_counter() - t0) / iters
+    return (time.perf_counter() - t0) / iters, trainer, state
+
+
+def out_of_core_rows(scale: int, cache_rows=12_500, batch=512, n_fields=8):
+    """Train with logical rows = scale x cache_rows per field through the
+    host_lru backend; report step time, fault traffic and residency split."""
+    rows = scale * cache_rows * n_fields
+    dt, trainer, state = step_time_for_rows(
+        rows, batch=batch, iters=5, backend="host_lru",
+        cache_rows=cache_rows, n_fields=n_fields)
+    dev = host = faults = wbacks = 0
+    for n in trainer.collection.names:
+        bk = trainer.backends[n]
+        dev += bk.device_bytes(state.emb[n])
+        host += bk.host_bytes()
+        faults += bk.faults
+        wbacks += bk.writebacks
+    return dt, dev, host, faults, wbacks
 
 
 def lru_throughput(capacity: int, n_ops=20_000, dim=32) -> float:
@@ -61,11 +93,23 @@ def run():
     rows = []
     base = None
     for r in (100_000, 400_000, 1_600_000, 6_400_000):
-        t = step_time_for_rows(r)
+        t, _, _ = step_time_for_rows(r)
         if base is None:
             base = t
         rows.append((f"capacity/device_rows={r}", t * 1e6,
                      f"step={t*1e3:.2f}ms ratio_to_smallest={t/base:.2f}"))
+    # out-of-core: logical rows grow 8x..32x past a FIXED device cache —
+    # the host_lru backend keeps device bytes flat while host bytes grow
+    base_ooc = None
+    for scale in (8, 16, 32):
+        t, dev, host, faults, wbacks = out_of_core_rows(scale)
+        if base_ooc is None:
+            base_ooc = t
+        rows.append((
+            f"capacity/host_lru_rows={scale}x_cache", t * 1e6,
+            f"step={t*1e3:.2f}ms ratio_to_8x={t/base_ooc:.2f} "
+            f"device_res={dev/2**20:.1f}MiB host_res={host/2**20:.1f}MiB "
+            f"faults={faults} writebacks={wbacks}"))
     for cap in (10_000, 100_000, 1_000_000):
         thr = lru_throughput(cap)
         rows.append((f"capacity/lru_cap={cap}", 1e6 / thr,

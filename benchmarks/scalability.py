@@ -22,7 +22,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.convergence import DATASETS, _cfg
 from repro.core import adapters

@@ -1,0 +1,626 @@
+"""Pluggable embedding storage backends — the memory hierarchy behind the PS.
+
+Persia's 100T-parameter capacity claim (paper §4.2.2/§4.2.3) rests on the
+embedding tier being *bigger than device memory*: PS nodes keep tables in
+host RAM behind an LRU array-list cache and move rows over a compressed
+wire. This module makes that a first-class storage choice: every table in an
+:class:`~repro.core.collection.EmbeddingCollection` selects its backend via
+``EmbeddingSpec.backend``:
+
+* ``DenseBackend`` — the device-sharded PS of :mod:`repro.core.embedding_ps`
+  re-housed behind the protocol, numerically unchanged.
+* ``HostLRUBackend`` — the out-of-core tier: a device-resident hot-cache of
+  ``spec.cache_rows`` slots backed by a host :class:`LRUEmbeddingStore`
+  holding all ``spec.rows`` (vectors **and** adagrad accumulators, the
+  paper's array-item layout). ``prepare`` faults missing rows host→device
+  and writes evicted dirty rows back, so logical ``rows`` can exceed device
+  memory.
+* ``CompressedWireBackend`` — a decorator over either backend applying the
+  paper's §4.2.3 wire compression: lossless unique-id dedup on puts plus
+  lossy blockscale fp16 on get/put payloads, surfacing bytes-moved metrics.
+
+The protocol splits host-level from traceable ops:
+
+  host-level (never traced; may mutate backend-owned host state):
+    ``init / prepare / queue_init / state_for_checkpoint /
+    restore_from_checkpoint``
+  traceable (pure, jit-safe, operate on *device ids* — raw ids for dense,
+  cache-slot indices for host_lru — produced by ``prepare``):
+    ``lookup / apply_put / hybrid_update``
+
+``lookup`` returns ``(acts, metrics)`` and the put ops return their updated
+state plus a metrics dict (empty except for the compressed wire), so wire
+traffic flows out through the trainer's per-step metrics.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compression as C
+from repro.core import embedding_ps as PS
+from repro.core.embedding_ps import EmbeddingSpec
+from repro.core.lru import LRUEmbeddingStore
+from repro.utils import round_up
+
+
+def _prod(shape) -> int:
+    return math.prod(int(s) for s in shape)
+
+
+def _dedup_cap(n_put: int, n_rows: int) -> int:
+    """Mirror of embedding_ps.apply_put's dedup capacity rule, so the
+    backends' wire/cache dedups drop rows exactly when the dense PS would."""
+    return round_up(min(n_put, n_rows), min(1024, n_put))
+
+
+class EmbeddingBackend:
+    """Protocol base. Subclasses own one table's storage (device arrays are
+    threaded through as pytrees; anything host-resident lives on ``self``).
+    ``requires_prepare`` tells the trainer whether ``prepare`` does real work
+    (host fault-in) and therefore must run outside jit every step."""
+
+    spec: EmbeddingSpec
+    requires_prepare: bool = False
+
+    # -- host-level ----------------------------------------------------------
+    def init(self, key, shards: int = 1, scale: float = 0.02):
+        raise NotImplementedError
+
+    def prepare(self, state, ids):
+        """(state, ids) -> (state, device_ids). Host-level, once per step."""
+        return state, ids
+
+    def queue_init(self, ids_shape):
+        raise NotImplementedError
+
+    def state_for_checkpoint(self, state):
+        raise NotImplementedError
+
+    def restore_from_checkpoint(self, blob):
+        raise NotImplementedError
+
+    # -- traceable -----------------------------------------------------------
+    def lookup(self, state, dev_ids):
+        raise NotImplementedError
+
+    def apply_put(self, state, dev_ids, grads):
+        raise NotImplementedError
+
+    def hybrid_update(self, state, queue, dev_ids, grads):
+        raise NotImplementedError
+
+    # -- capacity accounting (benchmarks) ------------------------------------
+    def device_bytes(self, state) -> int:
+        return sum(int(x.size) * x.dtype.itemsize
+                   for x in jax.tree.leaves(state))
+
+    def host_bytes(self) -> int:
+        return 0
+
+
+# ===========================================================================
+# DenseBackend — today's device-sharded PS behind the protocol
+# ===========================================================================
+
+class DenseBackend(EmbeddingBackend):
+    """Device-resident PS shard; every op delegates to embedding_ps with no
+    numerical change (device ids ARE the logical ids)."""
+
+    requires_prepare = False
+
+    def __init__(self, spec: EmbeddingSpec):
+        self.spec = spec
+
+    def init(self, key, shards: int = 1, scale: float = 0.02):
+        return PS.ps_init(key, self.spec, shards, scale)
+
+    def queue_init(self, ids_shape):
+        if self.spec.staleness <= 0:
+            return None
+        return PS.queue_init(self.spec, (_prod(ids_shape),), self.spec.dim)
+
+    def lookup(self, state, dev_ids):
+        return PS.lookup(state, self.spec, dev_ids), {}
+
+    def apply_put(self, state, dev_ids, grads):
+        return PS.apply_put(state, self.spec, dev_ids.reshape(-1),
+                            grads.reshape(-1, self.spec.dim)), {}
+
+    def hybrid_update(self, state, queue, dev_ids, grads):
+        st, q = PS.hybrid_emb_update(state, queue, self.spec,
+                                     dev_ids.reshape(-1),
+                                     grads.reshape(-1, self.spec.dim))
+        return st, q, {}
+
+    def state_for_checkpoint(self, state):
+        return jax.tree.map(np.asarray, state)
+
+    def restore_from_checkpoint(self, blob):
+        spec = self.spec
+        table = blob.get("table") if isinstance(blob, dict) else None
+        if table is None:
+            raise ValueError(
+                "checkpoint blob has no 'table' — it was not written by the "
+                "dense backend (restoring across backends is not supported)")
+        if table.shape[1] != spec.dim or table.shape[0] < spec.rows:
+            raise ValueError(
+                f"checkpoint table has shape {tuple(table.shape)} but this "
+                f"table's spec wants >= ({spec.rows}, {spec.dim}) — "
+                "collection changed since the save?")
+        return blob
+
+
+# ===========================================================================
+# HostLRUBackend — the out-of-core tier (paper §4.2.2)
+# ===========================================================================
+
+class HostLRUBackend(EmbeddingBackend):
+    """Device hot-cache of ``spec.cache_rows`` slots over a host
+    :class:`LRUEmbeddingStore` holding all ``spec.rows``.
+
+    ``prepare`` is the fault path: it resolves the batch's unique ids
+    against the slot map, writes the LRU victims' (vector, acc) back to the
+    host store, loads the missing rows device-side, and returns the batch
+    translated to cache-slot indices. The traceable ops then run entirely on
+    the device cache — lookups gather slots, puts apply the PS-side
+    optimizer to slots via the same dedup + row-sparse apply as the dense
+    backend, so a working set that fits in cache is bit-exact with dense.
+
+    Staleness queues store ``(slot, logical id)`` pairs; a popped put whose
+    slot has been recycled for another id since it was enqueued is dropped
+    (the paper's tolerated lost put). Note this includes recycling caused by
+    *read-path* fault-ins: an eval/lookup batch near the cache's capacity
+    can evict a slot with a put still pending in the queue — unlike the
+    dense backend, eval is then not perfectly side-effect-free. Alg.1's
+    lock-free semantics tolerate the loss; size ``cache_rows`` above the
+    combined train+eval working set where that matters.
+    """
+
+    requires_prepare = True
+
+    def __init__(self, spec: EmbeddingSpec):
+        if spec.cache_rows <= 0:
+            raise ValueError(
+                "host_lru backend needs EmbeddingSpec.cache_rows > 0 "
+                f"(got {spec.cache_rows})")
+        if spec.optimizer not in ("adagrad", "sgd"):
+            raise ValueError(spec.optimizer)
+        self.spec = spec
+        self.cache_rows = int(spec.cache_rows)
+        self.store: LRUEmbeddingStore | None = None
+        self._slot_for_id: dict[int, int] = {}
+        self._id_for_slot = np.full(self.cache_rows, -1, np.int64)
+        self._slot_clock = np.zeros(self.cache_rows, np.int64)
+        self._tick = 0
+        self.faults = 0          # rows moved host -> device
+        self.writebacks = 0      # rows moved device -> host
+
+    # -- host-level ----------------------------------------------------------
+
+    def init(self, key, shards: int = 1, scale: float = 0.02):
+        if shards != 1:
+            raise ValueError("host_lru is a per-host tier: the device cache "
+                             "is single-shard (got shards={})".format(shards))
+        spec = self.spec
+        # draw the SAME init values the dense backend would, then park them
+        # host-side: host row for id i is what a dense lookup of i would
+        # read (table[shuffle_pos(i)]) — this is what makes dense and
+        # host_lru bit-exact when the working set fits in cache. The draw is
+        # pinned to the CPU backend: threefry is backend-deterministic, and
+        # a rows x dim table is exactly what must NOT touch device memory
+        with jax.default_device(jax.devices("cpu")[0]):
+            dense = PS.ps_init(key,
+                               dataclasses.replace(spec, backend="dense"),
+                               1, scale)
+            table = np.asarray(dense["table"], np.float32)
+        pos = np.asarray(PS.shuffle_pos(jnp.arange(spec.rows),
+                                        spec.padded_rows(1)))
+        self.store = LRUEmbeddingStore(spec.rows, spec.dim)
+        self.store.preload(np.arange(spec.rows), table[pos])
+        # a re-init starts a fresh run: drop any previous slot bookkeeping
+        self._slot_for_id = {}
+        self._id_for_slot = np.full(self.cache_rows, -1, np.int64)
+        self._slot_clock = np.zeros(self.cache_rows, np.int64)
+        self._tick = 0
+        self.faults = self.writebacks = 0
+        state = {
+            "table": jnp.zeros((self.cache_rows, spec.dim), spec.dtype),
+            "slot_ids": jnp.full((self.cache_rows,), -1, jnp.int32),
+        }
+        if spec.optimizer == "adagrad":
+            state["acc"] = jnp.zeros((self.cache_rows,), jnp.float32)
+        return state
+
+    def prepare(self, state, ids):
+        """Fault the batch's rows into the device cache; translate ids to
+        cache-slot indices (-1 for padding / out-of-range)."""
+        spec = self.spec
+        flat = np.asarray(ids, np.int64).reshape(-1)
+        valid = (flat >= 0) & (flat < spec.rows)
+        uniq = np.unique(flat[valid])
+        if uniq.size > self.cache_rows:
+            raise ValueError(
+                f"batch working set ({uniq.size} unique ids) exceeds the "
+                f"device cache ({self.cache_rows} slots) — raise "
+                "EmbeddingSpec.cache_rows or shrink the batch")
+        self._tick += 1
+        smap = self._slot_for_id
+        uslots = np.fromiter((smap.get(k, -1) for k in uniq.tolist()),
+                             np.int64, uniq.size)
+        hit_slots = uslots[uslots >= 0]
+        missing = uniq[uslots < 0]
+        if missing.size:
+            state = dict(state)
+            victims = self._free_slots(hit_slots, missing.size, state)
+            vecs, accs = self.store.read_rows(missing)
+            self.faults += missing.size
+            vslots = jnp.asarray(victims, jnp.int32)
+            state["table"] = jnp.asarray(state["table"]) \
+                .at[vslots].set(jnp.asarray(vecs, spec.dtype))
+            state["slot_ids"] = jnp.asarray(state["slot_ids"]) \
+                .at[vslots].set(jnp.asarray(missing, jnp.int32))
+            if "acc" in state:
+                state["acc"] = jnp.asarray(state["acc"]) \
+                    .at[vslots].set(jnp.asarray(accs, jnp.float32))
+            for k, s in zip(missing.tolist(), victims.tolist()):
+                smap[k] = s
+            self._id_for_slot[victims] = missing
+            touched = np.concatenate([hit_slots, victims])
+        else:
+            touched = hit_slots
+        self._slot_clock[touched] = self._tick
+        dev = np.fromiter((smap.get(k, -1) for k in flat.tolist()),
+                          np.int64, flat.size)
+        dev[~valid] = -1
+        return state, jnp.asarray(dev.reshape(np.shape(ids)), jnp.int32)
+
+    def _free_slots(self, protected: np.ndarray, need: int, state):
+        """Pick ``need`` victim slots: empty slots first, then the
+        least-recently-touched occupied slots outside the current batch;
+        evicted rows (vector + acc) are written back to the host store."""
+        free = np.nonzero(self._id_for_slot < 0)[0][:need]
+        n_evict = need - free.size
+        if n_evict <= 0:
+            return free
+        cand = np.ones(self.cache_rows, bool)
+        cand[self._id_for_slot < 0] = False
+        cand[protected] = False
+        cand_slots = np.nonzero(cand)[0]
+        order = np.argsort(self._slot_clock[cand_slots], kind="stable")
+        evict = cand_slots[order[:n_evict]]
+        ev_ids = self._id_for_slot[evict]
+        eslots = jnp.asarray(evict, jnp.int32)
+        vecs = np.asarray(jnp.asarray(state["table"])[eslots], np.float32)
+        accs = np.asarray(jnp.asarray(state["acc"])[eslots], np.float32) \
+            if "acc" in state else None
+        self.store.write_rows(ev_ids, vecs, accs)
+        self.writebacks += int(evict.size)
+        for k in ev_ids.tolist():
+            del self._slot_for_id[k]
+        self._id_for_slot[evict] = -1
+        return np.concatenate([free, evict])
+
+    def queue_init(self, ids_shape):
+        spec = self.spec
+        if spec.staleness <= 0:
+            return None
+        tau, n_ids = spec.staleness, _prod(ids_shape)
+        return {
+            "slots": jnp.full((tau, n_ids), -1, jnp.int32),
+            "ids": jnp.full((tau, n_ids), -1, jnp.int32),
+            "grads": jnp.zeros((tau, n_ids, spec.dim), spec.dtype),
+            "ptr": jnp.zeros((), jnp.int32),
+            "filled": jnp.zeros((), jnp.int32),
+        }
+
+    # -- traceable -----------------------------------------------------------
+
+    def lookup(self, state, dev_ids):
+        shape = dev_ids.shape
+        flat = dev_ids.reshape(-1)
+        valid = (flat >= 0) & (flat < self.cache_rows)
+        safe = jnp.clip(flat, 0, self.cache_rows - 1)
+        out = state["table"][safe] * valid[:, None].astype(
+            state["table"].dtype)
+        return out.reshape(*shape, self.spec.dim), {}
+
+    def apply_put(self, state, dev_ids, grads):
+        spec = self.spec
+        flat = dev_ids.reshape(-1)
+        grads = grads.reshape(-1, spec.dim)
+        valid = (flat >= 0) & (flat < self.cache_rows)
+        g = jnp.where(valid[:, None], grads, 0.0).astype(jnp.float32)
+        slot_signed = jnp.where(valid, flat.astype(jnp.int32), -1)
+        cap = _dedup_cap(int(flat.shape[0]), self.cache_rows)
+        uniq, g_u = C.dedup_put(slot_signed, g, cap)
+        new = PS._apply_sparse(
+            state, spec, jnp.where(uniq >= 0, uniq, self.cache_rows), g_u,
+            self.cache_rows)
+        return new, {}
+
+    def hybrid_update(self, state, queue, dev_ids, grads):
+        spec = self.spec
+        flat = dev_ids.reshape(-1)
+        g = grads.reshape(-1, spec.dim)
+        if spec.staleness <= 0 or queue is None:
+            st, m = self.apply_put(state, flat, g)
+            return st, queue, m
+        valid = (flat >= 0) & (flat < self.cache_rows)
+        safe = jnp.clip(flat, 0, self.cache_rows - 1)
+        logical = jnp.where(valid, state["slot_ids"][safe], -1)
+        ptr = queue["ptr"]
+        old_slots = jnp.take(queue["slots"], ptr, axis=0)
+        old_ids = jnp.take(queue["ids"], ptr, axis=0)
+        old_g = jnp.take(queue["grads"], ptr, axis=0)
+        tau = queue["slots"].shape[0]
+        queue = {
+            "slots": jax.lax.dynamic_update_index_in_dim(
+                queue["slots"], jnp.where(valid, flat.astype(jnp.int32), -1),
+                ptr, 0),
+            "ids": jax.lax.dynamic_update_index_in_dim(
+                queue["ids"], logical.astype(jnp.int32), ptr, 0),
+            "grads": jax.lax.dynamic_update_index_in_dim(
+                queue["grads"], g.astype(queue["grads"].dtype), ptr, 0),
+            "ptr": (ptr + 1) % tau,
+            "filled": jnp.minimum(queue["filled"] + 1, tau),
+        }
+        # a tau-stale put only lands if its slot still holds the same row
+        old_safe = jnp.clip(old_slots, 0, self.cache_rows - 1)
+        still = (old_slots >= 0) & (old_ids >= 0) & \
+            (state["slot_ids"][old_safe] == old_ids)
+        st, m = self.apply_put(state, jnp.where(still, old_slots, -1), old_g)
+        return st, queue, m
+
+    # -- checkpoint ----------------------------------------------------------
+
+    def state_for_checkpoint(self, state):
+        """Snapshot BOTH tiers: the device cache (so queued slot references
+        stay live across restore) and the host store with its recency
+        order, plus the slot map — a restore resumes bit-identically."""
+        return {
+            "cache": jax.tree.map(np.asarray, state),
+            "store": self.store.serialize(),
+            "cache_meta": {
+                "id_for_slot": self._id_for_slot.copy(),
+                "slot_clock": self._slot_clock.copy(),
+                "scalars": np.array([self._tick, self.faults,
+                                     self.writebacks], np.int64),
+            },
+        }
+
+    def restore_from_checkpoint(self, blob):
+        spec = self.spec
+        if not isinstance(blob, dict) or "store" not in blob \
+                or "cache" not in blob:
+            raise ValueError(
+                "checkpoint blob has no host store — it was not written by "
+                "the host_lru backend (restoring across backends is not "
+                "supported)")
+        meta = blob["store"]["meta"]
+        cap, dim = int(meta[0]), int(meta[1])
+        if cap != spec.rows or dim != spec.dim:
+            raise ValueError(
+                f"checkpoint host store is ({cap}, {dim}) but this table's "
+                f"spec wants ({spec.rows}, {spec.dim}) — collection changed "
+                "since the save?")
+        cache_tbl = blob["cache"]["table"]
+        if cache_tbl.shape[0] != self.cache_rows:
+            raise ValueError(
+                f"checkpoint device cache has {cache_tbl.shape[0]} slots but "
+                f"this table runs cache_rows={self.cache_rows} — rebuild the "
+                "trainer with the cache the checkpoint was trained under")
+        self.store = LRUEmbeddingStore.deserialize(blob["store"])
+        cm = blob["cache_meta"]
+        self._id_for_slot = np.asarray(cm["id_for_slot"], np.int64).copy()
+        self._slot_clock = np.asarray(cm["slot_clock"], np.int64).copy()
+        self._tick, faults, wbacks = (int(x) for x in cm["scalars"])
+        self.faults, self.writebacks = int(faults), int(wbacks)
+        self._slot_for_id = {
+            int(k): int(s)
+            for s, k in enumerate(self._id_for_slot.tolist()) if k >= 0}
+        return {k: jnp.asarray(v) for k, v in blob["cache"].items()}
+
+    # -- capacity accounting / inspection ------------------------------------
+
+    def host_bytes(self) -> int:
+        s = self.store
+        if s is None:
+            return 0
+        return int(s.vectors.nbytes + s.opt_acc.nbytes + s.prev.nbytes
+                   + s.next.nbytes + s.keys.nbytes)
+
+    def recency_order(self) -> list[int]:
+        """Host-store ids most- to least-recently used (checkpointed)."""
+        return self.store.recency_ids()
+
+
+# ===========================================================================
+# CompressedWireBackend — §4.2.3 wire compression as a decorator
+# ===========================================================================
+
+class CompressedWireBackend(EmbeddingBackend):
+    """Wraps another backend with the paper's communication compression:
+    gradient puts are deduplicated to one row per unique id (lossless) and
+    both get and put payloads cross the simulated wire as blockscale fp16
+    (lossy, AUC-neutral by design). Per-step bytes-moved metrics surface
+    through the trainer's metrics dict as ``wire/<table>/...``."""
+
+    def __init__(self, inner: EmbeddingBackend):
+        self.inner = inner
+        self.spec = inner.spec
+        self._block = int(self.spec.wire_block)
+        if self.spec.wire_kernel and self._block != 128:
+            raise ValueError("the Pallas blockscale kernel is fixed at "
+                             f"block=128 (got wire_block={self._block})")
+
+    @property
+    def requires_prepare(self) -> bool:
+        return self.inner.requires_prepare
+
+    def _roundtrip(self, v):
+        if self.spec.wire_kernel:
+            from repro.kernels import ops
+            return ops.blockscale_roundtrip(v, block=self._block)
+        return C.blockscale_roundtrip(v, block=self._block)
+
+    def _dev_rows(self) -> int:
+        if isinstance(self.inner, HostLRUBackend):
+            return self.inner.cache_rows
+        return self.spec.rows
+
+    # -- host-level: delegate ------------------------------------------------
+
+    def init(self, key, shards: int = 1, scale: float = 0.02):
+        return self.inner.init(key, shards, scale)
+
+    def prepare(self, state, ids):
+        return self.inner.prepare(state, ids)
+
+    def queue_init(self, ids_shape):
+        # the queue lives PS-side, AFTER the wire: it holds deduped puts
+        if self.spec.staleness <= 0:
+            return None
+        cap = _dedup_cap(_prod(ids_shape), self._dev_rows())
+        return self.inner.queue_init((cap,))
+
+    def state_for_checkpoint(self, state):
+        return self.inner.state_for_checkpoint(state)
+
+    def restore_from_checkpoint(self, blob):
+        return self.inner.restore_from_checkpoint(blob)
+
+    # -- traceable -----------------------------------------------------------
+
+    def lookup(self, state, dev_ids):
+        acts, m = self.inner.lookup(state, dev_ids)
+        n_vals = int(acts.size)
+        blocks = -(-n_vals // self._block)
+        m = dict(m)
+        m["get_bytes_raw"] = jnp.float32(n_vals * 4)
+        m["get_bytes_wire"] = jnp.float32(blocks * self._block * 2
+                                          + blocks * 4)
+        return self._roundtrip(acts), m
+
+    def _compress_put(self, dev_ids, grads):
+        spec = self.spec
+        flat = dev_ids.reshape(-1).astype(jnp.int32)
+        g = grads.reshape(-1, spec.dim).astype(jnp.float32)
+        n_put = int(flat.shape[0])
+        cap = _dedup_cap(n_put, self._dev_rows())
+        uniq, g_u = C.dedup_put(flat, g, cap)
+        g_u = self._roundtrip(g_u)
+        n_uniq = jnp.sum(uniq >= 0).astype(jnp.float32)
+        n_vals = n_uniq * spec.dim
+        metrics = {
+            # raw wire: one (int32 id, fp32 row) per put entry, pre-dedup
+            "put_bytes_raw": jnp.float32(n_put * (4 + spec.dim * 4)),
+            # compressed wire: unique ids + fp16 values + per-block scales
+            "put_bytes_wire": n_uniq * 4 + n_vals * 2
+            + jnp.ceil(n_vals / self._block) * 4,
+        }
+        return uniq, g_u, metrics
+
+    def apply_put(self, state, dev_ids, grads):
+        uniq, g_u, m = self._compress_put(dev_ids, grads)
+        st, m2 = self.inner.apply_put(state, uniq, g_u)
+        return st, {**m, **m2}
+
+    def hybrid_update(self, state, queue, dev_ids, grads):
+        uniq, g_u, m = self._compress_put(dev_ids, grads)
+        st, q, m2 = self.inner.hybrid_update(state, queue, uniq, g_u)
+        return st, q, {**m, **m2}
+
+    # -- capacity accounting -------------------------------------------------
+
+    def device_bytes(self, state) -> int:
+        return self.inner.device_bytes(state)
+
+    def host_bytes(self) -> int:
+        return self.inner.host_bytes()
+
+
+# ===========================================================================
+# Factory + collection-level drivers
+# ===========================================================================
+
+def parse_backend_name(name: str | None) -> tuple[str, bool]:
+    """``EmbeddingSpec.backend`` string -> (base, compressed?). Accepted
+    forms: ``dense``, ``host_lru``, plus a ``+compressed`` suffix on either
+    (``compressed`` alone means ``dense+compressed``)."""
+    name = (name or "dense").strip().lower()
+    base, sep, suffix = name.partition("+")
+    wrap = bool(sep)
+    if sep and suffix != "compressed":
+        raise ValueError(f"unknown backend decorator {suffix!r} in "
+                         f"{name!r} (only '+compressed' exists)")
+    if base in ("", "compressed"):
+        base, wrap = "dense", True
+    if base not in ("dense", "host_lru"):
+        raise ValueError(
+            f"unknown embedding backend {name!r}: expected 'dense', "
+            "'host_lru', optionally with a '+compressed' suffix")
+    return base, wrap
+
+
+def create_backend(spec: EmbeddingSpec) -> EmbeddingBackend:
+    """``spec.backend`` -> backend instance (see parse_backend_name)."""
+    base, wrap = parse_backend_name(spec.backend)
+    if base == "dense":
+        backend: EmbeddingBackend = DenseBackend(spec)
+    else:
+        backend = HostLRUBackend(spec)
+    return CompressedWireBackend(backend) if wrap else backend
+
+
+def make_backends(collection) -> dict[str, EmbeddingBackend]:
+    """One backend instance per table (instances own mutable host state, so
+    each trainer must build its own set)."""
+    return {n: create_backend(s) for n, s in collection.items()}
+
+
+def any_requires_prepare(backends) -> bool:
+    return any(b.requires_prepare for b in backends.values())
+
+
+def prepare_all(backends, states, ids):
+    """Host-level per-table fault-in + id translation (identity for dense)."""
+    new_states = dict(states)
+    dev_ids = {}
+    for n in ids:
+        new_states[n], dev_ids[n] = backends[n].prepare(states[n], ids[n])
+    return new_states, dev_ids
+
+
+def _tag(metrics, name, table_metrics):
+    for k, v in table_metrics.items():
+        metrics[f"wire/{name}/{k}"] = v
+
+
+def lookup_all(backends, states, dev_ids):
+    """Traceable fan-out of per-table lookups -> (acts, wire metrics)."""
+    acts, metrics = {}, {}
+    for n in dev_ids:
+        if n not in backends:
+            raise KeyError(f"ids for unknown table {n!r}; collection has "
+                           f"{sorted(backends)}")
+        acts[n], m = backends[n].lookup(states[n], dev_ids[n])
+        _tag(metrics, n, m)
+    return acts, metrics
+
+
+def put_all(backends, states, queues, dev_ids, grads):
+    """Traceable fan-out of per-table hybrid updates (push this step's put,
+    apply the tau-stale one) -> (states, queues, wire metrics)."""
+    queues = queues or {}
+    new_states, new_queues, metrics = dict(states), dict(queues), {}
+    for n in dev_ids:
+        st, q, m = backends[n].hybrid_update(
+            states[n], queues.get(n), dev_ids[n], grads[n])
+        new_states[n], new_queues[n] = st, q
+        _tag(metrics, n, m)
+    return new_states, new_queues, metrics

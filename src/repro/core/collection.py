@@ -25,7 +25,6 @@ from dataclasses import dataclass
 from typing import Any, Callable, Iterator, Mapping
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import embedding_ps as PS
 from repro.core.embedding_ps import EmbeddingSpec
@@ -38,8 +37,9 @@ class EmbeddingCollection:
     tables: tuple[tuple[str, EmbeddingSpec], ...]
 
     def __post_init__(self):
+        from repro.core.backend import parse_backend_name
         seen = set()
-        for n, _ in self.tables:
+        for n, s in self.tables:
             # names become checkpoint blob paths: '/' would split the path,
             # and all-digit names deserialize as list indices, not keys
             if not n or "/" in n or n.isdigit():
@@ -50,6 +50,7 @@ class EmbeddingCollection:
             if n in seen:
                 raise ValueError(f"duplicate table name {n!r}")
             seen.add(n)
+            parse_backend_name(s.backend)       # fail fast on bad specs
 
     # -- construction -------------------------------------------------------
 
@@ -109,6 +110,26 @@ class EmbeddingCollection:
         """Set every table's staleness to ``tau`` (mode-wide override)."""
         return self.map_specs(
             lambda _, s: dataclasses.replace(s, staleness=tau))
+
+    def with_backend(self, backend: str,
+                     cache_rows: int | None = None) -> "EmbeddingCollection":
+        """Set every table's storage backend (collection-wide override);
+        optionally also the host_lru device-cache size."""
+        def fn(_, s):
+            kw = {"backend": backend}
+            if cache_rows is not None:
+                kw["cache_rows"] = cache_rows
+            return dataclasses.replace(s, **kw)
+        return self.map_specs(fn)
+
+    # -- storage backends ----------------------------------------------------
+
+    def make_backends(self):
+        """One EmbeddingBackend per table (core/backend.py). Instances own
+        mutable host state (LRU stores, slot maps): every trainer must build
+        its own set."""
+        from repro.core.backend import make_backends
+        return make_backends(self)
 
     # -- collection-level PS ops ---------------------------------------------
 

@@ -63,7 +63,11 @@ def compress_index_batch(ids_batch: np.ndarray):
     samples containing it, with indices stored as uint16 (B <= 65535).
     """
     B, L = ids_batch.shape
-    assert B <= 65535
+    if B > 65535:
+        raise ValueError(
+            f"compress_index_batch stores sample indices as uint16, so the "
+            f"batch size must be <= 65535 (got {B}); split the batch before "
+            "encoding")
     samples = np.repeat(np.arange(B, dtype=np.uint16), L)
     flat = ids_batch.reshape(-1)
     keep = flat >= 0

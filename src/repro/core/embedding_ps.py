@@ -23,7 +23,6 @@ groups spread evenly across shards.
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
 from functools import partial
 from typing import Any
@@ -49,6 +48,15 @@ class EmbeddingSpec:
     eps: float = 1e-8
     staleness: int = 0              # tau; 0 = synchronous embedding updates
     dtype: Any = jnp.float32
+    # -- storage backend (core/backend.py) ------------------------------------
+    # 'dense' | 'host_lru', optionally with a '+compressed' wire decorator
+    # (e.g. 'host_lru+compressed'). 'dense' is the device-resident PS shard;
+    # 'host_lru' keeps `rows` host-side behind a device hot-cache of
+    # `cache_rows` slots (paper §4.2.2 out-of-core tier).
+    backend: str = "dense"
+    cache_rows: int = 0             # host_lru: device-resident hot slots
+    wire_block: int = 128           # +compressed: blockscale block size
+    wire_kernel: bool = False       # +compressed: Pallas kernel vs jnp ref
 
     def padded_rows(self, n_shards: int) -> int:
         return round_up(self.rows, max(n_shards, 1))

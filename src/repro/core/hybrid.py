@@ -35,6 +35,7 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import backend as BK
 from repro.core import embedding_ps as PS
 from repro.core.collection import EmbeddingCollection
 from repro.core.embedding_ps import EmbeddingSpec
@@ -178,6 +179,10 @@ class PersiaTrainer:
         else:
             self.collection = adapter.collection.with_staleness(
                 self.mode.emb_staleness)
+        # one storage backend per table (core/backend.py): dense PS,
+        # host-LRU out-of-core, or either behind the compressed wire
+        self.backends = self.collection.make_backends()
+        self._needs_prepare = BK.any_requires_prepare(self.backends)
         self._fused = None
         self._eval = None
         self._decomposed = None
@@ -198,13 +203,19 @@ class PersiaTrainer:
                 f"{self.mode.dense_staleness})")
         kd, ke = jax.random.split(key)
         dense = self.adapter.init_dense(kd)
-        emb = self.collection.init(ke, emb_shards)
+        # per-table backend init (same key fan-out as collection.init)
+        keys = jax.random.split(ke, max(len(self.collection), 1))
+        emb = {n: self.backends[n].init(
+            keys[i], self.collection._shards_for(n, emb_shards))
+            for i, n in enumerate(self.collection.names)}
         emb_queue = {n: None for n in self.collection.names}
         dense_queue = None
         if batch_example is not None:
             ids = self.adapter.emb_ids(batch_example)
-            emb_queue = self.collection.queue_init(
-                {n: tuple(a.shape) for n, a in ids.items()})
+            emb_queue = {n: self.backends[n].queue_init(tuple(a.shape))
+                         for n, a in ids.items()}
+            for n in self.collection.names:
+                emb_queue.setdefault(n, None)
             if self.mode.dense_staleness > 0:
                 dense_queue = _dense_queue_init(dense,
                                                 self.mode.dense_staleness)
@@ -212,14 +223,41 @@ class PersiaTrainer:
                           emb_queue=emb_queue, dense_queue=dense_queue,
                           step=jnp.zeros((), jnp.int32))
 
+    # -- the host-side prepare phase (out-of-core fault-in) -------------------
+    #
+    # Host-backed tables (backend 'host_lru') cannot fault inside a jitted
+    # program: the trainer runs each backend's `prepare` once per step OUTSIDE
+    # jit — it loads missing rows host->device, writes evicted rows back, and
+    # translates the batch's logical ids to device ids (cache slots). Dense
+    # tables pass through untouched, so the all-dense fast path stays exactly
+    # the pre-backend program.
+
+    def _prepare(self, state: TrainState, batch):
+        """Returns (state-with-faulted-caches, dev_ids-or-None)."""
+        if not self._needs_prepare:
+            return state, None
+        ids = self.adapter.emb_ids(batch)
+        emb, dev_ids = BK.prepare_all(self.backends, state.emb, ids)
+        return state.replace(emb=emb), dev_ids
+
     # -- fused step (one program, one schedule) -------------------------------
 
-    def train_step(self, state: TrainState, batch):
+    def train_step(self, state: TrainState, batch, dev_ids=None):
         """The fused step as a pure traceable function (jit it yourself, or
-        use :meth:`step` for the cached donated jit)."""
-        adapter, coll, mode = self.adapter, self.collection, self.mode
-        ids = adapter.emb_ids(batch)
-        acts = coll.lookup(state.emb, ids)                      # Alg.1 fwd
+        use :meth:`step` for the cached donated jit). ``dev_ids`` carries
+        prepared device ids for host-backed tables; all-dense trainers may
+        leave it None."""
+        adapter, mode = self.adapter, self.mode
+        if dev_ids is None:
+            if self._needs_prepare:
+                raise ValueError(
+                    "this trainer has host-backed (out-of-core) tables: "
+                    "the fused step needs prepared device ids — call "
+                    "step()/decomposed_step(), which run the host fault-in "
+                    "phase, instead of jitting train_step directly")
+            dev_ids = adapter.emb_ids(batch)
+        acts, get_metrics = BK.lookup_all(self.backends, state.emb,
+                                          dev_ids)                # Alg.1 fwd
 
         def loss_fn(dense, acts_):
             return adapter.loss(dense, acts_, batch)
@@ -240,20 +278,24 @@ class PersiaTrainer:
                                      lr=lr)
 
         # ---- embedding side (Alg.1 bwd): async puts through the queues ----
-        emb, emb_queue = coll.hybrid_update(state.emb, state.emb_queue,
-                                            ids, agrads)
+        emb, emb_queue, put_metrics = BK.put_all(
+            self.backends, state.emb, state.emb_queue, dev_ids, agrads)
 
         metrics = dict(metrics)
         metrics["emb_grad_norm"] = _emb_grad_norm(agrads)
+        metrics.update(get_metrics)
+        metrics.update(put_metrics)
         return state.replace(dense=dense, opt=opt, emb=emb,
                              emb_queue=emb_queue, dense_queue=dense_queue,
                              step=state.step + 1), metrics
 
     def step(self, state: TrainState, batch):
-        """Fused step through a cached jit; donates ``state``."""
+        """Fused step through a cached jit; donates ``state``. Host-backed
+        tables fault their rows in (host-level) before the jitted program."""
+        state, dev_ids = self._prepare(state, batch)
         if self._fused is None:
             self._fused = jax.jit(self.train_step, donate_argnums=(0,))
-        return self._fused(state, batch)
+        return self._fused(state, batch, dev_ids)
 
     # -- decomposed pipeline ---------------------------------------------------
     #
@@ -268,12 +310,13 @@ class PersiaTrainer:
         """(lookup_fn, dense_step, emb_put) — separate jitted dispatches."""
         if self._decomposed is not None:
             return self._decomposed
-        adapter, coll, mode = self.adapter, self.collection, self.mode
+        adapter, mode = self.adapter, self.mode
+        backends = self.backends
         lr_fn, opt_update = self.lr_fn, self.opt_update
 
         @jax.jit
-        def lookup_fn(emb_states, ids):
-            return coll.lookup(emb_states, ids)                # Alg.1 fwd
+        def lookup_fn(emb_states, dev_ids):
+            return BK.lookup_all(backends, emb_states, dev_ids)  # Alg.1 fwd
 
         @partial(jax.jit, donate_argnums=(0, 1, 2))
         def dense_step(dense, opt, dense_queue, acts, batch, step_no):
@@ -292,42 +335,76 @@ class PersiaTrainer:
             return dense, opt, dense_queue, agrads, metrics
 
         @partial(jax.jit, donate_argnums=(0, 1))
-        def emb_put(emb_states, queues, ids, agrads):          # Alg.1 bwd
-            return coll.hybrid_update(emb_states, queues, ids, agrads)
+        def emb_put(emb_states, queues, dev_ids, agrads):      # Alg.1 bwd
+            return BK.put_all(backends, emb_states, queues, dev_ids, agrads)
 
         self._decomposed = (lookup_fn, dense_step, emb_put)
         return self._decomposed
 
     def decomposed_step(self, state: TrainState, batch):
-        """One iteration through the decomposed pipeline (host-driven)."""
+        """One iteration through the decomposed pipeline (host-driven): the
+        out-of-core fault-in (prepare), the embedding get, the dense step
+        and the embedding put are separate dispatches."""
         lookup_fn, dense_step, emb_put = self.decomposed_fns()
-        ids = self.adapter.emb_ids(batch)
-        acts = lookup_fn(state.emb, ids)
+        state, dev_ids = self._prepare(state, batch)
+        if dev_ids is None:
+            dev_ids = self.adapter.emb_ids(batch)
+        acts, get_metrics = lookup_fn(state.emb, dev_ids)
         dense, opt, dense_queue, agrads, metrics = dense_step(
             state.dense, state.opt, state.dense_queue, acts, batch,
             state.step)
         # the put is dispatched without blocking — the async leg of the hybrid
-        emb, queues = emb_put(state.emb, state.emb_queue, ids, agrads)
+        emb, queues, put_metrics = emb_put(state.emb, state.emb_queue,
+                                           dev_ids, agrads)
+        metrics = dict(metrics)
+        metrics.update(get_metrics)
+        metrics.update(put_metrics)
         return state.replace(dense=dense, opt=opt, dense_queue=dense_queue,
                              emb=emb, emb_queue=queues,
                              step=state.step + 1), metrics
 
     # -- eval / predict --------------------------------------------------------
 
-    def eval_step(self, state: TrainState, batch):
-        ids = self.adapter.emb_ids(batch)
-        acts = self.collection.lookup(state.emb, ids)
+    def eval_step(self, state: TrainState, batch, dev_ids=None):
+        if dev_ids is None:
+            if self._needs_prepare:
+                raise ValueError(
+                    "this trainer has host-backed (out-of-core) tables: "
+                    "eval_step needs prepared device ids — call eval()")
+            dev_ids = self.adapter.emb_ids(batch)
+        acts, _ = BK.lookup_all(self.backends, state.emb, dev_ids)
         _, metrics = self.adapter.loss(state.dense, acts, batch)
         return metrics
 
     def eval(self, state: TrainState, batch):
+        """Eval on the current tables. For host-backed tables this faults
+        the batch's rows into the device cache first and updates
+        ``state.emb`` IN PLACE (TrainState is mutable) so the caller's
+        state stays consistent with the backend's host-side slot maps.
+        Caveat: if the cache is near capacity, that fault-in can evict
+        slots whose staleness-queue puts are still pending — those puts
+        are then dropped (tolerated, Alg.1 lock-free semantics), so eval
+        on host-backed tables is not perfectly side-effect-free."""
+        state, dev_ids = self._prepare_inplace(state, batch)
         if self._eval is None:
             self._eval = jax.jit(self.eval_step)
-        return self._eval(state, batch)
+        return self._eval(state, batch, dev_ids)
+
+    def _prepare_inplace(self, state: TrainState, batch):
+        """prepare() for read paths that return metrics, not state: the
+        faulted cache arrays are written back into the caller's TrainState."""
+        if not self._needs_prepare:
+            return state, None
+        new_state, dev_ids = self._prepare(state, batch)
+        state.emb = new_state.emb
+        return state, dev_ids
 
     def lookup(self, state: TrainState, batch):
-        return self.collection.lookup(state.emb,
-                                      self.adapter.emb_ids(batch))
+        state, dev_ids = self._prepare_inplace(state, batch)
+        if dev_ids is None:
+            dev_ids = self.adapter.emb_ids(batch)
+        acts, _ = BK.lookup_all(self.backends, state.emb, dev_ids)
+        return acts
 
     def predict(self, state: TrainState, batch):
         if self.adapter.predict is None:
@@ -351,7 +428,10 @@ class PersiaTrainer:
         dense_tree = {"dense": to_np(state.dense), "opt": to_np(state.opt)}
         if state.dense_queue is not None:
             dense_tree["dense_queue"] = to_np(state.dense_queue)
-        emb_tree = {"emb": to_np(state.emb),
+        # each backend snapshots its own tiers (dense: the PS shard arrays;
+        # host_lru: device cache + host store + slot map, recency included)
+        emb_tree = {"emb": {n: self.backends[n].state_for_checkpoint(
+                        state.emb[n]) for n in state.emb},
                     "emb_queue": to_np(state.emb_queue)}
         return save_checkpoint(directory, step, dense_tree, emb_tree)
 
@@ -368,13 +448,13 @@ class PersiaTrainer:
             raise ValueError(
                 f"checkpoint tables {sorted(got)} do not match this "
                 f"trainer's collection {sorted(want)}")
+        emb = {}
         for n in self.collection.names:
-            spec, table = self.collection[n], emb_tree["emb"][n]["table"]
-            if table.shape[1] != spec.dim or table.shape[0] < spec.rows:
-                raise ValueError(
-                    f"checkpoint table {n!r} has shape {tuple(table.shape)} "
-                    f"but this trainer's spec wants >= ({spec.rows}, "
-                    f"{spec.dim}) — collection changed since the save?")
+            try:
+                emb[n] = self.backends[n].restore_from_checkpoint(
+                    emb_tree["emb"][n])
+            except ValueError as e:
+                raise ValueError(f"checkpoint table {n!r}: {e}") from e
         queues = emb_tree.get("emb_queue", {})
         emb_queue = {n: queues.get(n) for n in self.collection.names}
         for n in self.collection.names:
@@ -400,7 +480,7 @@ class PersiaTrainer:
                 "trained under")
         return TrainState(
             dense=dense_tree["dense"], opt=dense_tree["opt"],
-            emb=emb_tree["emb"], emb_queue=emb_queue,
+            emb=emb, emb_queue=emb_queue,
             dense_queue=dq,
             step=jnp.asarray(step_no, jnp.int32))
 

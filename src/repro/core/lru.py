@@ -80,12 +80,48 @@ class LRUEmbeddingStore:
         self._push_front(slot)
         return slot
 
+    def _touch_many(self, slots: list[int]):
+        """Touch slots in sequence (later = more recent). Equivalent to
+        calling _touch per slot, but deduplicated to the last occurrence so
+        the linked-list walk is one unlink+push per distinct slot."""
+        seen = set()
+        order = []
+        for s in reversed(slots):
+            if s not in seen:
+                seen.add(s)
+                order.append(s)
+        for s in reversed(order):
+            if self.head != s:
+                self._unlink(s)
+                self._push_front(s)
+
+    def _resolve(self, ids: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """Batched id -> slot resolution: (int64 ids, int64 slots, -1 miss)."""
+        ids = np.asarray(ids, np.int64).reshape(-1)
+        idx = self.index
+        slots = np.fromiter((idx.get(k, -1) for k in ids.tolist()),
+                            np.int64, len(ids))
+        return ids, slots
+
     # -- public API -------------------------------------------------------------
     def get(self, ids: np.ndarray) -> np.ndarray:
         """Fetch rows (allocating/initialising on miss). ids: (n,) int64."""
-        out = np.empty((len(ids), self.dim), np.float32)
-        for i, key in enumerate(np.asarray(ids, np.int64)):
-            key = int(key)
+        return self.read_rows(ids)[0]
+
+    def read_rows(self, ids: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """Batched fetch of (vectors, optimizer accumulators), allocating and
+        initialising on miss. The hit path is numpy-batched: one dict sweep
+        for slot resolution, one linked-list recency pass, one fancy-indexed
+        gather per array. Batches containing misses walk per id — an
+        allocation's eviction can invalidate a slot resolved earlier in the
+        same batch, so only the all-hit case is safely batchable."""
+        ids, slots = self._resolve(ids)
+        if slots.size and (slots >= 0).all():
+            self._touch_many(slots.tolist())
+            return self.vectors[slots].copy(), self.opt_acc[slots].copy()
+        out_v = np.empty((len(ids), self.dim), np.float32)
+        out_a = np.empty(len(ids), np.float32)
+        for i, key in enumerate(ids.tolist()):
             slot = self.index.get(key)
             if slot is None:
                 slot = self._alloc(key)
@@ -94,21 +130,91 @@ class LRUEmbeddingStore:
                 self.opt_acc[slot] = 0.0
             else:
                 self._touch(slot)
-            out[i] = self.vectors[slot]
-        return out
+            out_v[i] = self.vectors[slot]
+            out_a[i] = self.opt_acc[slot]
+        return out_v, out_a
 
     def put(self, ids: np.ndarray, grads: np.ndarray, lr: float = 1e-2,
             eps: float = 1e-8):
         """Apply gradient rows with the PS-side adagrad (lock-free analog:
-        last-writer-wins per row, matching Alg.1's no-lock semantics)."""
-        for key, g in zip(np.asarray(ids, np.int64), grads):
-            key = int(key)
-            slot = self.index.get(key)
-            if slot is None:
-                continue                     # paper: dropped puts tolerated
+        last-writer-wins per row, matching Alg.1's no-lock semantics).
+        Unique-id batches take a fully numpy-batched path; batches with
+        repeated ids fall back to the sequential per-row semantics."""
+        ids, slots = self._resolve(ids)
+        grads = np.asarray(grads, np.float32).reshape(len(ids), self.dim)
+        live = slots >= 0                    # paper: dropped puts tolerated
+        if not live.any():
+            return
+        l_ids, l_slots, l_g = ids[live], slots[live], grads[live]
+        if len(np.unique(l_slots)) == len(l_slots):
+            acc = self.opt_acc[l_slots] + np.mean(l_g * l_g, axis=-1)
+            self.opt_acc[l_slots] = acc
+            self.vectors[l_slots] -= lr * l_g / np.sqrt(acc + eps)[:, None]
+            return
+        for slot, g in zip(l_slots.tolist(), l_g):
             acc = self.opt_acc[slot] + float(np.mean(g * g))
             self.opt_acc[slot] = acc
             self.vectors[slot] -= lr * g / np.sqrt(acc + eps)
+
+    def write_rows(self, ids: np.ndarray, vectors: np.ndarray,
+                   opt_acc: np.ndarray | None = None):
+        """Overwrite rows wholesale (the device cache's write-back path: the
+        optimizer already ran on device, so values land verbatim). Allocates
+        missing ids; batch-vectorized on the hit path; touches recency."""
+        ids, slots = self._resolve(ids)
+        vectors = np.asarray(vectors, np.float32).reshape(len(ids), self.dim)
+        acc = None if opt_acc is None \
+            else np.asarray(opt_acc, np.float32).reshape(-1)
+        if slots.size and (slots >= 0).all():    # all-hit: fully batched
+            self.vectors[slots] = vectors
+            if acc is not None:
+                self.opt_acc[slots] = acc
+            self._touch_many(slots.tolist())
+            return
+        for i, key in enumerate(ids.tolist()):   # misses: sequential allocs
+            slot = self.index.get(key)
+            if slot is None:
+                slot = self._alloc(key)
+            else:
+                self._touch(slot)
+            self.vectors[slot] = vectors[i]
+            if acc is not None:
+                self.opt_acc[slot] = acc[i]
+
+    def preload(self, ids: np.ndarray, vectors: np.ndarray,
+                opt_acc: np.ndarray | None = None):
+        """Bulk-load an EMPTY store (the out-of-core backend's init path):
+        rows land in slots 0..n-1 with recency = insertion order (last id
+        most-recent), all linked-list pointers built vectorized."""
+        ids = np.asarray(ids, np.int64).reshape(-1)
+        n = len(ids)
+        if n == 0:
+            return
+        if self.size != 0:
+            raise ValueError("preload requires an empty store")
+        if n > self.capacity:
+            raise ValueError(f"preload of {n} rows exceeds capacity "
+                             f"{self.capacity}")
+        self.vectors[:n] = np.asarray(vectors, np.float32) \
+            .reshape(n, self.dim)
+        if opt_acc is not None:
+            self.opt_acc[:n] = np.asarray(opt_acc, np.float32).reshape(-1)
+        self.keys[:n] = ids
+        # chain: slot n-1 (inserted last) is MRU head, slot 0 is LRU tail
+        self.prev[:n] = np.arange(1, n + 1, dtype=np.int64)
+        self.prev[n - 1] = _NIL
+        self.next[:n] = np.arange(-1, n - 1, dtype=np.int64)
+        self.index = {int(k): i for i, k in enumerate(ids.tolist())}
+        self.head, self.tail, self.size = n - 1, 0, n
+
+    def recency_ids(self) -> list[int]:
+        """Resident ids most- to least-recently used (test/inspection aid)."""
+        out = []
+        slot = self.head
+        while slot != _NIL:
+            out.append(int(self.keys[slot]))
+            slot = int(self.next[slot])
+        return out
 
     # -- zero-copy style (de)serialisation ---------------------------------------
     def serialize(self) -> dict[str, np.ndarray]:

@@ -11,7 +11,6 @@ tiles of TILE_ROWS blocks are staged through VMEM. TILE_ROWS is a multiple of
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -1,7 +1,6 @@
 """Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract)."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 KAPPA = 32_768.0

@@ -9,6 +9,7 @@ Usage:
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -16,17 +17,23 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core.collection import EmbeddingCollection
+from repro.core.backend import create_backend
 from repro.core.embedding_ps import EmbeddingSpec
 from repro.models import transformer as T
 
 
-def serve(cfg, batch=4, prompt_len=32, gen=16, seed=0, temperature=0.0):
+def serve(cfg, batch=4, prompt_len=32, gen=16, seed=0, temperature=0.0,
+          emb_backend="dense", cache_rows=0):
     key = jax.random.PRNGKey(seed)
     dense = T.init_dense(cfg, key)
-    coll = EmbeddingCollection.single("vocab", EmbeddingSpec(
-        rows=cfg.vocab_size, dim=cfg.d_model))
-    emb = coll.init(key)
+    spec = EmbeddingSpec(rows=cfg.vocab_size, dim=cfg.d_model,
+                         backend=emb_backend)
+    if emb_backend.startswith("host_lru"):
+        spec = dataclasses.replace(
+            spec, cache_rows=cache_rows or max(1024, cfg.vocab_size // 8))
+    backend = create_backend(spec)
+    # same key fan-out as EmbeddingCollection.init (one table -> keys[0])
+    emb = backend.init(jax.random.split(key, 1)[0])
     rng = np.random.default_rng(seed)
     prompts = jnp.asarray(rng.integers(0, cfg.vocab_size,
                                        (batch, prompt_len)), jnp.int32)
@@ -40,14 +47,14 @@ def serve(cfg, batch=4, prompt_len=32, gen=16, seed=0, temperature=0.0):
             (batch, cfg.n_memory_tokens, cfg.d_memory)) * 0.1, jnp.float32)
 
     @jax.jit
-    def prefill_fn(emb_state, dense, prompts, memory):
-        acts = coll.lookup(emb_state, {"vocab": prompts})["vocab"]
+    def prefill_fn(emb_state, dense, dev_ids, memory):
+        acts, _ = backend.lookup(emb_state, dev_ids)
         return T.prefill(cfg, dense, acts, memory=memory,
                          max_len=prompt_len + gen)
 
     @jax.jit
-    def decode_fn(emb_state, dense, tok, caches, key):
-        acts = coll.lookup(emb_state, {"vocab": tok})["vocab"]
+    def decode_fn(emb_state, dense, dev_ids, caches, key):
+        acts, _ = backend.lookup(emb_state, dev_ids)
         logits, caches = T.decode_step(cfg, dense, acts, caches)
         logits = logits[:, 0, : cfg.vocab_size]
         if temperature > 0:
@@ -57,7 +64,9 @@ def serve(cfg, batch=4, prompt_len=32, gen=16, seed=0, temperature=0.0):
         return nxt.astype(jnp.int32)[:, None], caches
 
     t0 = time.time()
-    logits, caches = prefill_fn(emb, dense, prompts, memory)
+    # host-backed vocab tables fault their rows in before each dispatch
+    emb, dev = backend.prepare(emb, prompts)
+    logits, caches = prefill_fn(emb, dense, dev, memory)
     tok = jnp.argmax(logits[:, 0, : cfg.vocab_size], -1)[:, None] \
         .astype(jnp.int32)
     jax.block_until_ready(tok)
@@ -67,7 +76,8 @@ def serve(cfg, batch=4, prompt_len=32, gen=16, seed=0, temperature=0.0):
     t1 = time.time()
     for i in range(gen - 1):
         key, sub = jax.random.split(key)
-        tok, caches = decode_fn(emb, dense, tok, caches, sub)
+        emb, dev = backend.prepare(emb, tok)
+        tok, caches = decode_fn(emb, dense, dev, caches, sub)
         out.append(tok)
     jax.block_until_ready(tok)
     t_decode = time.time() - t1
@@ -89,10 +99,18 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--emb-backend", default="dense",
+                    choices=["dense", "host_lru", "dense+compressed",
+                             "host_lru+compressed"],
+                    help="vocab-table storage backend: host_lru serves the "
+                         "embedding tier out-of-core from host RAM")
+    ap.add_argument("--cache-rows", type=int, default=0,
+                    help="host_lru device-cache slots (0 = vocab/8)")
     args = ap.parse_args()
     cfg = get_config(args.arch, reduced=args.reduced)
     res = serve(cfg, args.batch, args.prompt_len, args.gen,
-                temperature=args.temperature)
+                temperature=args.temperature,
+                emb_backend=args.emb_backend, cache_rows=args.cache_rows)
     print(f"arch={cfg.name} batch={args.batch} prompt={args.prompt_len} "
           f"gen={args.gen}")
     print(f"prefill {res['prefill_s']:.2f}s decode {res['decode_s']:.2f}s "

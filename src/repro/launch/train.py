@@ -68,11 +68,23 @@ def _step_fn(trainer: PersiaTrainer, pipeline: str):
     return trainer.step
 
 
+def _ctr_collection_for(cfg, ds, args):
+    """Per-field tables with the CLI-selected storage backend (dense PS,
+    host-LRU out-of-core, or either behind the compressed wire)."""
+    coll = adapters.ctr_collection(cfg, lr=args.emb_lr,
+                                   field_rows=ds.field_rows())
+    if args.emb_backend != "dense":
+        cache = args.cache_rows or max(1024, ds.rows_per_field // 8)
+        coll = coll.with_backend(args.emb_backend, cache)
+    return coll
+
+
 def train_ctr(args):
     ds = CTR_BENCHMARKS[args.dataset]
     cfg = scaled_recsys_cfg(args.dataset)
-    adapter = adapters.recsys_adapter(cfg, lr=args.emb_lr,
-                                      field_rows=ds.field_rows())
+    adapter = adapters.recsys_adapter(
+        cfg, lr=args.emb_lr, field_rows=ds.field_rows(),
+        collection=_ctr_collection_for(cfg, ds, args))
     mode = mode_from_name(args.mode, args.tau)
     trainer = PersiaTrainer(adapter, mode,
                             OptConfig(kind="adam", lr=args.lr))
@@ -130,8 +142,15 @@ def train_ctr(args):
 
 
 def train_lm(args):
+    import dataclasses
     cfg = small_lm_cfg()
     adapter = adapters.lm_adapter(cfg, lr=args.emb_lr)
+    if args.emb_backend != "dense":
+        cache = args.cache_rows or max(1024, cfg.vocab_size // 8)
+        adapter = dataclasses.replace(
+            adapter,
+            collection=adapter.collection.with_backend(args.emb_backend,
+                                                       cache))
     mode = mode_from_name(args.mode, args.tau)
     trainer = PersiaTrainer(adapter, mode,
                             OptConfig(kind="adam", lr=args.lr))
@@ -172,6 +191,15 @@ def main():
     ap.add_argument("--batch", type=int, default=512)
     ap.add_argument("--seq-len", type=int, default=128)
     ap.add_argument("--tau", type=int, default=3)
+    ap.add_argument("--emb-backend", default="dense",
+                    choices=["dense", "host_lru", "dense+compressed",
+                             "host_lru+compressed"],
+                    help="embedding storage backend (core/backend.py): "
+                         "host_lru keeps tables host-side behind a device "
+                         "hot-cache; +compressed adds the §4.2.3 wire")
+    ap.add_argument("--cache-rows", type=int, default=0,
+                    help="host_lru device-cache slots per table "
+                         "(0 = rows_per_field/8, at least 1024)")
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--emb-lr", type=float, default=5e-2)
     ap.add_argument("--eval-every", type=int, default=25)

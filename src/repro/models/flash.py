@@ -17,7 +17,6 @@ Pallas TPU kernel would slot in behind the same interface on real hardware.
 from __future__ import annotations
 
 import functools
-import math
 import os
 
 import jax

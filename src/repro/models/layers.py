@@ -4,7 +4,6 @@ GQA / MLA attention blocks, MLPs. Pure-jnp, mesh-agnostic (sharding hints via
 from __future__ import annotations
 
 import math
-from functools import partial
 
 import jax
 import jax.numpy as jnp

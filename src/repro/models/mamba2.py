@@ -14,7 +14,7 @@ import math
 import jax
 import jax.numpy as jnp
 
-from repro.utils import shard, cdiv
+from repro.utils import shard
 from repro.models.layers import dense_init
 
 

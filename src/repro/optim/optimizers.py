@@ -6,7 +6,6 @@ under jit/GSPMD (states inherit the params' sharding).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any
 
 import jax
 import jax.numpy as jnp

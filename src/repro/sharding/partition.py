@@ -14,7 +14,6 @@ import re
 from typing import Any
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.embedding_ps import EmbeddingSpec, table_spec
@@ -78,18 +77,26 @@ def dense_param_specs(params, stage=None) -> Any:
 
 
 def emb_state_specs(emb_state, spec: EmbeddingSpec):
+    """Dense PS shards row-shard per their mode; a host_lru device cache
+    (table + acc + slot_ids over cache_rows slots) row-shards the same way
+    (the hot set is what lives device-side)."""
     t = table_spec(spec)
     out = {"table": t}
     if "acc" in emb_state:
         out["acc"] = P(t[0])
+    if "slot_ids" in emb_state:
+        out["slot_ids"] = P(t[0])
     return out
 
 
 def queue_specs(queue):
     if queue is None:
         return None
-    return {"ids": P(None, BATCH), "grads": P(None, BATCH, None),
-            "ptr": P(), "filled": P()}
+    out = {"ids": P(None, BATCH), "grads": P(None, BATCH, None),
+           "ptr": P(), "filled": P()}
+    if "slots" in queue:                 # host_lru queues carry (slot, id)
+        out["slots"] = P(None, BATCH)
+    return out
 
 
 def state_specs(state, emb_spec: EmbeddingSpec):

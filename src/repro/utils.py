@@ -1,7 +1,6 @@
 """Small shared utilities: pytree helpers, sharding helpers, dtype policy."""
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable
 
 import jax

@@ -1,6 +1,5 @@
 """Compression layer: lossless index roundtrip (exact), lossy blockscale
 error bounds, on-device put dedup vs oracle — paper §4.2.3."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -38,6 +37,17 @@ else:
                                           (40, 3, 13)])
     def test_index_compression_lossless(B, L, rows):
         _index_lossless_case(B, L, rows)
+
+
+def test_index_compression_rejects_oversized_batch():
+    """Sample indices are uint16 on the wire: batches past 65535 must fail
+    loudly (a bare assert would vanish under `python -O`)."""
+    ids = np.zeros((65536, 1), np.int64)
+    with pytest.raises(ValueError, match="65535"):
+        C.compress_index_batch(ids)
+    # the boundary itself is legal
+    u, off, smp = C.compress_index_batch(np.zeros((65535, 1), np.int64))
+    assert smp.dtype == np.uint16 and int(smp.max()) == 65534
 
 
 def test_index_compression_ratio_gt1_on_skewed():

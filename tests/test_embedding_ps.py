@@ -1,6 +1,5 @@
 """Embedding PS semantics: lookup/put vs a dense oracle, uniform-shuffle
 balance, bounded-staleness queue behaviour (Assumption 1: t - D(t) = tau)."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

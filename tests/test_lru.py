@@ -90,6 +90,67 @@ def test_put_on_missing_id_is_noop():
     assert 42 not in store.index
 
 
+def test_eviction_counter_tracks_every_eviction():
+    """Deterministic eviction accounting: the counter must advance once per
+    evicted entry — batched and single gets alike."""
+    store = LRUEmbeddingStore(3, dim=2)
+    store.get(np.array([1, 2, 3]))           # fills, no eviction
+    assert store.evictions == 0
+    store.get(np.array([4]))                 # evicts 1 (LRU)
+    assert store.evictions == 1
+    store.get(np.array([1, 5]))              # evicts 2 then 3
+    assert store.evictions == 3
+    assert set(store.index) == {4, 1, 5}
+    store.get(np.array([4, 1, 5]))           # all hits: no eviction
+    assert store.evictions == 3
+
+
+def test_batched_get_recency_matches_sequential():
+    """The numpy-batched hit path must leave the identical recency order a
+    per-id sequence of gets would."""
+    rng = np.random.default_rng(7)
+    seq = rng.integers(0, 20, 120)
+    a = LRUEmbeddingStore(8, dim=4, seed=1)
+    b = LRUEmbeddingStore(8, dim=4, seed=1)
+    for i in range(0, len(seq), 6):          # batched (hits + misses mixed)
+        a.get(seq[i: i + 6])
+    for i in seq:                            # one id at a time
+        b.get(np.array([i]))
+    assert a.recency_ids() == b.recency_ids()
+    assert a.evictions == b.evictions
+
+
+def test_recency_order_survives_serialize_roundtrip():
+    store = LRUEmbeddingStore(6, dim=2, seed=3)
+    store.get(np.array([5, 1, 9, 1, 7]))
+    back = LRUEmbeddingStore.deserialize(store.serialize())
+    assert back.recency_ids() == store.recency_ids() == [7, 1, 9, 5]
+
+
+def test_write_and_read_rows_roundtrip():
+    store = LRUEmbeddingStore(8, dim=4)
+    v = np.arange(8, dtype=np.float32).reshape(2, 4)
+    acc = np.array([0.5, 2.0], np.float32)
+    store.write_rows(np.array([10, 11]), v, acc)
+    got_v, got_a = store.read_rows(np.array([10, 11]))
+    np.testing.assert_array_equal(got_v, v)
+    np.testing.assert_array_equal(got_a, acc)
+    assert store.recency_ids()[0] == 11
+
+
+def test_preload_bulk_load_order_and_values():
+    store = LRUEmbeddingStore(16, dim=2)
+    ids = np.array([3, 8, 5])
+    v = np.arange(6, dtype=np.float32).reshape(3, 2)
+    store.preload(ids, v, np.array([1.0, 2.0, 3.0]))
+    assert store.recency_ids() == [5, 8, 3]          # last preloaded = MRU
+    got_v, got_a = store.read_rows(np.array([8]))
+    np.testing.assert_array_equal(got_v[0], [2.0, 3.0])
+    assert got_a[0] == 2.0
+    with pytest.raises(ValueError, match="empty"):
+        store.preload(ids, v)
+
+
 def test_serialize_roundtrip():
     store = LRUEmbeddingStore(8, dim=4, seed=1)
     store.get(np.arange(12))              # with evictions

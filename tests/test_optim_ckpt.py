@@ -1,14 +1,13 @@
 """Optimizers + checkpointing + theory calculator."""
 import os
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import load_checkpoint, save_checkpoint, CheckpointManager
 from repro.core.theory import estimate_alpha, hybrid_rate_bound, optimal_lr
-from repro.optim.optimizers import (OptConfig, adam_init, adam_update,
-                                    linear_warmup_cosine, make_optimizer,
+from repro.optim.optimizers import (adam_init, adam_update,
+                                    linear_warmup_cosine,
                                     sgd_init, sgd_update)
 
 
@@ -44,7 +43,6 @@ def test_grad_clip_equals_prescaled():
 
 
 def test_lr_schedule():
-    import numpy as _np
     s = jnp.arange(0, 100)
     lr = linear_warmup_cosine(s, base_lr=1.0, warmup=10, total=100)
     assert float(lr[0]) == 0.0
