@@ -8,6 +8,7 @@ the dry-run artifacts when present).
   capacity      Fig 9          — throughput vs table scale, LRU tier, 100T
   compression   §4.2.3         — blockscale fp16 + lossless index dedup
   staleness     Thm 1          — tau & alpha sweeps vs the bound
+  pipeline      Fig 4-5        — serial vs async-pipelined execution
 """
 from __future__ import annotations
 
@@ -18,7 +19,7 @@ import sys
 import traceback
 
 SUITES = ["compression", "scalability", "capacity", "convergence",
-          "staleness", "end_to_end"]
+          "staleness", "end_to_end", "pipeline"]
 
 
 def main() -> None:
@@ -38,6 +39,8 @@ def main() -> None:
             kwargs = {}
             if args.fast and name in ("convergence", "staleness"):
                 kwargs["steps"] = 40
+            if args.fast and name == "pipeline":
+                kwargs["steps"] = 8
             if args.fast and name == "end_to_end":
                 kwargs["target"] = 0.60
             rows = mod.run(**kwargs)

@@ -6,3 +6,4 @@ from repro.core.collection import EmbeddingCollection
 from repro.core.hybrid import (TrainMode, ModelAdapter, PersiaTrainer,
                                TrainState, init_train_state,
                                make_train_step, make_eval_step)
+from repro.core.pipeline import PipelinedTrainer, PipelineStageError

@@ -36,6 +36,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import threading
 
 import jax
 import jax.numpy as jnp
@@ -58,6 +59,45 @@ def _dedup_cap(n_put: int, n_rows: int) -> int:
     return round_up(min(n_put, n_rows), min(1024, n_put))
 
 
+def _pow2_bucket(n: int, floor: int = 32) -> int:
+    """Smallest power of two >= n (and >= floor). The fault path pads its
+    scatter/gather shapes to these buckets: each distinct miss count would
+    otherwise dispatch a fresh shape and trigger its own XLA compile,
+    turning the per-step prepare into a seconds-long recompile treadmill."""
+    b = floor
+    while b < n:
+        b <<= 1
+    return b
+
+
+# the fault path's device ops, fused and jitted (cached per bucket shape):
+# one dispatch per table instead of one per array keeps the host prepare
+# phase off the dispatch-overhead treadmill
+
+@jax.jit
+def _fault_apply(table, slot_ids, vslots, vecs, ids):
+    return (table.at[vslots].set(vecs.astype(table.dtype)),
+            slot_ids.at[vslots].set(ids))
+
+
+@jax.jit
+def _fault_apply_acc(table, slot_ids, acc, vslots, vecs, ids, accs):
+    return (table.at[vslots].set(vecs.astype(table.dtype)),
+            slot_ids.at[vslots].set(ids),
+            acc.at[vslots].set(accs))
+
+
+@jax.jit
+def _gather_rows(table, eslots):
+    return table[eslots].astype(jnp.float32)
+
+
+@jax.jit
+def _gather_rows_acc(table, acc, eslots):
+    return (table[eslots].astype(jnp.float32),
+            acc[eslots].astype(jnp.float32))
+
+
 class EmbeddingBackend:
     """Protocol base. Subclasses own one table's storage (device arrays are
     threaded through as pytrees; anything host-resident lives on ``self``).
@@ -74,6 +114,19 @@ class EmbeddingBackend:
     def prepare(self, state, ids):
         """(state, ids) -> (state, device_ids). Host-level, once per step."""
         return state, ids
+
+    # slot pinning: a pipelined caller pins a batch's device slots between
+    # its prepare and its applied put, so a later batch's fault-in cannot
+    # recycle rows still in flight. No-ops for device-resident backends
+    # (device ids ARE logical ids — nothing is ever recycled).
+    def pin_slots(self, dev_ids):
+        pass
+
+    def unpin_slots(self, dev_ids):
+        pass
+
+    def reset_pins(self):
+        pass
 
     def queue_init(self, ids_shape):
         raise NotImplementedError
@@ -179,6 +232,13 @@ class HostLRUBackend(EmbeddingBackend):
     dense backend, eval is then not perfectly side-effect-free. Alg.1's
     lock-free semantics tolerate the loss; size ``cache_rows`` above the
     combined train+eval working set where that matters.
+
+    The host tier (slot map, clock, LRU store) is guarded by an RLock:
+    ``prepare`` may be called from a pipeline's prepare-stage thread while
+    another thread (eval, checkpointing) touches the same backend, and the
+    slot bookkeeping must stay a bijection under that interleaving. Callers
+    are still responsible for sequencing the *device-array* state they
+    thread through prepare/put (the pipeline's table-store lock does this).
     """
 
     requires_prepare = True
@@ -193,9 +253,11 @@ class HostLRUBackend(EmbeddingBackend):
         self.spec = spec
         self.cache_rows = int(spec.cache_rows)
         self.store: LRUEmbeddingStore | None = None
+        self._lock = threading.RLock()
         self._slot_for_id: dict[int, int] = {}
         self._id_for_slot = np.full(self.cache_rows, -1, np.int64)
         self._slot_clock = np.zeros(self.cache_rows, np.int64)
+        self._pin_count = np.zeros(self.cache_rows, np.int32)
         self._tick = 0
         self.faults = 0          # rows moved host -> device
         self.writebacks = 0      # rows moved device -> host
@@ -206,6 +268,10 @@ class HostLRUBackend(EmbeddingBackend):
         if shards != 1:
             raise ValueError("host_lru is a per-host tier: the device cache "
                              "is single-shard (got shards={})".format(shards))
+        with self._lock:
+            return self._init_locked(key, scale)
+
+    def _init_locked(self, key, scale: float):
         spec = self.spec
         # draw the SAME init values the dense backend would, then park them
         # host-side: host row for id i is what a dense lookup of i would
@@ -226,6 +292,7 @@ class HostLRUBackend(EmbeddingBackend):
         self._slot_for_id = {}
         self._id_for_slot = np.full(self.cache_rows, -1, np.int64)
         self._slot_clock = np.zeros(self.cache_rows, np.int64)
+        self._pin_count = np.zeros(self.cache_rows, np.int32)
         self._tick = 0
         self.faults = self.writebacks = 0
         state = {
@@ -238,7 +305,13 @@ class HostLRUBackend(EmbeddingBackend):
 
     def prepare(self, state, ids):
         """Fault the batch's rows into the device cache; translate ids to
-        cache-slot indices (-1 for padding / out-of-range)."""
+        cache-slot indices (-1 for padding / out-of-range). Thread-safe:
+        the whole fault-in (slot map + LRU store + clock) is one critical
+        section, so concurrent callers see consistent slot bookkeeping."""
+        with self._lock:
+            return self._prepare_locked(state, ids)
+
+    def _prepare_locked(self, state, ids):
         spec = self.spec
         flat = np.asarray(ids, np.int64).reshape(-1)
         valid = (flat >= 0) & (flat < spec.rows)
@@ -259,14 +332,29 @@ class HostLRUBackend(EmbeddingBackend):
             victims = self._free_slots(hit_slots, missing.size, state)
             vecs, accs = self.store.read_rows(missing)
             self.faults += missing.size
-            vslots = jnp.asarray(victims, jnp.int32)
-            state["table"] = jnp.asarray(state["table"]) \
-                .at[vslots].set(jnp.asarray(vecs, spec.dtype))
-            state["slot_ids"] = jnp.asarray(state["slot_ids"]) \
-                .at[vslots].set(jnp.asarray(missing, jnp.int32))
+            # bucket the scatter shape (see _pow2_bucket): pad slots index
+            # one past the cache — an out-of-bounds scatter update, which
+            # JAX drops — so padding never touches a real row
+            m, bucket = missing.size, _pow2_bucket(missing.size)
+            pad_slots = np.full(bucket, self.cache_rows, np.int64)
+            pad_slots[:m] = victims
+            pad_vecs = np.zeros((bucket, spec.dim), np.float32)
+            pad_vecs[:m] = vecs
+            pad_ids = np.full(bucket, -1, np.int64)
+            pad_ids[:m] = missing
+            vslots = jnp.asarray(pad_slots, jnp.int32)
+            vecs_j = jnp.asarray(pad_vecs, jnp.float32)
+            ids_j = jnp.asarray(pad_ids, jnp.int32)
             if "acc" in state:
-                state["acc"] = jnp.asarray(state["acc"]) \
-                    .at[vslots].set(jnp.asarray(accs, jnp.float32))
+                pad_accs = np.zeros(bucket, np.float32)
+                pad_accs[:m] = accs
+                state["table"], state["slot_ids"], state["acc"] = \
+                    _fault_apply_acc(state["table"], state["slot_ids"],
+                                     state["acc"], vslots, vecs_j, ids_j,
+                                     jnp.asarray(pad_accs, jnp.float32))
+            else:
+                state["table"], state["slot_ids"] = _fault_apply(
+                    state["table"], state["slot_ids"], vslots, vecs_j, ids_j)
             for k, s in zip(missing.tolist(), victims.tolist()):
                 smap[k] = s
             self._id_for_slot[victims] = missing
@@ -281,29 +369,74 @@ class HostLRUBackend(EmbeddingBackend):
 
     def _free_slots(self, protected: np.ndarray, need: int, state):
         """Pick ``need`` victim slots: empty slots first, then the
-        least-recently-touched occupied slots outside the current batch;
-        evicted rows (vector + acc) are written back to the host store."""
-        free = np.nonzero(self._id_for_slot < 0)[0][:need]
+        least-recently-touched occupied slots outside the current batch
+        (never a pinned slot — those hold rows of in-flight pipelined
+        batches); evicted rows (vector + acc) are written back to the
+        host store."""
+        pinned = self._pin_count > 0
+        free = np.nonzero((self._id_for_slot < 0) & ~pinned)[0][:need]
         n_evict = need - free.size
         if n_evict <= 0:
             return free
         cand = np.ones(self.cache_rows, bool)
         cand[self._id_for_slot < 0] = False
         cand[protected] = False
+        cand[pinned] = False
         cand_slots = np.nonzero(cand)[0]
+        if cand_slots.size < n_evict:
+            raise ValueError(
+                f"fault-in needs {n_evict} eviction victims but only "
+                f"{cand_slots.size} unpinned slots are evictable: the "
+                f"combined working set of in-flight pipelined batches "
+                f"exceeds the device cache ({self.cache_rows} slots, "
+                f"{int(pinned.sum())} pinned) — lower max_inflight or "
+                "raise EmbeddingSpec.cache_rows")
         order = np.argsort(self._slot_clock[cand_slots], kind="stable")
         evict = cand_slots[order[:n_evict]]
         ev_ids = self._id_for_slot[evict]
-        eslots = jnp.asarray(evict, jnp.int32)
-        vecs = np.asarray(jnp.asarray(state["table"])[eslots], np.float32)
-        accs = np.asarray(jnp.asarray(state["acc"])[eslots], np.float32) \
-            if "acc" in state else None
+        # bucketed gather (see _pow2_bucket); pad rows are sliced back off
+        idx = np.zeros(_pow2_bucket(n_evict), np.int64)
+        idx[:n_evict] = evict
+        eslots = jnp.asarray(idx, jnp.int32)
+        if "acc" in state:
+            vecs_j, accs_j = _gather_rows_acc(state["table"], state["acc"],
+                                              eslots)
+            accs = np.asarray(accs_j)[:n_evict]
+        else:
+            vecs_j, accs = _gather_rows(state["table"], eslots), None
+        vecs = np.asarray(vecs_j)[:n_evict]
         self.store.write_rows(ev_ids, vecs, accs)
         self.writebacks += int(evict.size)
         for k in ev_ids.tolist():
             del self._slot_for_id[k]
         self._id_for_slot[evict] = -1
         return np.concatenate([free, evict])
+
+    # -- slot pinning (pipelined callers) ------------------------------------
+    #
+    # Between a batch's prepare and its applied put, a deep pipeline must
+    # keep that batch's cache slots resident: a later batch's fault-in that
+    # recycled them would make the pending lookup read the WRONG row (not a
+    # stale one) and silently drop the put. Pins are reference counts; a
+    # fault-in that cannot find enough unpinned victims raises (the
+    # combined in-flight working set must fit the cache).
+
+    def pin_slots(self, dev_ids):
+        slots = np.asarray(dev_ids, np.int64).reshape(-1)
+        slots = slots[(slots >= 0) & (slots < self.cache_rows)]
+        with self._lock:
+            np.add.at(self._pin_count, slots, 1)
+
+    def unpin_slots(self, dev_ids):
+        slots = np.asarray(dev_ids, np.int64).reshape(-1)
+        slots = slots[(slots >= 0) & (slots < self.cache_rows)]
+        with self._lock:
+            np.subtract.at(self._pin_count, slots, 1)
+            np.maximum(self._pin_count, 0, out=self._pin_count)
+
+    def reset_pins(self):
+        with self._lock:
+            self._pin_count[:] = 0
 
     def queue_init(self, ids_shape):
         spec = self.spec
@@ -382,18 +515,23 @@ class HostLRUBackend(EmbeddingBackend):
         """Snapshot BOTH tiers: the device cache (so queued slot references
         stay live across restore) and the host store with its recency
         order, plus the slot map — a restore resumes bit-identically."""
-        return {
-            "cache": jax.tree.map(np.asarray, state),
-            "store": self.store.serialize(),
-            "cache_meta": {
-                "id_for_slot": self._id_for_slot.copy(),
-                "slot_clock": self._slot_clock.copy(),
-                "scalars": np.array([self._tick, self.faults,
-                                     self.writebacks], np.int64),
-            },
-        }
+        with self._lock:
+            return {
+                "cache": jax.tree.map(np.asarray, state),
+                "store": self.store.serialize(),
+                "cache_meta": {
+                    "id_for_slot": self._id_for_slot.copy(),
+                    "slot_clock": self._slot_clock.copy(),
+                    "scalars": np.array([self._tick, self.faults,
+                                         self.writebacks], np.int64),
+                },
+            }
 
     def restore_from_checkpoint(self, blob):
+        with self._lock:
+            return self._restore_locked(blob)
+
+    def _restore_locked(self, blob):
         spec = self.spec
         if not isinstance(blob, dict) or "store" not in blob \
                 or "cache" not in blob:
@@ -416,6 +554,7 @@ class HostLRUBackend(EmbeddingBackend):
                 "trainer with the cache the checkpoint was trained under")
         self.store = LRUEmbeddingStore.deserialize(blob["store"])
         cm = blob["cache_meta"]
+        self._pin_count = np.zeros(self.cache_rows, np.int32)
         self._id_for_slot = np.asarray(cm["id_for_slot"], np.int64).copy()
         self._slot_clock = np.asarray(cm["slot_clock"], np.int64).copy()
         self._tick, faults, wbacks = (int(x) for x in cm["scalars"])
@@ -480,6 +619,15 @@ class CompressedWireBackend(EmbeddingBackend):
 
     def prepare(self, state, ids):
         return self.inner.prepare(state, ids)
+
+    def pin_slots(self, dev_ids):
+        self.inner.pin_slots(dev_ids)
+
+    def unpin_slots(self, dev_ids):
+        self.inner.unpin_slots(dev_ids)
+
+    def reset_pins(self):
+        self.inner.reset_pins()
 
     def queue_init(self, ids_shape):
         # the queue lives PS-side, AFTER the wire: it holds deduped puts

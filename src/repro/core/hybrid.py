@@ -363,6 +363,29 @@ class PersiaTrainer:
                              emb=emb, emb_queue=queues,
                              step=state.step + 1), metrics
 
+    def run(self, state: TrainState, batches, steps: int | None = None,
+            delay_fn=None) -> tuple[TrainState, list[dict]]:
+        """Serial reference loop: one ``decomposed_step`` per batch
+        (optionally capped at ``steps``), returning the final state and the
+        per-step metrics. ``delay_fn(stage, step) -> seconds`` injects the
+        same per-stage latencies the pipelined engine understands — paid
+        serially here, which is what makes ``benchmarks/pipeline.py`` an
+        apples-to-apples serial-vs-pipelined comparison."""
+        import time
+        stages = ("loader", "prepare", "lookup", "dense", "put")
+        metrics_list: list[dict] = []
+        for idx, batch in enumerate(batches):
+            if steps is not None and idx >= steps:
+                break
+            if delay_fn is not None:
+                for stage in stages:
+                    d = float(delay_fn(stage, idx))
+                    if d > 0:
+                        time.sleep(d)
+            state, m = self.decomposed_step(state, batch)
+            metrics_list.append(m)
+        return state, metrics_list
+
     # -- eval / predict --------------------------------------------------------
 
     def eval_step(self, state: TrainState, batch, dev_ids=None):

@@ -68,6 +68,22 @@ def _step_fn(trainer: PersiaTrainer, pipeline: str):
     return trainer.step
 
 
+def _make_engine(trainer: PersiaTrainer, args):
+    """--pipeline pipelined: the async five-stage engine (core/pipeline.py)
+    carrying up to --max-inflight microbatches."""
+    from repro.core.pipeline import PipelinedTrainer
+    return PipelinedTrainer(trainer, max_inflight=args.max_inflight)
+
+
+def _pipelined_span(engine, state, it, n):
+    """Run n steps through the engine, pulling batches lazily from ``it``;
+    returns (state, last-step metrics)."""
+    stream = ({k: jnp.asarray(v) for k, v in next(it).items()}
+              for _ in range(n))
+    state, ms = engine.run(state, stream)
+    return state, (ms[-1] if ms else {})
+
+
 def _ctr_collection_for(cfg, ds, args):
     """Per-field tables with the CLI-selected storage backend (dense PS,
     host-LRU out-of-core, or either behind the compressed wire)."""
@@ -113,10 +129,44 @@ def train_ctr(args):
         print(f"resumed full state from step {start}")
     else:
         state = trainer.init(jax.random.PRNGKey(args.seed), batch)
-    step_fn = _step_fn(trainer, args.pipeline)
-
     history = []
     t0 = time.time()
+    if args.pipeline == "pipelined":
+        # the async engine consumes whole eval_every-sized spans so the
+        # five stages overlap across microbatches; eval/ckpt run at the
+        # span boundaries on the settled state
+        engine = _make_engine(trainer, args)
+        step = start
+        while step < args.steps:
+            # spans stop at every eval AND checkpoint boundary, so
+            # --ckpt-every keeps its granularity under the pipeline
+            n = min(args.eval_every - step % args.eval_every,
+                    args.steps - step)
+            if mgr:
+                n = min(n, args.ckpt_every - step % args.ckpt_every)
+            state, metrics = _pipelined_span(engine, state, it, n)
+            step += n
+            if step % args.eval_every == 0:
+                eb = {k: jnp.asarray(v) for k, v in next(eval_it).items()}
+                preds = trainer.predict(state, eb)
+                a = adapters.auc(np.asarray(eb["labels"]), np.asarray(preds))
+                dt = time.time() - t0
+                thr = (step - start) * args.batch / dt
+                print(f"step {step:5d} loss {float(metrics['loss']):.4f} "
+                      f"AUC {a:.4f} thr {thr:,.0f} samples/s")
+                history.append({"step": step, "time_s": dt,
+                                "loss": float(metrics["loss"]), "auc": a,
+                                "throughput": thr})
+            if mgr:
+                mgr.maybe_save_state(step, trainer, state)
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump({"mode": args.mode, "dataset": args.dataset,
+                           "pipeline": args.pipeline, "history": history,
+                           "pipeline_metrics": engine.pipeline_metrics()},
+                          f, indent=1)
+        return history
+    step_fn = _step_fn(trainer, args.pipeline)
     for step in range(start, args.steps):
         b = {k: jnp.asarray(v) for k, v in next(it).items()}
         state, metrics = step_fn(state, b)
@@ -160,6 +210,29 @@ def train_lm(args):
     n_params = sum(x.size for x in jax.tree.leaves(state.dense))
     print(f"dense params: {n_params/1e6:.1f}M + emb "
           f"{state.emb['vocab']['table'].size/1e6:.1f}M")
+    if args.pipeline == "pipelined":
+        engine = _make_engine(trainer, args)
+        history = []
+        t0 = time.time()
+        step = 0
+        while step < args.steps:
+            n = min(args.eval_every - step % args.eval_every,
+                    args.steps - step)
+            state, metrics = _pipelined_span(engine, state, it, n)
+            step += n
+            if step % args.eval_every == 0:
+                dt = time.time() - t0
+                tok_s = step * args.batch * args.seq_len / dt
+                print(f"step {step:5d} loss {float(metrics['loss']):.4f} "
+                      f"{tok_s:,.0f} tok/s")
+                history.append({"step": step, "time_s": dt,
+                                "loss": float(metrics["loss"])})
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump({"mode": args.mode, "history": history,
+                           "pipeline_metrics": engine.pipeline_metrics()},
+                          f, indent=1)
+        return history
     step_fn = _step_fn(trainer, args.pipeline)
     history = []
     t0 = time.time()
@@ -185,8 +258,15 @@ def main():
     ap.add_argument("--dataset", default="taobao_ad")
     ap.add_argument("--mode", choices=["sync", "hybrid", "async"],
                     default="hybrid")
-    ap.add_argument("--pipeline", choices=["fused", "decomposed"],
-                    default="fused")
+    ap.add_argument("--pipeline",
+                    choices=["fused", "decomposed", "pipelined"],
+                    default="fused",
+                    help="fused = one jitted program; decomposed = serial "
+                         "get/dense/put dispatches; pipelined = the async "
+                         "five-stage engine (core/pipeline.py)")
+    ap.add_argument("--max-inflight", type=int, default=4,
+                    help="pipelined engine: max microbatches in flight "
+                         "(1 = bit-exact with --pipeline decomposed)")
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--batch", type=int, default=512)
     ap.add_argument("--seq-len", type=int, default=128)

@@ -39,6 +39,43 @@ else:
         _index_lossless_case(B, L, rows)
 
 
+def _index_wellformed_case(B, L, rows, density_seed):
+    """Wire-format invariants the decoder relies on: unique ids sorted and
+    deduplicated, offsets monotone and spanning every kept entry, sample
+    indices uint16 and in range, and every (sample, id) pair accounted for
+    exactly once."""
+    rng = np.random.default_rng(density_seed)
+    ids = rng.integers(0, rows, (B, L))
+    ids = np.where(rng.random((B, L)) < 0.3, -1, ids)          # padding
+    u, off, smp = C.compress_index_batch(ids)
+    assert u.dtype == np.int64 and off.dtype == np.uint32
+    assert smp.dtype == np.uint16
+    assert (np.diff(u) > 0).all()                              # sorted, deduped
+    assert off[0] == 0 and off[-1] == smp.size
+    assert (np.diff(off.astype(np.int64)) >= 1).all()          # no empty id
+    assert smp.size == int((ids >= 0).sum())
+    if smp.size:
+        assert int(smp.max()) < B
+    # each unique id's sample list is exactly the rows containing it
+    for ui, s, e in zip(u, off[:-1], off[1:]):
+        want = sorted(np.nonzero((ids == ui).any(axis=1))[0].tolist())
+        got = sorted(set(smp[s:e].tolist()))
+        assert got == want
+
+
+if HAVE_HYPOTHESIS:
+    @settings(deadline=None, max_examples=30)
+    @given(st.integers(1, 48), st.integers(1, 8), st.integers(2, 200),
+           st.integers(0, 10_000))
+    def test_index_compression_wire_wellformed(B, L, rows, density_seed):
+        _index_wellformed_case(B, L, rows, density_seed)
+else:
+    @pytest.mark.parametrize("B,L,rows,seed", [(1, 1, 2, 0), (9, 8, 11, 3),
+                                               (48, 4, 200, 7)])
+    def test_index_compression_wire_wellformed(B, L, rows, seed):
+        _index_wellformed_case(B, L, rows, seed)
+
+
 def test_index_compression_rejects_oversized_batch():
     """Sample indices are uint16 on the wire: batches past 65535 must fail
     loudly (a bare assert would vanish under `python -O`)."""

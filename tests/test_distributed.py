@@ -124,17 +124,89 @@ SCRIPT = textwrap.dedent("""
 """)
 
 
-@pytest.mark.timeout(600)
-def test_sharded_paths_match_single_device(tmp_path):
+def _run_dist_script(tmp_path, script_text, ok_marker):
     import jax.sharding
     if not (hasattr(jax.sharding, "set_mesh")
             and hasattr(jax.sharding, "AxisType")):
         pytest.skip("installed jax lacks sharding.set_mesh/AxisType "
                     "(needed by the multi-device shard_map paths)")
     script = tmp_path / "dist_check.py"
-    script.write_text(SCRIPT)
+    script.write_text(script_text)
     env = dict(os.environ)
     env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
     res = subprocess.run([sys.executable, str(script)], env=env,
                          capture_output=True, text=True, timeout=560)
-    assert "ALL_OK" in res.stdout, res.stdout + "\n" + res.stderr[-3000:]
+    assert ok_marker in res.stdout, res.stdout + "\n" + res.stderr[-3000:]
+
+
+@pytest.mark.timeout(600)
+def test_sharded_paths_match_single_device(tmp_path):
+    _run_dist_script(tmp_path, SCRIPT, "ALL_OK")
+
+
+# ---------------------------------------------------------------------------
+# pipeline under a mesh: the threaded engine must match the serial trainer
+# when both run with 8 forced host devices and an active global mesh
+# ---------------------------------------------------------------------------
+
+SCRIPT_PIPELINE = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+    from repro.configs.base import ModelConfig
+    from repro.core import adapters
+    from repro.core.hybrid import PersiaTrainer, TrainMode
+    from repro.core.pipeline import PipelinedTrainer
+    from repro.data.ctr import CTRDataset
+    from repro.optim.optimizers import OptConfig
+
+    CFG = ModelConfig(name="pm", arch_type="recsys", n_id_fields=3,
+                      ids_per_field=2, emb_dim=8, emb_rows=192,
+                      n_dense_features=4, mlp_dims=(16,), n_tasks=1)
+    DS = CTRDataset("pm", n_rows=192, n_fields=3, ids_per_field=2, n_dense=4)
+    it = DS.sampler(32)
+    batches = [{k: jnp.asarray(v) for k, v in next(it).items()}
+               for _ in range(8)]
+
+    def make():
+        ad = adapters.recsys_adapter(CFG, lr=5e-2,
+                                     field_rows=DS.field_rows())
+        return PersiaTrainer(ad, TrainMode.hybrid(2),
+                             OptConfig(kind="adam", lr=5e-3))
+
+    with jax.sharding.set_mesh(mesh):
+        ta = make()
+        sa = ta.init(jax.random.PRNGKey(0), batches[0])
+        sa, ms_a = ta.run(sa, batches)
+        tb = make()
+        engine = PipelinedTrainer(tb, max_inflight=1)
+        sb, ms_b = engine.run(tb.init(jax.random.PRNGKey(0), batches[0]),
+                              batches)
+        # a deeper pipeline must also run to completion under the mesh
+        tc = make()
+        deep = PipelinedTrainer(tc, max_inflight=3)
+        sc, ms_c = deep.run(tc.init(jax.random.PRNGKey(0), batches[0]),
+                            batches)
+    assert len(ms_b) == len(ms_a) == len(ms_c) == 8
+    for n in sa.emb:
+        np.testing.assert_allclose(np.asarray(sa.emb[n]["table"]),
+                                   np.asarray(sb.emb[n]["table"]),
+                                   atol=1e-5, err_msg=n)
+    for a, b in zip(jax.tree.leaves(sa.dense), jax.tree.leaves(sb.dense)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+    assert all(np.isfinite(float(m["loss"])) for m in ms_c)
+    assert deep.applied_order == list(range(8))
+    print("PIPE_MESH_OK")
+""")
+
+
+@pytest.mark.timeout(600)
+def test_pipeline_under_mesh_matches_serial(tmp_path):
+    """The pipelined engine's worker threads dispatch against the same
+    global mesh the serial facade sees: max_inflight=1 parity and a deep
+    in-order run, both with 8 forced host devices."""
+    _run_dist_script(tmp_path, SCRIPT_PIPELINE, "PIPE_MESH_OK")

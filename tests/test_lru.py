@@ -59,6 +59,104 @@ else:
         _lru_eviction_case(seq, cap)
 
 
+class RefValueLRU:
+    """Dict model of the store's full contract: recency + vector + acc."""
+
+    def __init__(self, cap, dim):
+        self.cap, self.dim = cap, dim
+        self.d = OrderedDict()          # id -> [vec, acc]
+
+    def read(self, ids, store_v, store_a):
+        """Mirror read_rows: verify hits, adopt the store's values on miss
+        (the store initialises misses from its private rng)."""
+        for i, (key, v, a) in enumerate(zip(ids, store_v, store_a)):
+            key = int(key)
+            if key in self.d:
+                np.testing.assert_allclose(v, self.d[key][0], rtol=1e-6,
+                                           err_msg=f"vec id={key} pos={i}")
+                np.testing.assert_allclose(a, self.d[key][1], rtol=1e-6,
+                                           err_msg=f"acc id={key} pos={i}")
+                self.d.move_to_end(key)
+            else:
+                if len(self.d) >= self.cap:
+                    self.d.popitem(last=False)
+                self.d[key] = [np.array(v, np.float32), np.float32(a)]
+
+    def put(self, ids, grads, lr, eps):
+        """Mirror LRUEmbeddingStore.put: sequential per-row adagrad,
+        last-writer-wins, missing ids dropped, recency untouched."""
+        for key, g in zip(ids, grads):
+            key = int(key)
+            if key not in self.d:
+                continue
+            g = np.asarray(g, np.float32)
+            acc = np.float32(self.d[key][1] + np.mean(g * g))
+            self.d[key][1] = acc
+            self.d[key][0] = np.float32(
+                self.d[key][0] - lr * g / np.sqrt(acc + eps))
+
+    def write(self, ids, vecs, accs):
+        for key, v, a in zip(ids, vecs, accs):
+            key = int(key)
+            if key not in self.d and len(self.d) >= self.cap:
+                self.d.popitem(last=False)
+            if key in self.d:
+                self.d.move_to_end(key)
+            self.d[key] = [np.array(v, np.float32), np.float32(a)]
+
+
+def _lru_value_model_case(ops, cap, dim=3, lr=0.1, eps=1e-8):
+    """Drive an op sequence through store and model; values, optimizer
+    accumulators, residency and recency must agree throughout."""
+    store = LRUEmbeddingStore(cap, dim=dim, seed=11)
+    ref = RefValueLRU(cap, dim)
+    rng = np.random.default_rng(5)
+    for kind, ids in ops:
+        ids = np.asarray(ids, np.int64)
+        if kind == "get":
+            v, a = store.read_rows(ids)
+            ref.read(ids, v, a)
+        elif kind == "put":
+            g = rng.standard_normal((len(ids), dim)).astype(np.float32)
+            store.put(ids, g, lr=lr, eps=eps)
+            ref.put(ids, g, lr, eps)
+        else:                       # write (the cache write-back path)
+            v = rng.standard_normal((len(ids), dim)).astype(np.float32)
+            a = rng.random(len(ids)).astype(np.float32)
+            store.write_rows(ids, v, a)
+            ref.write(ids, v, a)
+        assert set(store.index) == set(ref.d)
+        assert store.recency_ids() == list(reversed(ref.d))
+    for key, (v, a) in ref.d.items():
+        got_v, got_a = store.read_rows(np.array([key]))
+        np.testing.assert_allclose(got_v[0], v, rtol=1e-6)
+        np.testing.assert_allclose(got_a[0], a, rtol=1e-6)
+
+
+def _random_ops(rng, n_ops, id_range):
+    kinds = rng.choice(["get", "put", "write"], n_ops, p=[0.5, 0.3, 0.2])
+    return [(k, rng.integers(0, id_range, rng.integers(1, 6)).tolist())
+            for k in kinds]
+
+
+if HAVE_HYPOTHESIS:
+    _op = st.tuples(st.sampled_from(["get", "put", "write"]),
+                    st.lists(st.integers(0, 24), min_size=1, max_size=6))
+
+    @settings(deadline=None, max_examples=30)
+    @given(st.lists(_op, min_size=1, max_size=40), st.integers(2, 10))
+    def test_lru_values_match_dict_model(ops, cap):
+        """get/put/evict/write-back sequences keep vectors AND adagrad
+        accumulators consistent with an OrderedDict reference."""
+        _lru_value_model_case(ops, cap)
+else:
+    @pytest.mark.parametrize("seed,n,cap", [(0, 10, 2), (1, 40, 5),
+                                            (2, 120, 10)])
+    def test_lru_values_match_dict_model(seed, n, cap):
+        rng = np.random.default_rng(seed)
+        _lru_value_model_case(_random_ops(rng, n, 25), cap)
+
+
 def test_vectors_stable_across_hits():
     store = LRUEmbeddingStore(8, dim=4)
     v1 = store.get(np.array([3])).copy()
