@@ -9,6 +9,7 @@ the dry-run artifacts when present).
   compression   §4.2.3         — blockscale fp16 + lossless index dedup
   staleness     Thm 1          — tau & alpha sweeps vs the bound
   pipeline      Fig 4-5        — serial vs async-pipelined execution
+  shard_scaling §4.1           — prepare fault-in latency vs PS shards
 """
 from __future__ import annotations
 
@@ -19,7 +20,7 @@ import sys
 import traceback
 
 SUITES = ["compression", "scalability", "capacity", "convergence",
-          "staleness", "end_to_end", "pipeline"]
+          "staleness", "end_to_end", "pipeline", "shard_scaling"]
 
 
 def main() -> None:
@@ -41,6 +42,8 @@ def main() -> None:
                 kwargs["steps"] = 40
             if args.fast and name == "pipeline":
                 kwargs["steps"] = 8
+            if args.fast and name == "shard_scaling":
+                kwargs["steps"] = 5
             if args.fast and name == "end_to_end":
                 kwargs["target"] = 0.60
             rows = mod.run(**kwargs)

@@ -1,0 +1,178 @@
+"""Sharded embedding-PS scaling (paper §4.1): prepare-phase fault-in
+latency vs shard count on a miss-heavy out-of-core workload.
+
+The ShardedBackend router (core/backend.py) faults each PS shard in
+concurrently under per-shard locks — the claim is that host-side fault-in
+latency drops near-linearly with shards. This benchmark pins that: a
+host_lru CTR trainer with a device cache far smaller than the table and
+near-uniform id traffic (so most unique ids miss every step) runs the same
+step stream at 1 / 2 / 4 shards, with a *simulated* per-row host fetch
+latency injected into every shard's ``LRUEmbeddingStore.read_rows`` (a
+stand-in for the PS-node RAM/RPC path; ``time.sleep`` releases the GIL, so
+it overlaps exactly as a real remote fetch would). Reported per shard
+count: prepare-phase ms/step, end-to-end steps/s, and the shard
+load-imbalance gauge.
+
+Runs standalone (the CI smoke invocation) or under benchmarks/run.py:
+
+    PYTHONPATH=src python benchmarks/shard_scaling.py --steps 5
+    PYTHONPATH=src python benchmarks/shard_scaling.py --check   # >= 1.5x bar
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import adapters
+from repro.core import backend as BK
+from repro.core.hybrid import PersiaTrainer, TrainMode
+from repro.data.ctr import CTRDataset
+from repro.optim.optimizers import OptConfig
+
+N_FIELDS, ROWS_PER_FIELD, DIM = 2, 65536, 16
+CACHE_ROWS = 4096                  # device cache << table: out-of-core
+BATCH = 512
+IDS_PER_FIELD = 4
+# simulated host fetch latency per faulted row. Chosen so the simulated
+# host tier dominates the prepare phase (as it does in a real deployment,
+# where the fetch crosses an RPC to a PS node) rather than this process's
+# fixed per-dispatch overhead, which a single-device simulation cannot
+# parallelize away.
+SIM_US_PER_ROW = 150.0
+SHARD_COUNTS = (1, 2, 4)
+
+
+def _trainer(shards: int) -> tuple[CTRDataset, PersiaTrainer]:
+    ds = CTRDataset("shardscale", n_rows=N_FIELDS * ROWS_PER_FIELD,
+                    n_fields=N_FIELDS, ids_per_field=IDS_PER_FIELD,
+                    n_dense=8, zipf_a=1.05)    # near-uniform: miss-heavy
+    cfg = ModelConfig(name="shardscale", arch_type="recsys",
+                      n_id_fields=N_FIELDS, ids_per_field=IDS_PER_FIELD,
+                      emb_dim=DIM,
+                      emb_rows=N_FIELDS * ROWS_PER_FIELD, n_dense_features=8,
+                      mlp_dims=(64, 32), n_tasks=1)
+    coll = adapters.ctr_collection(cfg, lr=5e-2, field_rows=ds.field_rows())
+    coll = coll.with_backend("host_lru", CACHE_ROWS)
+    if shards > 1:
+        coll = coll.with_shards(shards)
+    adapter = adapters.recsys_adapter(cfg, field_rows=ds.field_rows(),
+                                      collection=coll)
+    return ds, PersiaTrainer(adapter, TrainMode.hybrid(2),
+                             OptConfig(kind="adam", lr=1e-3))
+
+
+def _host_stores(trainer: PersiaTrainer):
+    for bk in trainer.backends.values():
+        inner = BK.unwrap(bk)
+        subs = (inner.shard_backends
+                if isinstance(inner, BK.ShardedBackend) else [inner])
+        for sub in subs:
+            yield sub.store
+
+
+def _inject_fault_latency(trainer: PersiaTrainer, us_per_row: float):
+    """Wrap every shard store's read_rows with a sleep proportional to the
+    rows fetched — the per-shard simulated host latency. Sleeps overlap
+    across the router's fault-in threads, serial code pays them in full."""
+    for store in _host_stores(trainer):
+        orig = store.read_rows
+
+        def slow(ids, _orig=orig, _us=us_per_row):
+            time.sleep(np.size(ids) * _us * 1e-6)
+            return _orig(ids)
+
+        store.read_rows = slow
+
+
+def _time_prepares(trainer: PersiaTrainer, acc: list):
+    """Accumulate wall time spent inside every table's prepare (the
+    fault-in phase) into acc[0]."""
+    for bk in trainer.backends.values():
+        orig = bk.prepare
+
+        def timed(state, ids, _orig=orig):
+            t0 = time.perf_counter()
+            out = _orig(state, ids)
+            acc[0] += time.perf_counter() - t0
+            return out
+
+        bk.prepare = timed
+
+
+def measure(shards: int, steps: int):
+    """-> (prepare_ms_per_step, steps_per_s, imbalance, total_faults)."""
+    ds, tr = _trainer(shards)
+    it = ds.sampler(BATCH)
+    batches = [{k: jnp.asarray(v) for k, v in next(it).items()}
+               for _ in range(steps)]
+    # compile pass: replay the EXACT measurement batches once from a cold
+    # state, so every pow2 fault-bucket shape the timed run will hit is
+    # already compiled; then re-init back to the same cold state
+    state = tr.init(jax.random.PRNGKey(0), batches[0])
+    for b in batches:
+        state, _ = tr.decomposed_step(state, b)
+    state = tr.init(jax.random.PRNGKey(0), batches[0])
+    _inject_fault_latency(tr, SIM_US_PER_ROW)
+    prep = [0.0]
+    _time_prepares(tr, prep)
+    m = {}
+    t0 = time.perf_counter()
+    for b in batches:
+        state, m = tr.decomposed_step(state, b)
+    jax.block_until_ready(state.dense)
+    wall = time.perf_counter() - t0
+    imb = max((float(v) for k, v in m.items() if k.endswith("/imbalance")),
+              default=1.0)
+    faults = sum(int(sub.faults) for bk in tr.backends.values()
+                 for sub in (BK.unwrap(bk).shard_backends
+                             if isinstance(BK.unwrap(bk), BK.ShardedBackend)
+                             else [BK.unwrap(bk)]))
+    return prep[0] / steps * 1e3, steps / wall, imb, faults
+
+
+def run(steps: int = 30, results: dict | None = None):
+    """benchmarks/run.py entry — CSV rows (name, us, derived). Pass a dict
+    as ``results`` to also receive {shards: prepare_ms_per_step}."""
+    rows = []
+    for shards in SHARD_COUNTS:
+        prep_ms, steps_s, imb, faults = measure(shards, steps)
+        if results is not None:
+            results[shards] = prep_ms
+        rows.append((
+            f"shard_scaling/host_lru/x{shards}", prep_ms * 1e3,
+            f"prepare={prep_ms:.2f}ms/step steps_per_s={steps_s:.1f} "
+            f"imbalance={imb:.2f} faults={faults} "
+            f"sim_latency={SIM_US_PER_ROW:.0f}us/row cache={CACHE_ROWS}"))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--check", action="store_true",
+                    help="exit nonzero unless 4 shards cut the prepare "
+                         "phase >= 1.5x vs 1 shard under simulated host "
+                         "latency")
+    args = ap.parse_args()
+    results: dict = {}
+    rows = run(args.steps, results)
+    print("name,us_per_call,derived")
+    for n, us, derived in rows:
+        print(f"{n},{us:.1f},{derived}")
+    if args.check:
+        speedup = results[1] / results[4]
+        if speedup < 1.5:
+            print(f"FAIL: 4-shard prepare speedup {speedup:.2f}x < 1.5x",
+                  file=sys.stderr)
+            raise SystemExit(1)
+        print(f"OK: 4-shard prepare speedup {speedup:.2f}x >= 1.5x")
+
+
+if __name__ == "__main__":
+    main()

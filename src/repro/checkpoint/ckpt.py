@@ -8,6 +8,13 @@
   dir, fsync, rename) because any drop of dense synchronisation is vital;
 * the embedding-worker sample buffers are NOT checkpointed (paper: abandoned
   on failure, no recovery attempted).
+
+Sharded tables (``EmbeddingSpec.emb_shards > 1``) write *shard-tagged*
+blobs: ``emb/<table>/shard_meta`` ([n_shards, rows, dim]) plus one
+independent two-tier sub-blob per shard under ``emb/<table>/shards/s<k>/``.
+Restore reshards row-exactly when the trainer's shard count differs (see
+``repro.core.backend.extract_logical_rows``); ``checkpoint_shard_layout``
+below inspects a checkpoint's per-table shard counts without a trainer.
 """
 from __future__ import annotations
 
@@ -121,6 +128,25 @@ def load_checkpoint(directory: str, step: int | None = None):
     if os.path.isdir(os.path.join(path, "emb")):
         emb = _read_blob(os.path.join(path, "emb"))
     return int(dense["step"]), dense["state"], emb
+
+
+def checkpoint_shard_layout(directory: str, step: int | None = None
+                            ) -> dict[str, int]:
+    """Per-table embedding-PS shard counts of a saved full-state
+    checkpoint: 1 for plain (unsharded) table blobs, N for shard-tagged
+    router blobs. Raises if the checkpoint has no embedding blob."""
+    _, _, emb = load_checkpoint(directory, step)
+    if not emb or "emb" not in emb:
+        raise ValueError(
+            f"checkpoint at {directory!r} carries no per-table embedding "
+            "blob (legacy save_checkpoint format?)")
+    out = {}
+    for name, blob in emb["emb"].items():
+        if isinstance(blob, dict) and "shard_meta" in blob:
+            out[name] = int(np.asarray(blob["shard_meta"]).reshape(-1)[0])
+        else:
+            out[name] = 1
+    return out
 
 
 class CheckpointManager:

@@ -18,6 +18,17 @@ wire. This module makes that a first-class storage choice: every table in an
 * ``CompressedWireBackend`` — a decorator over either backend applying the
   paper's §4.2.3 wire compression: lossless unique-id dedup on puts plus
   lossy blockscale fp16 on get/put payloads, surfacing bytes-moved metrics.
+* ``ShardedBackend`` — the sharded parameter-server router (paper §4.1:
+  every embedding worker owns a hash partition of every table). Wraps
+  ``spec.emb_shards`` independent per-shard backends (dense or host_lru)
+  behind this same protocol: deterministic affine-hash ``id -> shard``
+  routing, per-shard slot maps / LRU stores / staleness queues / locks, a
+  thread-pool ``prepare`` that faults all shards **concurrently** (host
+  fault-in latency drops near-linearly with shards on miss-heavy
+  workloads), shard-tagged checkpoints that **reshard on restore** (save
+  with N shards, restore with M — row-exact), and per-shard traffic/hit
+  metrics plus a max/mean load-imbalance gauge. Composable under the
+  compressed wire (wire outside, router inside).
 
 The protocol splits host-level from traceable ops:
 
@@ -37,6 +48,7 @@ from __future__ import annotations
 import dataclasses
 import math
 import threading
+from concurrent.futures import ThreadPoolExecutor
 
 import jax
 import jax.numpy as jnp
@@ -106,6 +118,9 @@ class EmbeddingBackend:
 
     spec: EmbeddingSpec
     requires_prepare: bool = False
+    # set by restore_from_checkpoint when the restored blob had a different
+    # shard geometry than this backend (caches flushed, queues invalidated)
+    last_restore_resharded: bool = False
 
     # -- host-level ----------------------------------------------------------
     def init(self, key, shards: int = 1, scale: float = 0.02):
@@ -127,6 +142,19 @@ class EmbeddingBackend:
 
     def reset_pins(self):
         pass
+
+    # -- shard introspection (pipelined callers, metrics) --------------------
+    # Unsharded backends are one PS "shard": all puts land on shard 0.
+    # ShardedBackend overrides both so the pipeline can run per-shard
+    # put backpressure and the trainer can surface per-shard metrics.
+    def n_put_shards(self) -> int:
+        return 1
+
+    def put_shards(self, dev_ids) -> tuple[int, ...]:
+        return (0,)
+
+    def shard_metrics(self) -> dict:
+        return {}
 
     def queue_init(self, ids_shape):
         raise NotImplementedError
@@ -195,6 +223,13 @@ class DenseBackend(EmbeddingBackend):
 
     def restore_from_checkpoint(self, blob):
         spec = self.spec
+        self.last_restore_resharded = False
+        if isinstance(blob, dict) and "shard_meta" in blob:
+            # a sharded-router checkpoint restored into a single-shard
+            # trainer: gather the logical rows and rebuild (N -> 1 reshard)
+            vec, acc = extract_logical_rows(blob, spec, "dense")
+            self.last_restore_resharded = True
+            return _dense_state_from_logical(spec, spec.rows, vec, acc)
         table = blob.get("table") if isinstance(blob, dict) else None
         if table is None:
             raise ValueError(
@@ -255,19 +290,28 @@ class HostLRUBackend(EmbeddingBackend):
         self.store: LRUEmbeddingStore | None = None
         self._lock = threading.RLock()
         self._slot_for_id: dict[int, int] = {}
+        # vectorized mirror of _slot_for_id (id -> cache slot, -1 = absent):
+        # the per-step id->slot translation is a numpy gather instead of a
+        # per-id dict sweep — the dict stays authoritative for the sparse
+        # mutations (fault-in adds, eviction deletes) and introspection
+        self._slot_arr = np.full(spec.rows, -1, np.int32)
         self._id_for_slot = np.full(self.cache_rows, -1, np.int64)
         self._slot_clock = np.zeros(self.cache_rows, np.int64)
         self._pin_count = np.zeros(self.cache_rows, np.int32)
         self._tick = 0
         self.faults = 0          # rows moved host -> device
         self.writebacks = 0      # rows moved device -> host
+        self.hits = 0            # unique ids resolved without a fault
 
     # -- host-level ----------------------------------------------------------
 
     def init(self, key, shards: int = 1, scale: float = 0.02):
         if shards != 1:
-            raise ValueError("host_lru is a per-host tier: the device cache "
-                             "is single-shard (got shards={})".format(shards))
+            raise ValueError(
+                "HostLRUBackend is one PS shard; to run a host-backed table "
+                f"over {shards} shards set EmbeddingSpec.emb_shards (or pass "
+                "emb_shards to PersiaTrainer.init), which routes through the "
+                "ShardedBackend router")
         with self._lock:
             return self._init_locked(key, scale)
 
@@ -286,15 +330,31 @@ class HostLRUBackend(EmbeddingBackend):
             table = np.asarray(dense["table"], np.float32)
         pos = np.asarray(PS.shuffle_pos(jnp.arange(spec.rows),
                                         spec.padded_rows(1)))
-        self.store = LRUEmbeddingStore(spec.rows, spec.dim)
-        self.store.preload(np.arange(spec.rows), table[pos])
-        # a re-init starts a fresh run: drop any previous slot bookkeeping
+        return self._init_with_rows_locked(np.arange(spec.rows), table[pos])
+
+    def _init_with_rows(self, ids, vecs, accs=None):
+        """Fresh run seeded with explicit host rows (the sharded router's
+        init/reshard path): ids land in the host store, the device cache
+        starts empty, all slot bookkeeping is reset."""
+        with self._lock:
+            return self._init_with_rows_locked(ids, vecs, accs)
+
+    def _init_with_rows_locked(self, ids, vecs, accs=None):
+        spec = self.spec
+        # this store backs a cache holding ALL logical rows and never
+        # evicts: skip per-access recency upkeep on the fault path
+        self.store = LRUEmbeddingStore(spec.rows, spec.dim,
+                                       track_recency=False)
+        self.store.preload(np.asarray(ids, np.int64),
+                           np.asarray(vecs, np.float32), accs)
+        # a (re-)init starts a fresh run: drop any previous slot bookkeeping
         self._slot_for_id = {}
+        self._slot_arr = np.full(spec.rows, -1, np.int32)
         self._id_for_slot = np.full(self.cache_rows, -1, np.int64)
         self._slot_clock = np.zeros(self.cache_rows, np.int64)
         self._pin_count = np.zeros(self.cache_rows, np.int32)
         self._tick = 0
-        self.faults = self.writebacks = 0
+        self.faults = self.writebacks = self.hits = 0
         state = {
             "table": jnp.zeros((self.cache_rows, spec.dim), spec.dtype),
             "slot_ids": jnp.full((self.cache_rows,), -1, jnp.int32),
@@ -323,10 +383,10 @@ class HostLRUBackend(EmbeddingBackend):
                 "EmbeddingSpec.cache_rows or shrink the batch")
         self._tick += 1
         smap = self._slot_for_id
-        uslots = np.fromiter((smap.get(k, -1) for k in uniq.tolist()),
-                             np.int64, uniq.size)
+        uslots = self._slot_arr[uniq].astype(np.int64)
         hit_slots = uslots[uslots >= 0]
         missing = uniq[uslots < 0]
+        self.hits += int(hit_slots.size)
         if missing.size:
             state = dict(state)
             victims = self._free_slots(hit_slots, missing.size, state)
@@ -357,14 +417,15 @@ class HostLRUBackend(EmbeddingBackend):
                     state["table"], state["slot_ids"], vslots, vecs_j, ids_j)
             for k, s in zip(missing.tolist(), victims.tolist()):
                 smap[k] = s
+            self._slot_arr[missing] = victims
             self._id_for_slot[victims] = missing
             touched = np.concatenate([hit_slots, victims])
         else:
             touched = hit_slots
         self._slot_clock[touched] = self._tick
-        dev = np.fromiter((smap.get(k, -1) for k in flat.tolist()),
-                          np.int64, flat.size)
-        dev[~valid] = -1
+        dev = np.where(valid,
+                       self._slot_arr[np.where(valid, flat, 0)].astype(
+                           np.int64), -1)
         return state, jnp.asarray(dev.reshape(np.shape(ids)), jnp.int32)
 
     def _free_slots(self, protected: np.ndarray, need: int, state):
@@ -409,6 +470,7 @@ class HostLRUBackend(EmbeddingBackend):
         self.writebacks += int(evict.size)
         for k in ev_ids.tolist():
             del self._slot_for_id[k]
+        self._slot_arr[ev_ids] = -1
         self._id_for_slot[evict] = -1
         return np.concatenate([free, evict])
 
@@ -523,11 +585,22 @@ class HostLRUBackend(EmbeddingBackend):
                     "id_for_slot": self._id_for_slot.copy(),
                     "slot_clock": self._slot_clock.copy(),
                     "scalars": np.array([self._tick, self.faults,
-                                         self.writebacks], np.int64),
+                                         self.writebacks, self.hits],
+                                        np.int64),
                 },
             }
 
     def restore_from_checkpoint(self, blob):
+        self.last_restore_resharded = False
+        if isinstance(blob, dict) and "shard_meta" in blob:
+            # sharded-router checkpoint into a single-shard trainer: gather
+            # the logical rows (device caches overlaid on host stores) and
+            # rebuild the two tiers (N -> 1 reshard; pending slot-addressed
+            # puts are dropped — the paper's tolerated in-flight loss)
+            vec, acc = extract_logical_rows(blob, self.spec, "host_lru")
+            state = self._init_with_rows(np.arange(self.spec.rows), vec, acc)
+            self.last_restore_resharded = True
+            return state
         with self._lock:
             return self._restore_locked(blob)
 
@@ -553,15 +626,21 @@ class HostLRUBackend(EmbeddingBackend):
                 f"this table runs cache_rows={self.cache_rows} — rebuild the "
                 "trainer with the cache the checkpoint was trained under")
         self.store = LRUEmbeddingStore.deserialize(blob["store"])
+        self.store.track_recency = False     # backend-owned: see init
         cm = blob["cache_meta"]
         self._pin_count = np.zeros(self.cache_rows, np.int32)
         self._id_for_slot = np.asarray(cm["id_for_slot"], np.int64).copy()
         self._slot_clock = np.asarray(cm["slot_clock"], np.int64).copy()
-        self._tick, faults, wbacks = (int(x) for x in cm["scalars"])
-        self.faults, self.writebacks = int(faults), int(wbacks)
+        scalars = [int(x) for x in cm["scalars"]]
+        self._tick, self.faults, self.writebacks = scalars[:3]
+        # pre-shard-router checkpoints carry 3 scalars (no hit counter)
+        self.hits = scalars[3] if len(scalars) > 3 else 0
         self._slot_for_id = {
             int(k): int(s)
             for s, k in enumerate(self._id_for_slot.tolist()) if k >= 0}
+        self._slot_arr = np.full(spec.rows, -1, np.int32)
+        live = np.nonzero(self._id_for_slot >= 0)[0]
+        self._slot_arr[self._id_for_slot[live]] = live.astype(np.int32)
         return {k: jnp.asarray(v) for k, v in blob["cache"].items()}
 
     # -- capacity accounting / inspection ------------------------------------
@@ -576,6 +655,449 @@ class HostLRUBackend(EmbeddingBackend):
     def recency_order(self) -> list[int]:
         """Host-store ids most- to least-recently used (checkpointed)."""
         return self.store.recency_ids()
+
+
+# ===========================================================================
+# ShardedBackend — the sharded embedding parameter-server router (§4.1)
+# ===========================================================================
+
+# Knuth's multiplicative-hash constant (2^32 / phi, odd): the routing premix.
+# Distinct from the in-shard placement shuffle so shard choice and row
+# placement stay decorrelated.
+_ROUTE_MULT = 2_654_435_761
+_ROUTE_ADD = 97_531
+
+
+class _ShardRouting:
+    """Deterministic affine-hash ``id -> (shard, local id)`` routing.
+
+    Ids are premixed by a bijective affine map over the padded domain
+    ``P = round_up(rows, k)`` (the multiplier is adjusted odd-upwards until
+    coprime with P, so the map is a bijection); then ``shard = premix % k``
+    and ``local = premix // k``. Bijectivity keeps the per-shard local id
+    spaces disjoint and exactly invertible, which is what makes checkpoint
+    resharding (save with N shards, restore with M) row-exact.
+    """
+
+    def __init__(self, rows: int, k: int):
+        self.rows, self.k = int(rows), int(k)
+        P = round_up(max(self.rows, self.k), self.k)
+        mult = _ROUTE_MULT
+        while math.gcd(mult, P) != 1:
+            mult += 2
+        self.P, self.mult, self.add = P, mult, _ROUTE_ADD % P
+        self.sub_rows = P // self.k          # per-shard local id space
+
+    def shard_and_local(self, ids):
+        ids = np.asarray(ids, np.int64)
+        pre = (ids * self.mult + self.add) % self.P
+        return pre % self.k, pre // self.k
+
+
+def _dense_state_from_logical(spec: EmbeddingSpec, n_rows: int, vec, acc):
+    """Build a dense PS state of ``n_rows`` storage rows holding logical row
+    ``i`` of ``vec`` at its uniform-shuffle position (the inverse of
+    reading a dense table back out row-by-row)."""
+    pos = np.asarray(PS.shuffle_pos(jnp.arange(vec.shape[0]), n_rows))
+    table = np.zeros((n_rows, vec.shape[1]), vec.dtype)
+    table[pos] = vec
+    state = {"table": jnp.asarray(table)}
+    if spec.optimizer == "adagrad":
+        a = np.zeros((n_rows,), np.float32)
+        if acc is not None:
+            a[pos] = np.asarray(acc, np.float32)
+        state["acc"] = jnp.asarray(a)
+    return state
+
+
+def extract_logical_rows(blob, spec: EmbeddingSpec, base: str):
+    """Checkpoint blob -> ``(vec, acc)`` in *logical row order*: ``vec[i]``
+    is the value a lookup of id ``i`` would return (and ``acc[i]`` its
+    optimizer accumulator, or None when the blob carries none).
+
+    Handles all three blob geometries — plain dense (rows read back through
+    the uniform shuffle), plain host_lru (host store rows overlaid with the
+    device cache, whose copies are the freshest), and shard-tagged router
+    blobs (each sub-blob extracted recursively and scattered back through
+    the source routing). This is the reshard path: N-shard checkpoints
+    restore row-exactly into M-shard trainers for any N, M.
+    """
+    if isinstance(blob, dict) and "shard_meta" in blob:
+        meta = np.asarray(blob["shard_meta"], np.int64).reshape(-1)
+        src_k, src_rows = int(meta[0]), int(meta[1])
+        if src_rows != spec.rows:
+            raise ValueError(
+                f"sharded checkpoint holds {src_rows} logical rows but this "
+                f"table's spec wants {spec.rows} — collection changed since "
+                "the save?")
+        routing = _ShardRouting(spec.rows, src_k)
+        ids = np.arange(spec.rows)
+        own, loc = routing.shard_and_local(ids)
+        sub_spec = dataclasses.replace(spec, rows=routing.sub_rows,
+                                       emb_shards=1)
+        vec = acc = None
+        for s in range(src_k):
+            sub_blob = blob["shards"][f"s{s}"]
+            v_s, a_s = extract_logical_rows(sub_blob, sub_spec, base)
+            if vec is None:
+                vec = np.zeros((spec.rows, spec.dim), v_s.dtype)
+                acc = None if a_s is None \
+                    else np.zeros((spec.rows,), np.float32)
+            sel = own == s
+            vec[sel] = v_s[loc[sel]]
+            if acc is not None and a_s is not None:
+                acc[sel] = a_s[loc[sel]]
+        return vec, acc
+
+    if base == "dense":
+        table = blob.get("table") if isinstance(blob, dict) else None
+        if table is None:
+            raise ValueError(
+                "checkpoint blob has no 'table' — it was not written by the "
+                "dense backend (restoring across backends is not supported)")
+        table = np.asarray(table)
+        if table.shape[1] != spec.dim or table.shape[0] < spec.rows:
+            raise ValueError(
+                f"checkpoint table has shape {tuple(table.shape)} but this "
+                f"table's spec wants >= ({spec.rows}, {spec.dim}) — "
+                "collection changed since the save?")
+        pos = np.asarray(PS.shuffle_pos(jnp.arange(spec.rows),
+                                        table.shape[0]))
+        acc = blob.get("acc")
+        return table[pos], (None if acc is None
+                            else np.asarray(acc, np.float32)[pos])
+
+    if not isinstance(blob, dict) or "store" not in blob \
+            or "cache" not in blob:
+        raise ValueError(
+            "checkpoint blob has no host store — it was not written by "
+            "the host_lru backend (restoring across backends is not "
+            "supported)")
+    meta = blob["store"]["meta"]
+    cap, dim = int(meta[0]), int(meta[1])
+    if cap != spec.rows or dim != spec.dim:
+        raise ValueError(
+            f"checkpoint host store is ({cap}, {dim}) but this table's "
+            f"spec wants ({spec.rows}, {spec.dim}) — collection changed "
+            "since the save?")
+    size = int(meta[4])
+    vec = np.zeros((spec.rows, spec.dim), np.float32)
+    acc = np.zeros((spec.rows,), np.float32)
+    keys = np.asarray(blob["store"]["keys"], np.int64)[:size]
+    vec[keys] = np.asarray(blob["store"]["vectors"], np.float32)[:size]
+    acc[keys] = np.asarray(blob["store"]["opt_acc"], np.float32)[:size]
+    # the device cache holds the freshest copy of every resident row
+    # (write-back only happens on eviction): overlay it over the store,
+    # exactly as draining the cache would
+    id_for_slot = np.asarray(blob["cache_meta"]["id_for_slot"], np.int64)
+    live = np.nonzero(id_for_slot >= 0)[0]
+    if live.size:
+        cached_ids = id_for_slot[live]
+        vec[cached_ids] = np.asarray(blob["cache"]["table"],
+                                     np.float32)[live]
+        if "acc" in blob["cache"]:
+            acc[cached_ids] = np.asarray(blob["cache"]["acc"],
+                                         np.float32)[live]
+    return vec, acc
+
+
+class ShardedBackend(EmbeddingBackend):
+    """Router over ``n_shards`` independent per-shard backends — the
+    embedding-PS tier as a *set of shards* (paper §4.1: capacity and host
+    bandwidth scale with the number of embedding workers).
+
+    Each shard is a full Dense/HostLRU backend over its own local id space
+    (disjoint by the bijective :class:`_ShardRouting`), with its own lock,
+    slot map, LRU store and staleness queue. ``prepare`` fans the batch out
+    to all shards through a thread pool, so host-side fault-in runs
+    **concurrently** per shard — the per-shard locks replace the old single
+    global lock, and miss-heavy prepare latency drops near-linearly with
+    shards (``benchmarks/shard_scaling.py``).
+
+    Device ids are shard-encoded: ``dev = shard * stride + local_dev`` with
+    one uniform ``stride`` (per-shard cache slots for host_lru, per-shard
+    rows for dense), so the traceable ops route by integer division with no
+    host round-trip. State/queues are dicts keyed ``"s0".."s{k-1}"``.
+
+    Checkpoints are shard-tagged (``shard_meta`` + per-shard two-tier
+    blobs); restore into a different shard count reshards row-exactly via
+    :func:`extract_logical_rows` (device caches restart cold and pending
+    slot-addressed queue puts are dropped — the paper's tolerated in-flight
+    loss, same policy as a worker failover).
+    """
+
+    requires_prepare = True
+
+    def __init__(self, spec: EmbeddingSpec, n_shards: int | None = None):
+        base, _ = parse_backend_name(spec.backend)
+        if base == "host_lru" and spec.cache_rows <= 0:
+            raise ValueError(
+                "host_lru backend needs EmbeddingSpec.cache_rows > 0 "
+                f"(got {spec.cache_rows})")
+        self.spec = spec
+        self._base = base
+        self._lock = threading.Lock()        # traffic counters only
+        self._pool: ThreadPoolExecutor | None = None
+        self._configure(int(n_shards if n_shards is not None
+                            else spec.emb_shards))
+
+    def _configure(self, k: int):
+        if k < 2:
+            raise ValueError(
+                f"ShardedBackend needs >= 2 shards (got {k}); use the plain "
+                "backend for a single shard")
+        spec = self.spec
+        self.n_shards = k
+        self._routing = _ShardRouting(spec.rows, k)
+        sub_rows = self._routing.sub_rows
+        kw = {"backend": self._base, "emb_shards": 1, "rows": sub_rows}
+        if self._base == "host_lru":
+            # cache_rows stays the table's TOTAL device-cache budget,
+            # split evenly across shards
+            kw["cache_rows"] = -(-spec.cache_rows // k)
+        subs = []
+        for _ in range(k):
+            sub_spec = dataclasses.replace(spec, **kw)
+            subs.append(HostLRUBackend(sub_spec) if self._base == "host_lru"
+                        else DenseBackend(sub_spec))
+        self.shard_backends = subs
+        self.stride = (subs[0].cache_rows if self._base == "host_lru"
+                       else sub_rows)
+        self.dev_rows = k * self.stride      # encoded device id space
+        self._traffic = np.zeros(k, np.int64)
+        if self._pool is not None:
+            self._pool.shutdown(wait=False)
+            self._pool = None
+
+    def _ensure_pool(self) -> ThreadPoolExecutor:
+        if self._pool is None:
+            self._pool = ThreadPoolExecutor(max_workers=self.n_shards,
+                                            thread_name_prefix="emb-shard")
+        return self._pool
+
+    # -- host-level ----------------------------------------------------------
+
+    def init(self, key, shards: int = 1, scale: float = 0.02):
+        # shards=1 means "no override": the configured count stands (so
+        # PersiaTrainer.init's default never downgrades a spec-sharded
+        # table); any other count reconfigures the router before init
+        if shards not in (1, self.n_shards):
+            self._configure(int(shards))
+        spec = self.spec
+        ref_spec = dataclasses.replace(spec, backend="dense", emb_shards=1)
+        if self._base == "dense":
+            ref = PS.ps_init(key, ref_spec, 1, scale)
+            table = np.asarray(ref["table"])
+        else:
+            # same CPU-pinned draw as the plain HostLRUBackend: the full
+            # table must not touch device memory
+            with jax.default_device(jax.devices("cpu")[0]):
+                ref = PS.ps_init(key, ref_spec, 1, scale)
+                table = np.asarray(ref["table"], np.float32)
+        # logical row i = what a single-shard lookup of i would read; this
+        # is what makes the k-shard router bit-exact with the plain backend
+        pos = np.asarray(PS.shuffle_pos(jnp.arange(spec.rows),
+                                        spec.padded_rows(1)))
+        self._traffic = np.zeros(self.n_shards, np.int64)
+        return self._sub_states_from_logical(table[pos], None)
+
+    def _sub_states_from_logical(self, vec, acc):
+        """Distribute logical rows (and optional accumulators) over the
+        shards according to the routing — the shared init/reshard path."""
+        r = self._routing
+        ids = np.arange(self.spec.rows)
+        own, loc = r.shard_and_local(ids)
+        states = {}
+        for s, sub in enumerate(self.shard_backends):
+            sel = own == s
+            gl, ll = ids[sel], loc[sel]
+            if self._base == "host_lru":
+                states[f"s{s}"] = sub._init_with_rows(
+                    ll, np.asarray(vec[gl], np.float32),
+                    None if acc is None else acc[gl])
+            else:
+                sub_vec = np.zeros((r.sub_rows, vec.shape[1]), vec.dtype)
+                sub_vec[ll] = vec[gl]
+                sub_acc = None
+                if acc is not None:
+                    sub_acc = np.zeros((r.sub_rows,), np.float32)
+                    sub_acc[ll] = acc[gl]
+                states[f"s{s}"] = _dense_state_from_logical(
+                    sub.spec, r.sub_rows, sub_vec, sub_acc)
+        return states
+
+    def prepare(self, state, ids):
+        """Concurrent per-shard fault-in: the batch is split by the routing
+        and every shard's ``prepare`` runs on the router's thread pool —
+        each under its own shard lock, so host fault-in latency scales down
+        with the shard count instead of serializing behind one global
+        lock. Returns shard-encoded device ids."""
+        spec = self.spec
+        shape = np.shape(ids)
+        flat = np.asarray(ids, np.int64).reshape(-1)
+        valid = (flat >= 0) & (flat < spec.rows)
+        own_raw, loc = self._routing.shard_and_local(np.where(valid, flat, 0))
+        own = np.where(valid, own_raw, -1)
+        with self._lock:
+            self._traffic += np.bincount(own[own >= 0],
+                                         minlength=self.n_shards)
+
+        def fault_one(s):
+            sub_ids = np.where(own == s, loc, -1)
+            return self.shard_backends[s].prepare(state[f"s{s}"], sub_ids)
+
+        pool = self._ensure_pool()
+        futs = [pool.submit(fault_one, s) for s in range(self.n_shards)]
+        new_state = dict(state)
+        devs = np.empty((self.n_shards, flat.size), np.int64)
+        for s, f in enumerate(futs):
+            st_s, dev_s = f.result()
+            new_state[f"s{s}"] = st_s
+            devs[s] = np.asarray(dev_s, np.int64).reshape(-1)
+        pick = np.where(own >= 0, own, 0)
+        local_dev = devs[pick, np.arange(flat.size)]
+        out = np.where((own >= 0) & (local_dev >= 0),
+                       own * self.stride + local_dev, -1)
+        return new_state, jnp.asarray(out.reshape(shape), jnp.int32)
+
+    # -- slot pinning / shard introspection ----------------------------------
+
+    def _split_dev(self, dev_ids):
+        flat = np.asarray(dev_ids, np.int64).reshape(-1)
+        flat = flat[(flat >= 0) & (flat < self.dev_rows)]
+        return flat // self.stride, flat % self.stride
+
+    def pin_slots(self, dev_ids):
+        own, loc = self._split_dev(dev_ids)
+        for s, sub in enumerate(self.shard_backends):
+            sel = own == s
+            if sel.any():
+                sub.pin_slots(loc[sel])
+
+    def unpin_slots(self, dev_ids):
+        own, loc = self._split_dev(dev_ids)
+        for s, sub in enumerate(self.shard_backends):
+            sel = own == s
+            if sel.any():
+                sub.unpin_slots(loc[sel])
+
+    def reset_pins(self):
+        for sub in self.shard_backends:
+            sub.reset_pins()
+
+    def n_put_shards(self) -> int:
+        return self.n_shards
+
+    def put_shards(self, dev_ids) -> tuple[int, ...]:
+        own, _ = self._split_dev(dev_ids)
+        return tuple(np.unique(own).tolist())
+
+    def queue_init(self, ids_shape):
+        if self.spec.staleness <= 0:
+            return None
+        return {f"s{s}": sub.queue_init(ids_shape)
+                for s, sub in enumerate(self.shard_backends)}
+
+    # -- traceable -----------------------------------------------------------
+
+    def _local_ids(self, flat, s):
+        local = flat - s * self.stride
+        return jnp.where((local >= 0) & (local < self.stride), local, -1)
+
+    def lookup(self, state, dev_ids):
+        shape = dev_ids.shape
+        flat = dev_ids.reshape(-1)
+        total = None
+        for s, sub in enumerate(self.shard_backends):
+            acts, _ = sub.lookup(state[f"s{s}"], self._local_ids(flat, s))
+            total = acts if total is None else total + acts
+        return total.reshape(*shape, self.spec.dim), {}
+
+    def apply_put(self, state, dev_ids, grads):
+        flat = dev_ids.reshape(-1)
+        g = grads.reshape(-1, self.spec.dim)
+        new = dict(state)
+        for s, sub in enumerate(self.shard_backends):
+            new[f"s{s}"], _ = sub.apply_put(state[f"s{s}"],
+                                            self._local_ids(flat, s), g)
+        return new, {}
+
+    def hybrid_update(self, state, queue, dev_ids, grads):
+        flat = dev_ids.reshape(-1)
+        g = grads.reshape(-1, self.spec.dim)
+        new_state, new_queue = dict(state), dict(queue or {})
+        for s, sub in enumerate(self.shard_backends):
+            q = None if queue is None else queue.get(f"s{s}")
+            st, q, _ = sub.hybrid_update(state[f"s{s}"], q,
+                                         self._local_ids(flat, s), g)
+            new_state[f"s{s}"] = st
+            new_queue[f"s{s}"] = q
+        if queue is None and all(v is None for v in new_queue.values()):
+            return new_state, None, {}
+        return new_state, new_queue, {}
+
+    # -- checkpoint ----------------------------------------------------------
+
+    def state_for_checkpoint(self, state):
+        return {
+            "shard_meta": np.array([self.n_shards, self.spec.rows,
+                                    self.spec.dim], np.int64),
+            "shards": {f"s{s}": sub.state_for_checkpoint(state[f"s{s}"])
+                       for s, sub in enumerate(self.shard_backends)},
+        }
+
+    def restore_from_checkpoint(self, blob):
+        self.last_restore_resharded = False
+        if isinstance(blob, dict) and "shard_meta" in blob:
+            meta = np.asarray(blob["shard_meta"], np.int64).reshape(-1)
+            if int(meta[0]) == self.n_shards:
+                # same geometry: per-shard bit-identical restore
+                out = {}
+                for s, sub in enumerate(self.shard_backends):
+                    try:
+                        out[f"s{s}"] = sub.restore_from_checkpoint(
+                            blob["shards"][f"s{s}"])
+                    except ValueError as e:
+                        raise ValueError(f"shard {s}: {e}") from e
+                return out
+        vec, acc = extract_logical_rows(blob, self.spec, self._base)
+        self.last_restore_resharded = True
+        return self._sub_states_from_logical(vec, acc)
+
+    # -- metrics / capacity accounting ---------------------------------------
+
+    def shard_metrics(self) -> dict:
+        """Per-shard gauges for the step-metrics dict (keys are relative:
+        the trainer prefixes ``shard/<table>/``), plus the max/mean
+        load-imbalance gauge over cumulative routed-id traffic."""
+        out = {}
+        for s, sub in enumerate(self.shard_backends):
+            faults = getattr(sub, "faults", 0)
+            hits = getattr(sub, "hits", 0)
+            looked = hits + faults
+            out[f"{s}/hit_rate"] = (hits / looked) if looked else 1.0
+            out[f"{s}/faults"] = float(faults)
+            store = getattr(sub, "store", None)
+            if store is not None:
+                out[f"{s}/rows"] = float(store.size)
+                out[f"{s}/bytes"] = float(sub.host_bytes())
+            else:
+                itemsize = jnp.dtype(sub.spec.dtype).itemsize
+                out[f"{s}/rows"] = float(sub.spec.rows)
+                out[f"{s}/bytes"] = float(sub.spec.rows * sub.spec.dim
+                                          * itemsize)
+        with self._lock:
+            traffic = self._traffic.copy()
+        mean = float(traffic.mean()) if traffic.size else 0.0
+        out["imbalance"] = (float(traffic.max()) / mean) if mean > 0 else 1.0
+        return out
+
+    def device_bytes(self, state) -> int:
+        return sum(sub.device_bytes(state[f"s{s}"])
+                   for s, sub in enumerate(self.shard_backends))
+
+    def host_bytes(self) -> int:
+        return sum(sub.host_bytes() for sub in self.shard_backends)
 
 
 # ===========================================================================
@@ -608,6 +1130,8 @@ class CompressedWireBackend(EmbeddingBackend):
         return C.blockscale_roundtrip(v, block=self._block)
 
     def _dev_rows(self) -> int:
+        if isinstance(self.inner, ShardedBackend):
+            return self.inner.dev_rows
         if isinstance(self.inner, HostLRUBackend):
             return self.inner.cache_rows
         return self.spec.rows
@@ -628,6 +1152,19 @@ class CompressedWireBackend(EmbeddingBackend):
 
     def reset_pins(self):
         self.inner.reset_pins()
+
+    def n_put_shards(self) -> int:
+        return self.inner.n_put_shards()
+
+    def put_shards(self, dev_ids) -> tuple[int, ...]:
+        return self.inner.put_shards(dev_ids)
+
+    def shard_metrics(self) -> dict:
+        return self.inner.shard_metrics()
+
+    @property
+    def last_restore_resharded(self) -> bool:
+        return self.inner.last_restore_resharded
 
     def queue_init(self, ids_shape):
         # the queue lives PS-side, AFTER the wire: it holds deduped puts
@@ -716,13 +1253,49 @@ def parse_backend_name(name: str | None) -> tuple[str, bool]:
 
 
 def create_backend(spec: EmbeddingSpec) -> EmbeddingBackend:
-    """``spec.backend`` -> backend instance (see parse_backend_name)."""
+    """``spec.backend`` -> backend instance (see parse_backend_name).
+    ``spec.emb_shards > 1`` routes through the :class:`ShardedBackend`
+    router; the compressed wire (when requested) wraps OUTSIDE the router,
+    so one wire serves the whole table. ``emb_shards == 1`` returns the
+    plain backend — bit- and checkpoint-byte-identical to the pre-router
+    code."""
     base, wrap = parse_backend_name(spec.backend)
-    if base == "dense":
-        backend: EmbeddingBackend = DenseBackend(spec)
+    if int(spec.emb_shards) > 1:
+        backend: EmbeddingBackend = ShardedBackend(spec)
+    elif base == "dense":
+        backend = DenseBackend(spec)
     else:
         backend = HostLRUBackend(spec)
     return CompressedWireBackend(backend) if wrap else backend
+
+
+def unwrap(backend: EmbeddingBackend) -> EmbeddingBackend:
+    """Strip wire decorators down to the storage backend (plain or router)."""
+    while isinstance(backend, CompressedWireBackend):
+        backend = backend.inner
+    return backend
+
+
+def ensure_shards(backend: EmbeddingBackend, k: int) -> EmbeddingBackend:
+    """Route a backend through a ``k``-shard router (the
+    ``PersiaTrainer.init(emb_shards=...)`` path). ``k == 1`` is "no
+    override" and returns the backend unchanged — it never downgrades a
+    spec-sharded router. Dense backends without ``spec.emb_shards`` keep
+    the legacy semantics (``init(shards=k)`` pads the PS rows for mesh
+    sharding), so only host-backed tables — which used to raise — and
+    existing routers are rebuilt here."""
+    if int(k) == 1:
+        return backend
+    inner = unwrap(backend)
+    if isinstance(inner, ShardedBackend):
+        if inner.n_shards == int(k):
+            return backend
+    elif not isinstance(inner, HostLRUBackend):
+        return backend                      # dense: legacy ps_init padding
+    new_inner = ShardedBackend(
+        dataclasses.replace(inner.spec, emb_shards=int(k)))
+    return CompressedWireBackend(new_inner) \
+        if isinstance(backend, CompressedWireBackend) else new_inner
 
 
 def make_backends(collection) -> dict[str, EmbeddingBackend]:
@@ -733,6 +1306,18 @@ def make_backends(collection) -> dict[str, EmbeddingBackend]:
 
 def any_requires_prepare(backends) -> bool:
     return any(b.requires_prepare for b in backends.values())
+
+
+def shard_step_metrics(backends) -> dict:
+    """Host-side per-shard gauges for the step-metrics dict:
+    ``shard/<table>/<k>/{hit_rate,faults,rows,bytes}`` plus the
+    ``shard/<table>/imbalance`` max/mean traffic gauge (hot-key skew made
+    visible). Empty — and cheap — when no table is sharded."""
+    out = {}
+    for n, b in backends.items():
+        for k, v in b.shard_metrics().items():
+            out[f"shard/{n}/{k}"] = v
+    return out
 
 
 def prepare_all(backends, states, ids):

@@ -51,6 +51,10 @@ class EmbeddingCollection:
                 raise ValueError(f"duplicate table name {n!r}")
             seen.add(n)
             parse_backend_name(s.backend)       # fail fast on bad specs
+            if int(s.emb_shards) < 1:
+                raise ValueError(
+                    f"table {n!r}: emb_shards must be >= 1 "
+                    f"(got {s.emb_shards})")
 
     # -- construction -------------------------------------------------------
 
@@ -122,6 +126,19 @@ class EmbeddingCollection:
             return dataclasses.replace(s, **kw)
         return self.map_specs(fn)
 
+    def with_shards(self, shards: "int | Mapping[str, int]"
+                    ) -> "EmbeddingCollection":
+        """Set per-table embedding-PS shard counts (the ShardedBackend
+        router, core/backend.py): an int shards every table, a mapping
+        shards the named tables and leaves the rest unchanged. Mapping
+        keys are validated against the registered table names."""
+        self._check_shard_mapping(shards)
+        if isinstance(shards, Mapping):
+            return self.map_specs(lambda n, s: dataclasses.replace(
+                s, emb_shards=int(shards.get(n, s.emb_shards))))
+        return self.map_specs(
+            lambda _, s: dataclasses.replace(s, emb_shards=int(shards)))
+
     # -- storage backends ----------------------------------------------------
 
     def make_backends(self):
@@ -133,8 +150,23 @@ class EmbeddingCollection:
 
     # -- collection-level PS ops ---------------------------------------------
 
+    def _check_shard_mapping(self, shards) -> None:
+        if not isinstance(shards, Mapping):
+            return
+        unknown = set(shards) - set(self.names)
+        if unknown:
+            raise ValueError(
+                f"emb_shards names unknown tables {sorted(unknown)}; "
+                f"collection has {list(self.names)}")
+        bad = {n: k for n, k in shards.items() if int(k) < 1}
+        if bad:
+            raise ValueError(f"emb_shards must be >= 1, got {bad}")
+
     def _shards_for(self, name: str, shards) -> int:
         if isinstance(shards, Mapping):
+            # a typo'd table name must fail loudly, not silently run
+            # single-sharded (every caller funnels through here)
+            self._check_shard_mapping(shards)
             return int(shards.get(name, 1))
         return int(shards)
 

@@ -57,6 +57,12 @@ class EmbeddingSpec:
     cache_rows: int = 0             # host_lru: device-resident hot slots
     wire_block: int = 128           # +compressed: blockscale block size
     wire_kernel: bool = False       # +compressed: Pallas kernel vs jnp ref
+    # -- sharded PS router (core/backend.py ShardedBackend) -------------------
+    # number of independent embedding-PS shards this table is hash-partitioned
+    # over (paper §4.1: each embedding worker owns a partition of every
+    # table). 1 = the plain single backend; k > 1 routes ids over k
+    # per-shard backends with per-shard stores/locks and concurrent fault-in.
+    emb_shards: int = 1
 
     def padded_rows(self, n_shards: int) -> int:
         return round_up(self.rows, max(n_shards, 1))

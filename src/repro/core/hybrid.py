@@ -132,6 +132,29 @@ def _dense_queue_push_pop(queue, grads):
             "filled": jnp.minimum(queue["filled"] + 1, n_tau)}, old
 
 
+def _queue_leaf(q):
+    """The (tau, W, ...) 'ids' array of a staleness queue, reaching into
+    sharded-router queues ({"s0": {...}, ...}) when needed."""
+    if q is None:
+        return None
+    return q["ids"] if "ids" in q else q["s0"]["ids"]
+
+
+def _queue_depth(q) -> int:
+    ids = _queue_leaf(q)
+    return 0 if ids is None else int(ids.shape[0])
+
+
+def _queue_width(q) -> int:
+    ids = _queue_leaf(q)
+    if ids is None:
+        return 0
+    w = 1
+    for s in ids.shape[1:]:
+        w *= int(s)
+    return w
+
+
 def _emb_grad_norm(agrads: dict) -> jax.Array:
     sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
              for g in agrads.values())
@@ -192,7 +215,23 @@ class PersiaTrainer:
     def init(self, key, batch_example=None, emb_shards=1) -> TrainState:
         """batch_example: abstract or concrete batch (for queue shapes).
         Required whenever any staleness is in play — without it the queues
-        cannot be sized and tau>0 would silently train synchronously."""
+        cannot be sized and tau>0 would silently train synchronously.
+
+        ``emb_shards`` (an int or a {table: k} mapping, validated against
+        the collection) selects per-table embedding-PS shard counts: dense
+        tables keep the legacy meaning (PS row padding for mesh sharding)
+        while host-backed tables route through the ShardedBackend router
+        (k independent shards, concurrent fault-in) — they used to reject
+        shards != 1 outright. Tables whose ``EmbeddingSpec.emb_shards`` is
+        already > 1 are routers from construction; the default of 1 here
+        never downgrades them."""
+        # swap in routers BEFORE drawing state: backends are shared by the
+        # cached jitted fns via the self.backends dict, mutated in place
+        self.collection._check_shard_mapping(emb_shards)
+        for n in self.collection.names:
+            self.backends[n] = BK.ensure_shards(
+                self.backends[n], self.collection._shards_for(n, emb_shards))
+        self._needs_prepare = BK.any_requires_prepare(self.backends)
         max_tau = max((s.staleness for _, s in self.collection.items()),
                       default=0)
         if batch_example is None and \
@@ -295,7 +334,9 @@ class PersiaTrainer:
         state, dev_ids = self._prepare(state, batch)
         if self._fused is None:
             self._fused = jax.jit(self.train_step, donate_argnums=(0,))
-        return self._fused(state, batch, dev_ids)
+        state, metrics = self._fused(state, batch, dev_ids)
+        metrics.update(BK.shard_step_metrics(self.backends))
+        return state, metrics
 
     # -- decomposed pipeline ---------------------------------------------------
     #
@@ -359,6 +400,8 @@ class PersiaTrainer:
         metrics = dict(metrics)
         metrics.update(get_metrics)
         metrics.update(put_metrics)
+        # host-side per-shard gauges (hit rates, faults, load imbalance)
+        metrics.update(BK.shard_step_metrics(self.backends))
         return state.replace(dense=dense, opt=opt, dense_queue=dense_queue,
                              emb=emb, emb_queue=queues,
                              step=state.step + 1), metrics
@@ -482,15 +525,25 @@ class PersiaTrainer:
         emb_queue = {n: queues.get(n) for n in self.collection.names}
         for n in self.collection.names:
             tau, q = self.collection[n].staleness, emb_queue[n]
-            if (tau > 0) != (q is not None) or \
-                    (q is not None and q["ids"].shape[0] != tau):
-                saved = 0 if q is None else int(q["ids"].shape[0])
+            saved = _queue_depth(q)
+            if (tau > 0) != (q is not None) or (q is not None
+                                                and saved != tau):
                 raise ValueError(
                     f"checkpoint table {n!r} was saved with staleness "
                     f"tau={saved} but this trainer runs tau={tau} — "
                     "restoring across modes would silently drop or bypass "
                     "the pending-put queue; rebuild the trainer with the "
                     "mode the checkpoint was trained under")
+        for n in self.collection.names:
+            bk = BK.unwrap(self.backends[n])
+            if emb_queue[n] is not None and \
+                    getattr(bk, "last_restore_resharded", False):
+                # the table was resharded on restore: pending queue puts
+                # are addressed in the OLD shard geometry (cache slots /
+                # per-shard local ids), so they are dropped — the paper's
+                # tolerated in-flight loss — and the FIFO restarts empty
+                # in the new geometry, replaying its warmup
+                emb_queue[n] = bk.queue_init((_queue_width(emb_queue[n]),))
         dq = dense_tree.get("dense_queue")
         tau_d = self.mode.dense_staleness
         dq_depth = 0 if dq is None else \

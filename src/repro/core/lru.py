@@ -20,12 +20,20 @@ class LRUEmbeddingStore:
     """Fixed-capacity LRU keyed by int64 id -> (vector, optimizer slot)."""
 
     def __init__(self, capacity: int, dim: int, seed: int = 0,
-                 init_scale: float = 0.02):
+                 init_scale: float = 0.02, track_recency: bool = True):
         assert capacity > 0
         self.capacity = capacity
         self.dim = dim
         self._rng = np.random.default_rng(seed)
         self._init_scale = init_scale
+        # track_recency=False skips the per-access linked-list touch on the
+        # batched read/write paths (allocation order still recorded). The
+        # embedding backends run their stores this way: those stores hold
+        # ALL logical rows and never evict, so per-access LRU upkeep is
+        # pure (GIL-bound) overhead on the fault path — it was the
+        # serializing cost that kept concurrent per-shard fault-ins from
+        # scaling. Stores that actually evict must keep the default.
+        self.track_recency = track_recency
         # array-list: vectors, optimizer state, prev/next indices, keys
         self.vectors = np.zeros((capacity, dim), np.float32)
         self.opt_acc = np.zeros((capacity,), np.float32)
@@ -117,7 +125,8 @@ class LRUEmbeddingStore:
         same batch, so only the all-hit case is safely batchable."""
         ids, slots = self._resolve(ids)
         if slots.size and (slots >= 0).all():
-            self._touch_many(slots.tolist())
+            if self.track_recency:
+                self._touch_many(slots.tolist())
             return self.vectors[slots].copy(), self.opt_acc[slots].copy()
         out_v = np.empty((len(ids), self.dim), np.float32)
         out_a = np.empty(len(ids), np.float32)
@@ -128,7 +137,7 @@ class LRUEmbeddingStore:
                 self.vectors[slot] = (self._rng.standard_normal(self.dim)
                                       * self._init_scale)
                 self.opt_acc[slot] = 0.0
-            else:
+            elif self.track_recency:
                 self._touch(slot)
             out_v[i] = self.vectors[slot]
             out_a[i] = self.opt_acc[slot]
@@ -169,13 +178,14 @@ class LRUEmbeddingStore:
             self.vectors[slots] = vectors
             if acc is not None:
                 self.opt_acc[slots] = acc
-            self._touch_many(slots.tolist())
+            if self.track_recency:
+                self._touch_many(slots.tolist())
             return
         for i, key in enumerate(ids.tolist()):   # misses: sequential allocs
             slot = self.index.get(key)
             if slot is None:
                 slot = self._alloc(key)
-            else:
+            elif self.track_recency:
                 self._touch(slot)
             self.vectors[slot] = vectors[i]
             if acc is not None:

@@ -22,6 +22,17 @@ jitted dense step of step *t*. Three invariants are enforced:
   applied — never exceeds ``min(max_inflight, tau)`` (and exactly 1 for
   synchronous tables, tau=0, which must never read past an unapplied put).
   A counting semaphore blocks the lookup stage instead of dropping puts.
+  The windows are per (table, PS shard): a sharded table
+  (``EmbeddingSpec.emb_shards > 1``) gets one window per shard. For
+  *synchronous* sharded tables (tau=0) a batch only consumes windows of
+  shards it actually routed ids to — a put is a true no-op on untouched
+  shards, so batches touching disjoint shards overlap where a table-wide
+  window would serialize them (disjoint shards share no rows). For
+  *hybrid* sharded tables (tau>0) every batch charges every shard's
+  window: the router advances every shard's FIFO on every put (a queued
+  shard-s gradient is applied tau puts later regardless of who routed ids
+  to s), so only full-window accounting preserves the hard
+  ``tau + min(max_inflight, tau)`` staleness bound.
   Note the pipeline window is *additional* read staleness on top of the
   device-side FIFO's algorithmic tau: a lookup can observe parameters up
   to ``tau + min(max_inflight, tau)`` updates old (bounded by ``2*tau``) —
@@ -220,7 +231,15 @@ class PipelinedTrainer:
         stop = threading.Event()
         errors: list[PipelineStageError] = []
         inflight = threading.Semaphore(self.max_inflight)
-        windows = {n: threading.Semaphore(self.put_window(n)) for n in names}
+        # put backpressure is per (table, PS shard): a sharded table gets one
+        # window per shard, and a batch only consumes the windows of shards
+        # it actually routed ids to — batches touching disjoint shards can
+        # overlap where a table-wide window would have serialized them.
+        # Unsharded tables have exactly one shard (0), reproducing the old
+        # per-table semantics bit for bit.
+        windows = {(n, s): threading.Semaphore(self.put_window(n))
+                   for n in names
+                   for s in range(backends[n].n_put_shards())}
         out_lock = threading.Lock()
         outstanding = {n: 0 for n in names}
         self.max_outstanding = {n: 0 for n in names}
@@ -286,6 +305,20 @@ class PipelinedTrainer:
             except Exception as e:   # noqa: BLE001
                 fail("loader", idx, e)
 
+        def touched_shards(n, dev_ids):
+            """(table, shard) windows this batch must charge. Hybrid
+            (tau>0) sharded tables charge EVERY shard — their put advances
+            every shard's FIFO (see module docstring); sync sharded tables
+            charge only the shards the batch routed ids to (no-op puts on
+            the rest); unsharded tables are their single shard 0."""
+            if n not in dev_ids:
+                return (0,)
+            bk = backends[n]
+            if bk.n_put_shards() > 1 and \
+                    trainer.collection[n].staleness > 0:
+                return tuple(range(bk.n_put_shards()))
+            return bk.put_shards(dev_ids[n])
+
         def prepare():
             st = self._stats["prepare"]
             while True:
@@ -314,9 +347,15 @@ class PipelinedTrainer:
                         # recycle rows a pending lookup/put still targets
                         for n in dev_ids:
                             backends[n].pin_slots(dev_ids[n])
+                    # decode the touched shards here, in the prepare
+                    # stage, where the dev ids are fresh host-built
+                    # arrays — not between the lookup stage's window
+                    # acquire and its jitted dispatch
+                    touched = {n: touched_shards(n, dev_ids)
+                               for n in names}
                     st.busy_s += time.perf_counter() - t0
                     st.items += 1
-                    if not q_put("lookup", (idx, batch, dev_ids)):
+                    if not q_put("lookup", (idx, batch, dev_ids, touched)):
                         return
                 except Exception as e:   # noqa: BLE001
                     fail("prepare", idx, e)
@@ -331,15 +370,17 @@ class PipelinedTrainer:
                 if item is _DONE:
                     q_put("dense", _DONE)
                     return
-                idx, batch, dev_ids = item
+                idx, batch, dev_ids, touched = item
                 try:
                     t0 = time.perf_counter()
                     sleep_for("lookup", idx)
                     # staleness backpressure: block (never drop) until every
-                    # table is within its put window
+                    # (table, shard) this batch charges is within its put
+                    # window (see touched_shards for what a batch charges)
                     for n in names:
-                        if not acquire(windows[n]):
-                            return
+                        for s in touched[n]:
+                            if not acquire(windows[(n, s)]):
+                                return
                     with out_lock:
                         for n in names:
                             outstanding[n] += 1
@@ -349,7 +390,8 @@ class PipelinedTrainer:
                         acts, get_m = lookup_fn(store["emb"], dev_ids)
                     st.busy_s += time.perf_counter() - t0
                     st.items += 1
-                    if not q_put("dense", (idx, batch, dev_ids, acts, get_m)):
+                    if not q_put("dense", (idx, batch, dev_ids, acts, get_m,
+                                           touched)):
                         return
                 except Exception as e:   # noqa: BLE001
                     fail("lookup", idx, e)
@@ -364,7 +406,7 @@ class PipelinedTrainer:
                 if item is _DONE:
                     q_put("put", _DONE)
                     return
-                idx, batch, dev_ids, acts, get_m = item
+                idx, batch, dev_ids, acts, get_m, touched = item
                 try:
                     t0 = time.perf_counter()
                     sleep_for("dense", idx)
@@ -377,7 +419,7 @@ class PipelinedTrainer:
                     st.busy_s += time.perf_counter() - t0
                     st.items += 1
                     if not q_put("put", (idx, dev_ids, agrads,
-                                         metrics, get_m)):
+                                         metrics, get_m, touched)):
                         return
                 except Exception as e:   # noqa: BLE001
                     fail("dense", idx, e)
@@ -389,7 +431,7 @@ class PipelinedTrainer:
                 item = q_get("put")
                 if item is None or item is _DONE:
                     return
-                idx, dev_ids, agrads, metrics, get_m = item
+                idx, dev_ids, agrads, metrics, get_m, touched = item
                 try:
                     t0 = time.perf_counter()
                     sleep_for("put", idx)
@@ -405,11 +447,13 @@ class PipelinedTrainer:
                         for n in names:
                             outstanding[n] -= 1
                     for n in names:
-                        windows[n].release()
+                        for s in touched[n]:
+                            windows[(n, s)].release()
                     inflight.release()
                     merged = dict(metrics)
                     merged.update(get_m)
                     merged.update(put_m)
+                    merged.update(BK.shard_step_metrics(backends))
                     results.append((idx, merged))
                     st.busy_s += time.perf_counter() - t0
                     st.items += 1

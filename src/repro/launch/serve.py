@@ -23,11 +23,12 @@ from repro.models import transformer as T
 
 
 def serve(cfg, batch=4, prompt_len=32, gen=16, seed=0, temperature=0.0,
-          emb_backend="dense", cache_rows=0):
+          emb_backend="dense", cache_rows=0, emb_shards=1):
     key = jax.random.PRNGKey(seed)
     dense = T.init_dense(cfg, key)
     spec = EmbeddingSpec(rows=cfg.vocab_size, dim=cfg.d_model,
-                         backend=emb_backend)
+                         backend=emb_backend,
+                         emb_shards=max(int(emb_shards), 1))
     if emb_backend.startswith("host_lru"):
         spec = dataclasses.replace(
             spec, cache_rows=cache_rows or max(1024, cfg.vocab_size // 8))
@@ -106,11 +107,16 @@ def main():
                          "embedding tier out-of-core from host RAM")
     ap.add_argument("--cache-rows", type=int, default=0,
                     help="host_lru device-cache slots (0 = vocab/8)")
+    ap.add_argument("--emb-shards", type=int, default=1,
+                    help="embedding-PS shards for the vocab table (> 1 "
+                         "routes through the sharded router: hash id->shard "
+                         "routing + concurrent per-shard fault-in)")
     args = ap.parse_args()
     cfg = get_config(args.arch, reduced=args.reduced)
     res = serve(cfg, args.batch, args.prompt_len, args.gen,
                 temperature=args.temperature,
-                emb_backend=args.emb_backend, cache_rows=args.cache_rows)
+                emb_backend=args.emb_backend, cache_rows=args.cache_rows,
+                emb_shards=args.emb_shards)
     print(f"arch={cfg.name} batch={args.batch} prompt={args.prompt_len} "
           f"gen={args.gen}")
     print(f"prefill {res['prefill_s']:.2f}s decode {res['decode_s']:.2f}s "

@@ -84,14 +84,36 @@ def _pipelined_span(engine, state, it, n):
     return state, (ms[-1] if ms else {})
 
 
+def parse_emb_shards(s: str):
+    """``--emb-shards`` value -> int or {table: k} mapping. Accepts a bare
+    int ("4") or comma-separated ``table=k`` pairs ("field_00=4,field_02=2");
+    table names are validated downstream against the collection."""
+    s = (s or "1").strip()
+    if "=" not in s:
+        return int(s)
+    out = {}
+    for part in s.split(","):
+        name, _, k = part.partition("=")
+        if not name.strip() or not k.strip():
+            raise ValueError(
+                f"bad --emb-shards entry {part!r}: expected 'table=k'")
+        out[name.strip()] = int(k)
+    return out
+
+
 def _ctr_collection_for(cfg, ds, args):
     """Per-field tables with the CLI-selected storage backend (dense PS,
-    host-LRU out-of-core, or either behind the compressed wire)."""
+    host-LRU out-of-core, or either behind the compressed wire) and
+    per-table PS shard counts (--emb-shards routes through the sharded
+    router of core/backend.py)."""
     coll = adapters.ctr_collection(cfg, lr=args.emb_lr,
                                    field_rows=ds.field_rows())
     if args.emb_backend != "dense":
         cache = args.cache_rows or max(1024, ds.rows_per_field // 8)
         coll = coll.with_backend(args.emb_backend, cache)
+    shards = parse_emb_shards(args.emb_shards)
+    if shards != 1:
+        coll = coll.with_shards(shards)
     return coll
 
 
@@ -195,12 +217,15 @@ def train_lm(args):
     import dataclasses
     cfg = small_lm_cfg()
     adapter = adapters.lm_adapter(cfg, lr=args.emb_lr)
+    coll = adapter.collection
     if args.emb_backend != "dense":
         cache = args.cache_rows or max(1024, cfg.vocab_size // 8)
-        adapter = dataclasses.replace(
-            adapter,
-            collection=adapter.collection.with_backend(args.emb_backend,
-                                                       cache))
+        coll = coll.with_backend(args.emb_backend, cache)
+    shards = parse_emb_shards(args.emb_shards)
+    if shards != 1:
+        coll = coll.with_shards(shards)
+    if coll is not adapter.collection:
+        adapter = dataclasses.replace(adapter, collection=coll)
     mode = mode_from_name(args.mode, args.tau)
     trainer = PersiaTrainer(adapter, mode,
                             OptConfig(kind="adam", lr=args.lr))
@@ -208,8 +233,9 @@ def train_lm(args):
     batch = {k: jnp.asarray(v) for k, v in next(it).items()}
     state = trainer.init(jax.random.PRNGKey(args.seed), batch)
     n_params = sum(x.size for x in jax.tree.leaves(state.dense))
+    vocab_spec = trainer.collection["vocab"]
     print(f"dense params: {n_params/1e6:.1f}M + emb "
-          f"{state.emb['vocab']['table'].size/1e6:.1f}M")
+          f"{vocab_spec.rows * vocab_spec.dim/1e6:.1f}M")
     if args.pipeline == "pipelined":
         engine = _make_engine(trainer, args)
         history = []
@@ -280,6 +306,12 @@ def main():
     ap.add_argument("--cache-rows", type=int, default=0,
                     help="host_lru device-cache slots per table "
                          "(0 = rows_per_field/8, at least 1024)")
+    ap.add_argument("--emb-shards", default="1",
+                    help="embedding-PS shards per table: an int for every "
+                         "table, or 'table=k,table=k' pairs. k > 1 routes "
+                         "through the sharded router (core/backend.py): "
+                         "hash id->shard routing, per-shard stores/locks, "
+                         "concurrent fault-in, reshardable checkpoints")
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--emb-lr", type=float, default=5e-2)
     ap.add_argument("--eval-every", type=int, default=25)

@@ -79,7 +79,11 @@ def dense_param_specs(params, stage=None) -> Any:
 def emb_state_specs(emb_state, spec: EmbeddingSpec):
     """Dense PS shards row-shard per their mode; a host_lru device cache
     (table + acc + slot_ids over cache_rows slots) row-shards the same way
-    (the hot set is what lives device-side)."""
+    (the hot set is what lives device-side). A ShardedBackend router state
+    ({"s0": sub_state, ...}) gets one spec tree per PS shard — each shard's
+    device arrays shard like a table of its own."""
+    if "table" not in emb_state:         # sharded router: per-shard states
+        return {k: emb_state_specs(v, spec) for k, v in emb_state.items()}
     t = table_spec(spec)
     out = {"table": t}
     if "acc" in emb_state:
@@ -92,6 +96,8 @@ def emb_state_specs(emb_state, spec: EmbeddingSpec):
 def queue_specs(queue):
     if queue is None:
         return None
+    if "ids" not in queue:               # sharded router: per-shard queues
+        return {k: queue_specs(v) for k, v in queue.items()}
     out = {"ids": P(None, BATCH), "grads": P(None, BATCH, None),
            "ptr": P(), "filled": P()}
     if "slots" in queue:                 # host_lru queues carry (slot, id)
