@@ -1,0 +1,177 @@
+"""Worker-side batch dedup (paper §4.2.3): unique-width vs occurrence-width
+data path at controlled duplication factors.
+
+A CTR batch's multi-hot ids repeat heavily; the dedup plan (core/dedup.py)
+makes the worker gather/queue/put ONE row per unique id. For each dup
+factor in {1, 4, 16} this benchmark draws batches whose ids come from a
+pool of ``n_occ / dup`` hot keys (each table sized at 2x the pool — the
+small-cardinality hot fields where dedup bites), then runs the SAME stream
+through two trainers:
+
+* ``dedup``   — the default unique-width path (per-batch DedupPlan;
+  lookups gather the pow2 bucket of the unique count, puts are
+  segment-summed before the staleness queue);
+* ``nodedup`` — ``batch_dedup=False``, the occurrence-width PR-4 path.
+
+Reported per dup factor: steps/s both ways, the speedup, the staleness
+queue bytes both ways (tau copies of the put width — the hybrid
+algorithm's biggest transient) and the measured dup factor from the step
+metrics. A ``unique_bag`` row times the fused Pallas gather+inverse+pool
+kernel against its unfused jnp oracle at the dup-16 shape.
+
+    PYTHONPATH=src python benchmarks/dedup.py --steps 20 --check
+
+``--check`` enforces the PR bar: at dup factor 16, >= 1.3x steps/s OR
+>= 2x queue-bytes reduction (the queue ratio is structural — the dedup cap
+vs the occurrence width — so it holds at any step count).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import adapters
+from repro.core.hybrid import PersiaTrainer, TrainMode
+from repro.optim.optimizers import OptConfig
+
+B, L, F, DIM = 256, 16, 2, 32        # n_occ = B * L = 4096 per table
+TAU = 3
+DUPS = (1, 4, 16)
+
+
+def _rows_for(dup: int) -> int:
+    """Table rows = 2x the hot-key pool: the dedup cap (min(n_occ, rows)
+    rounded to 1024) narrows the queues exactly when the table's
+    cardinality is below the batch's occurrence count."""
+    return max((B * L // dup) * 2, 64)
+
+
+def _batches(dup: int, n: int, seed: int = 0):
+    """Batches whose ids hit a pool of n_occ/dup keys — measured dup
+    factor ~= dup. dup=1 draws without replacement (all-distinct)."""
+    rng = np.random.default_rng(seed)
+    pool = B * L // dup
+    rows = _rows_for(dup)
+    out = []
+    for _ in range(n):
+        if dup == 1:
+            ids = np.stack([rng.choice(rows, B * L, replace=False)
+                            for _ in range(F)], 1).reshape(B, F, L)
+        else:
+            ids = rng.integers(0, pool, (B, F, L))
+        out.append({
+            "ids": jnp.asarray(ids, jnp.int32),
+            "dense": jnp.asarray(rng.standard_normal((B, 13)), jnp.float32),
+            "labels": jnp.asarray(rng.random((B, 1)) < 0.3, jnp.float32),
+        })
+    return out
+
+
+def _trainer(dup: int, batch_dedup: bool) -> PersiaTrainer:
+    rows = _rows_for(dup)
+    cfg = ModelConfig(name="dedup", arch_type="recsys", n_id_fields=F,
+                      ids_per_field=L, emb_dim=DIM, emb_rows=F * rows,
+                      n_dense_features=13, mlp_dims=(512, 256), n_tasks=1)
+    coll = adapters.ctr_collection(cfg, lr=5e-2, field_rows=(rows,) * F)
+    adapter = adapters.recsys_adapter(cfg, field_rows=(rows,) * F,
+                                      collection=coll)
+    return PersiaTrainer(adapter, TrainMode.hybrid(TAU),
+                         OptConfig(kind="adam", lr=1e-3),
+                         batch_dedup=batch_dedup)
+
+
+def _queue_bytes(state) -> int:
+    return sum(int(x.size) * x.dtype.itemsize
+               for q in state.emb_queue.values() if q is not None
+               for x in jax.tree.leaves(q))
+
+
+def _run_one(dup: int, batch_dedup: bool, steps: int):
+    """-> (steps/s, queue_bytes, measured dup factor)."""
+    tr = _trainer(dup, batch_dedup)
+    bs = _batches(dup, steps + 4)
+    st = tr.init(jax.random.PRNGKey(0), bs[0])
+    for b in bs[:4]:                      # compile outside the clock
+        st, m = tr.decomposed_step(st, b)
+    t0 = time.perf_counter()
+    for b in bs[4:]:
+        st, m = tr.decomposed_step(st, b)
+    jax.block_until_ready(st.emb)
+    dt = time.perf_counter() - t0
+    measured = float(np.mean([m[k] for k in m if k.endswith("dup_factor")])) \
+        if batch_dedup else float(dup)
+    return steps / dt, _queue_bytes(st), measured
+
+
+def _unique_bag_row():
+    """Fused Pallas unique_bag vs the unfused jnp oracle (interpret mode on
+    CPU — the Mosaic TPU compiler is the deployment target, so the timing
+    is indicative; the equality check is the load-bearing part)."""
+    from repro.kernels import ops, ref
+    rng = np.random.default_rng(0)
+    V, D, b, bag = 256, 128, 16, 8
+    table = jnp.asarray(rng.standard_normal((V, D)).astype(np.float32))
+    dev = jnp.asarray(np.concatenate([rng.permutation(V)[:32],
+                                      [-1] * 32]), jnp.int32)
+    inv = jnp.asarray(rng.integers(-1, 32, (b, bag)), jnp.int32)
+    want = ref.unique_bag_ref(table, dev, inv)
+    got = ops.unique_bag(table, dev, inv)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+    t0 = time.perf_counter()
+    for _ in range(3):
+        ops.unique_bag(table, dev, inv).block_until_ready()
+    us = (time.perf_counter() - t0) / 3 * 1e6
+    return ("dedup/unique_bag", us,
+            f"kernel==oracle B={b} bag={bag} V={V} D={D}")
+
+
+def run(steps: int = 20, results: dict | None = None):
+    """benchmarks/run.py entry — CSV rows (name, us, derived). Pass a dict
+    as ``results`` to also receive {dup: (speedup, queue_ratio)}."""
+    rows = [_unique_bag_row()]
+    for dup in DUPS:
+        sps_new, qb_new, measured = _run_one(dup, True, steps)
+        sps_old, qb_old, _ = _run_one(dup, False, steps)
+        speedup = sps_new / sps_old
+        qratio = qb_old / max(qb_new, 1)
+        if results is not None:
+            results[dup] = (speedup, qratio)
+        rows.append((
+            f"dedup/dup{dup}", 1e6 / sps_new,
+            f"dedup={sps_new:.1f}steps/s nodedup={sps_old:.1f}steps/s "
+            f"speedup={speedup:.2f}x queue_bytes={qb_new} vs {qb_old} "
+            f"({qratio:.1f}x) measured_dup={measured:.1f}"))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--check", action="store_true",
+                    help="exit nonzero unless dup=16 shows >= 1.3x steps/s "
+                         "or >= 2x queue-bytes reduction")
+    args = ap.parse_args()
+    results: dict = {}
+    rows = run(args.steps, results)
+    print("name,us_per_call,derived")
+    for n, us, derived in rows:
+        print(f"{n},{us:.1f},{derived}")
+    if args.check:
+        speedup, qratio = results[16]
+        if speedup < 1.3 and qratio < 2.0:
+            print(f"FAIL: dup=16 speedup {speedup:.2f}x < 1.3x AND "
+                  f"queue-bytes reduction {qratio:.2f}x < 2x",
+                  file=sys.stderr)
+            raise SystemExit(1)
+        print(f"OK: dup=16 speedup {speedup:.2f}x, queue-bytes reduction "
+              f"{qratio:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

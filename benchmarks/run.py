@@ -10,6 +10,7 @@ the dry-run artifacts when present).
   staleness     Thm 1          — tau & alpha sweeps vs the bound
   pipeline      Fig 4-5        — serial vs async-pipelined execution
   shard_scaling §4.1           — prepare fault-in latency vs PS shards
+  dedup         §4.2.3         — worker-side batch dedup vs occurrence path
 """
 from __future__ import annotations
 
@@ -20,7 +21,7 @@ import sys
 import traceback
 
 SUITES = ["compression", "scalability", "capacity", "convergence",
-          "staleness", "end_to_end", "pipeline", "shard_scaling"]
+          "staleness", "end_to_end", "pipeline", "shard_scaling", "dedup"]
 
 
 def main() -> None:
@@ -43,6 +44,8 @@ def main() -> None:
             if args.fast and name == "pipeline":
                 kwargs["steps"] = 8
             if args.fast and name == "shard_scaling":
+                kwargs["steps"] = 5
+            if args.fast and name == "dedup":
                 kwargs["steps"] = 5
             if args.fast and name == "end_to_end":
                 kwargs["target"] = 0.60

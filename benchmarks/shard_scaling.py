@@ -96,9 +96,9 @@ def _time_prepares(trainer: PersiaTrainer, acc: list):
     for bk in trainer.backends.values():
         orig = bk.prepare
 
-        def timed(state, ids, _orig=orig):
+        def timed(state, ids, *a, _orig=orig, **kw):
             t0 = time.perf_counter()
-            out = _orig(state, ids)
+            out = _orig(state, ids, *a, **kw)
             acc[0] += time.perf_counter() - t0
             return out
 

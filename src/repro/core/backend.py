@@ -30,6 +30,15 @@ wire. This module makes that a first-class storage choice: every table in an
   metrics plus a max/mean load-imbalance gauge. Composable under the
   compressed wire (wire outside, router inside).
 
+All backends speak the worker-side batch-dedup protocol (core/dedup.py):
+the trainer's prepare phase hands the traceable ops a per-batch
+``DedupPlan`` (unique device ids + occurrence inverse) instead of raw id
+arrays, so lookups gather one row per *unique* id and puts are
+segment-summed to unique width before they reach the staleness queue —
+queue memory, device puts and wire bytes all shrink by the batch's
+duplication factor (``EmbeddingSpec.batch_dedup=False`` restores the
+occurrence-width PR-4 path).
+
 The protocol splits host-level from traceable ops:
 
   host-level (never traced; may mutate backend-owned host state):
@@ -55,7 +64,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import compression as C
+from repro.core import dedup as D
 from repro.core import embedding_ps as PS
+from repro.core.dedup import DedupPlan
 from repro.core.embedding_ps import EmbeddingSpec
 from repro.core.lru import LRUEmbeddingStore
 from repro.utils import round_up
@@ -65,21 +76,11 @@ def _prod(shape) -> int:
     return math.prod(int(s) for s in shape)
 
 
-def _dedup_cap(n_put: int, n_rows: int) -> int:
-    """Mirror of embedding_ps.apply_put's dedup capacity rule, so the
-    backends' wire/cache dedups drop rows exactly when the dense PS would."""
-    return round_up(min(n_put, n_rows), min(1024, n_put))
-
-
-def _pow2_bucket(n: int, floor: int = 32) -> int:
-    """Smallest power of two >= n (and >= floor). The fault path pads its
-    scatter/gather shapes to these buckets: each distinct miss count would
-    otherwise dispatch a fresh shape and trigger its own XLA compile,
-    turning the per-step prepare into a seconds-long recompile treadmill."""
-    b = floor
-    while b < n:
-        b <<= 1
-    return b
+# dedup capacity + jit-shape bucketing both live in core/dedup.py now —
+# one shared rule for the PS apply, the queue sizing, the wire and the
+# fault path (a drifted mirror would make one layer drop rows another
+# layer still ships)
+_pow2_bucket = D.pow2_bucket
 
 
 # the fault path's device ops, fused and jitted (cached per bucket shape):
@@ -114,7 +115,18 @@ class EmbeddingBackend:
     """Protocol base. Subclasses own one table's storage (device arrays are
     threaded through as pytrees; anything host-resident lives on ``self``).
     ``requires_prepare`` tells the trainer whether ``prepare`` does real work
-    (host fault-in) and therefore must run outside jit every step."""
+    (host fault-in) and therefore must run outside jit every step.
+
+    The traceable ops accept device ids in two forms: a raw id array (the
+    pre-dedup occurrence-width path, one row per occurrence) or a
+    :class:`~repro.core.dedup.DedupPlan` (the worker-side batch-dedup path:
+    ``dev`` unique device ids + ``inv`` occurrence->unique inverse). The
+    base class dispatches on the form; subclasses implement the ``_flat``
+    (occurrence) and ``_unique`` (plan) variants. With a plan, ``lookup``
+    gathers unique rows and scatters through the inverse, and the puts
+    segment-sum occurrence grads to unique width ONCE at the outermost
+    layer — everything downstream (queues, wire, optimizer apply) runs at
+    unique width."""
 
     spec: EmbeddingSpec
     requires_prepare: bool = False
@@ -126,9 +138,27 @@ class EmbeddingBackend:
     def init(self, key, shards: int = 1, scale: float = 0.02):
         raise NotImplementedError
 
-    def prepare(self, state, ids):
-        """(state, ids) -> (state, device_ids). Host-level, once per step."""
+    def prepare(self, state, ids, assume_unique: bool = False, counts=None):
+        """(state, ids) -> (state, device_ids). Host-level, once per step.
+        ``assume_unique`` marks ids as an already-deduped set (a plan's
+        unique ids — backends skip their own np.unique); ``counts`` carries
+        the per-unique occurrence counts for traffic accounting."""
         return state, ids
+
+    # -- worker-side dedup sizing --------------------------------------------
+
+    def dedup_rows(self) -> int:
+        """Upper bound on distinct device ids one batch can produce — the
+        denominator of the dedup capacity rule for this backend."""
+        return self.spec.rows
+
+    def queue_width(self, n_occ: int) -> int:
+        """Width of this table's staleness-queue slots for a batch of
+        ``n_occ`` id occurrences: the dedup cap under batch dedup, the raw
+        occurrence count on the legacy path."""
+        if self.spec.batch_dedup:
+            return D.dedup_cap(n_occ, self.dedup_rows())
+        return int(n_occ)
 
     # slot pinning: a pipelined caller pins a batch's device slots between
     # its prepare and its applied put, so a later batch's fault-in cannot
@@ -166,13 +196,51 @@ class EmbeddingBackend:
         raise NotImplementedError
 
     # -- traceable -----------------------------------------------------------
+    #
+    # Public ops dispatch on the dev_ids form (raw array vs DedupPlan);
+    # subclasses implement the _flat/_unique variants. The plan path
+    # segment-sums occurrence grads to unique width here, exactly once.
+
     def lookup(self, state, dev_ids):
-        raise NotImplementedError
+        if D.is_plan(dev_ids):
+            acts_u, m = self._lookup_unique(state, dev_ids.dev)
+            return D.plan_scatter(acts_u, dev_ids.inv), m
+        return self._lookup_flat(state, dev_ids)
 
     def apply_put(self, state, dev_ids, grads):
-        raise NotImplementedError
+        if D.is_plan(dev_ids):
+            g_u = D.plan_segment_sum(dev_ids.inv, grads,
+                                     int(dev_ids.dev.shape[0]))
+            return self._put_unique(state, dev_ids.dev, g_u)
+        return self._put_flat(state, dev_ids, grads)
 
     def hybrid_update(self, state, queue, dev_ids, grads):
+        if D.is_plan(dev_ids):
+            g_u = D.plan_segment_sum(dev_ids.inv, grads,
+                                     int(dev_ids.dev.shape[0]))
+            return self._hybrid_unique(state, queue, dev_ids.dev, g_u)
+        return self._hybrid_flat(state, queue, dev_ids, grads)
+
+    def _lookup_flat(self, state, dev_ids):
+        raise NotImplementedError
+
+    def _lookup_unique(self, state, dev_u):
+        """(U,) unique device ids -> ((U, dim) rows, metrics). Default:
+        the flat lookup already handles any id shape."""
+        return self._lookup_flat(state, dev_u)
+
+    def _put_flat(self, state, dev_ids, grads):
+        raise NotImplementedError
+
+    def _put_unique(self, state, dev_u, g_u):
+        """Pre-deduped put: (U,) unique device ids + (U, dim) fp32 summed
+        grads — no on-device sort/dedup needed."""
+        raise NotImplementedError
+
+    def _hybrid_flat(self, state, queue, dev_ids, grads):
+        raise NotImplementedError
+
+    def _hybrid_unique(self, state, queue, dev_u, g_u):
         raise NotImplementedError
 
     # -- capacity accounting (benchmarks) ------------------------------------
@@ -203,20 +271,51 @@ class DenseBackend(EmbeddingBackend):
     def queue_init(self, ids_shape):
         if self.spec.staleness <= 0:
             return None
-        return PS.queue_init(self.spec, (_prod(ids_shape),), self.spec.dim)
+        return self._queue_init_width(self.queue_width(_prod(ids_shape)))
 
-    def lookup(self, state, dev_ids):
+    def _queue_init_width(self, width: int):
+        return PS.queue_init(self.spec, (int(width),), self.spec.dim)
+
+    def _lookup_flat(self, state, dev_ids):
         return PS.lookup(state, self.spec, dev_ids), {}
 
-    def apply_put(self, state, dev_ids, grads):
+    def _put_flat(self, state, dev_ids, grads):
         return PS.apply_put(state, self.spec, dev_ids.reshape(-1),
                             grads.reshape(-1, self.spec.dim)), {}
 
-    def hybrid_update(self, state, queue, dev_ids, grads):
-        st, q = PS.hybrid_emb_update(state, queue, self.spec,
-                                     dev_ids.reshape(-1),
-                                     grads.reshape(-1, self.spec.dim))
-        return st, q, {}
+    def _put_unique(self, state, dev_u, g_u):
+        return PS.apply_put(state, self.spec, dev_u, g_u,
+                            assume_unique=True), {}
+
+    def _hybrid_flat(self, state, queue, dev_ids, grads):
+        spec = self.spec
+        flat = dev_ids.reshape(-1)
+        g = grads.reshape(-1, spec.dim)
+        if spec.staleness <= 0 or queue is None or not spec.batch_dedup:
+            # legacy path: occurrence-width queue, dedup at apply time
+            st, q = PS.hybrid_emb_update(state, queue, spec, flat, g)
+            return st, q, {}
+        # unique-width queue: the occurrence put must dedup BEFORE the push
+        # (same summed rows the post-queue dedup would produce, so mixing
+        # this path with plan-driven steps keeps the queue invariant: every
+        # queued put is one row per unique id)
+        valid = (flat >= 0) & (flat < spec.rows)
+        ids_signed = jnp.where(valid, flat.astype(jnp.int32), -1)
+        gm = jnp.where(valid[:, None], g, 0.0).astype(jnp.float32)
+        uniq, g_u = C.dedup_put(ids_signed, gm, int(queue["ids"].shape[1]))
+        return self._hybrid_unique(state, queue, uniq, g_u)
+
+    def _hybrid_unique(self, state, queue, dev_u, g_u):
+        spec = self.spec
+        if spec.staleness <= 0 or queue is None:
+            st, m = self._put_unique(state, dev_u, g_u)
+            return st, queue, m
+        cap = int(queue["ids"].shape[1])
+        ids_cap = D.pad_axis0(dev_u.astype(jnp.int32), cap, -1)
+        g_cap = D.pad_axis0(g_u, cap, 0)
+        queue, old_ids, old_g = PS.queue_push_pop(queue, ids_cap, g_cap)
+        st = PS.apply_put(state, spec, old_ids, old_g, assume_unique=True)
+        return st, queue, {}
 
     def state_for_checkpoint(self, state):
         return jax.tree.map(np.asarray, state)
@@ -363,19 +462,21 @@ class HostLRUBackend(EmbeddingBackend):
             state["acc"] = jnp.zeros((self.cache_rows,), jnp.float32)
         return state
 
-    def prepare(self, state, ids):
+    def prepare(self, state, ids, assume_unique: bool = False, counts=None):
         """Fault the batch's rows into the device cache; translate ids to
         cache-slot indices (-1 for padding / out-of-range). Thread-safe:
         the whole fault-in (slot map + LRU store + clock) is one critical
-        section, so concurrent callers see consistent slot bookkeeping."""
+        section, so concurrent callers see consistent slot bookkeeping.
+        ``assume_unique=True`` (the batch-dedup plan path) skips the
+        np.unique — the caller already deduped the batch."""
         with self._lock:
-            return self._prepare_locked(state, ids)
+            return self._prepare_locked(state, ids, assume_unique)
 
-    def _prepare_locked(self, state, ids):
+    def _prepare_locked(self, state, ids, assume_unique: bool = False):
         spec = self.spec
         flat = np.asarray(ids, np.int64).reshape(-1)
         valid = (flat >= 0) & (flat < spec.rows)
-        uniq = np.unique(flat[valid])
+        uniq = flat[valid] if assume_unique else np.unique(flat[valid])
         if uniq.size > self.cache_rows:
             raise ValueError(
                 f"batch working set ({uniq.size} unique ids) exceeds the "
@@ -500,11 +601,19 @@ class HostLRUBackend(EmbeddingBackend):
         with self._lock:
             self._pin_count[:] = 0
 
+    def dedup_rows(self) -> int:
+        # a batch's unique set must fit the device cache (prepare raises
+        # otherwise), so the cache bounds the distinct device ids too
+        return min(self.spec.rows, self.cache_rows)
+
     def queue_init(self, ids_shape):
-        spec = self.spec
-        if spec.staleness <= 0:
+        if self.spec.staleness <= 0:
             return None
-        tau, n_ids = spec.staleness, _prod(ids_shape)
+        return self._queue_init_width(self.queue_width(_prod(ids_shape)))
+
+    def _queue_init_width(self, width: int):
+        spec = self.spec
+        tau, n_ids = spec.staleness, int(width)
         return {
             "slots": jnp.full((tau, n_ids), -1, jnp.int32),
             "ids": jnp.full((tau, n_ids), -1, jnp.int32),
@@ -515,7 +624,7 @@ class HostLRUBackend(EmbeddingBackend):
 
     # -- traceable -----------------------------------------------------------
 
-    def lookup(self, state, dev_ids):
+    def _lookup_flat(self, state, dev_ids):
         shape = dev_ids.shape
         flat = dev_ids.reshape(-1)
         valid = (flat >= 0) & (flat < self.cache_rows)
@@ -524,39 +633,84 @@ class HostLRUBackend(EmbeddingBackend):
             state["table"].dtype)
         return out.reshape(*shape, self.spec.dim), {}
 
-    def apply_put(self, state, dev_ids, grads):
+    def _put_flat(self, state, dev_ids, grads):
         spec = self.spec
         flat = dev_ids.reshape(-1)
         grads = grads.reshape(-1, spec.dim)
         valid = (flat >= 0) & (flat < self.cache_rows)
         g = jnp.where(valid[:, None], grads, 0.0).astype(jnp.float32)
         slot_signed = jnp.where(valid, flat.astype(jnp.int32), -1)
-        cap = _dedup_cap(int(flat.shape[0]), self.cache_rows)
+        cap = D.dedup_cap(int(flat.shape[0]), self.cache_rows)
         uniq, g_u = C.dedup_put(slot_signed, g, cap)
+        return self._put_unique(state, uniq, g_u)
+
+    def _put_unique(self, state, slots_u, g_u):
         new = PS._apply_sparse(
-            state, spec, jnp.where(uniq >= 0, uniq, self.cache_rows), g_u,
-            self.cache_rows)
+            state, self.spec,
+            jnp.where(slots_u >= 0, slots_u, self.cache_rows),
+            g_u.astype(jnp.float32), self.cache_rows)
         return new, {}
 
-    def hybrid_update(self, state, queue, dev_ids, grads):
+    def _hybrid_flat(self, state, queue, dev_ids, grads):
         spec = self.spec
         flat = dev_ids.reshape(-1)
         g = grads.reshape(-1, spec.dim)
         if spec.staleness <= 0 or queue is None:
-            st, m = self.apply_put(state, flat, g)
+            st, m = self._put_flat(state, flat, g)
             return st, queue, m
         valid = (flat >= 0) & (flat < self.cache_rows)
+        if not spec.batch_dedup:
+            # legacy path: occurrence-width queue slots
+            return self._hybrid_flat_legacy(state, queue, flat, g, valid)
+        # unique-width queue: dedup by slot before the push
+        gm = jnp.where(valid[:, None], g, 0.0).astype(jnp.float32)
+        slot_signed = jnp.where(valid, flat.astype(jnp.int32), -1)
+        slots_u, g_u = C.dedup_put(slot_signed, gm,
+                                   int(queue["slots"].shape[1]))
+        return self._hybrid_unique(state, queue, slots_u, g_u)
+
+    def _hybrid_flat_legacy(self, state, queue, flat, g, valid):
+        spec = self.spec
         safe = jnp.clip(flat, 0, self.cache_rows - 1)
         logical = jnp.where(valid, state["slot_ids"][safe], -1)
+        queue, old_slots, old_ids, old_g = self._queue_push_pop(
+            queue, jnp.where(valid, flat.astype(jnp.int32), -1), logical, g)
+        # a tau-stale put only lands if its slot still holds the same row
+        old_safe = jnp.clip(old_slots, 0, self.cache_rows - 1)
+        still = (old_slots >= 0) & (old_ids >= 0) & \
+            (state["slot_ids"][old_safe] == old_ids)
+        st, m = self._put_flat(state, jnp.where(still, old_slots, -1), old_g)
+        return st, queue, m
+
+    def _hybrid_unique(self, state, queue, slots_u, g_u):
+        spec = self.spec
+        if spec.staleness <= 0 or queue is None:
+            st, m = self._put_unique(state, slots_u, g_u)
+            return st, queue, m
+        cap = int(queue["slots"].shape[1])
+        slots_cap = D.pad_axis0(slots_u.astype(jnp.int32), cap, -1)
+        g_cap = D.pad_axis0(g_u, cap, 0)
+        safe = jnp.clip(slots_cap, 0, self.cache_rows - 1)
+        logical = jnp.where(slots_cap >= 0, state["slot_ids"][safe], -1)
+        queue, old_slots, old_ids, old_g = self._queue_push_pop(
+            queue, slots_cap, logical, g_cap)
+        old_safe = jnp.clip(old_slots, 0, self.cache_rows - 1)
+        still = (old_slots >= 0) & (old_ids >= 0) & \
+            (state["slot_ids"][old_safe] == old_ids)
+        st, m = self._put_unique(state, jnp.where(still, old_slots, -1),
+                                 old_g)
+        return st, queue, m
+
+    def _queue_push_pop(self, queue, slots, logical, g):
+        """Push (slots, ids, grads); pop the tau-stale entry."""
         ptr = queue["ptr"]
         old_slots = jnp.take(queue["slots"], ptr, axis=0)
         old_ids = jnp.take(queue["ids"], ptr, axis=0)
         old_g = jnp.take(queue["grads"], ptr, axis=0)
         tau = queue["slots"].shape[0]
-        queue = {
+        new_q = {
             "slots": jax.lax.dynamic_update_index_in_dim(
-                queue["slots"], jnp.where(valid, flat.astype(jnp.int32), -1),
-                ptr, 0),
+                queue["slots"], slots, ptr, 0),
             "ids": jax.lax.dynamic_update_index_in_dim(
                 queue["ids"], logical.astype(jnp.int32), ptr, 0),
             "grads": jax.lax.dynamic_update_index_in_dim(
@@ -564,12 +718,7 @@ class HostLRUBackend(EmbeddingBackend):
             "ptr": (ptr + 1) % tau,
             "filled": jnp.minimum(queue["filled"] + 1, tau),
         }
-        # a tau-stale put only lands if its slot still holds the same row
-        old_safe = jnp.clip(old_slots, 0, self.cache_rows - 1)
-        still = (old_slots >= 0) & (old_ids >= 0) & \
-            (state["slot_ids"][old_safe] == old_ids)
-        st, m = self.apply_put(state, jnp.where(still, old_slots, -1), old_g)
-        return st, queue, m
+        return new_q, old_slots, old_ids, old_g
 
     # -- checkpoint ----------------------------------------------------------
 
@@ -926,12 +1075,21 @@ class ShardedBackend(EmbeddingBackend):
                     sub.spec, r.sub_rows, sub_vec, sub_acc)
         return states
 
-    def prepare(self, state, ids):
+    def dedup_rows(self) -> int:
+        return min(self.spec.rows, self.dev_rows)
+
+    def prepare(self, state, ids, assume_unique: bool = False, counts=None):
         """Concurrent per-shard fault-in: the batch is split by the routing
         and every shard's ``prepare`` runs on the router's thread pool —
         each under its own shard lock, so host fault-in latency scales down
         with the shard count instead of serializing behind one global
-        lock. Returns shard-encoded device ids."""
+        lock. Returns shard-encoded device ids.
+
+        On the batch-dedup path ``ids`` is the plan's unique set (routed
+        subsets stay unique, so shards skip their own np.unique) and
+        ``counts`` carries per-unique occurrence counts — the traffic /
+        imbalance gauges keep measuring the raw id stream, not the
+        deduped wire, so hot-key skew stays visible."""
         spec = self.spec
         shape = np.shape(ids)
         flat = np.asarray(ids, np.int64).reshape(-1)
@@ -939,12 +1097,17 @@ class ShardedBackend(EmbeddingBackend):
         own_raw, loc = self._routing.shard_and_local(np.where(valid, flat, 0))
         own = np.where(valid, own_raw, -1)
         with self._lock:
-            self._traffic += np.bincount(own[own >= 0],
-                                         minlength=self.n_shards)
+            if counts is None:
+                self._traffic += np.bincount(own[own >= 0],
+                                             minlength=self.n_shards)
+            else:
+                np.add.at(self._traffic, own[valid],
+                          np.asarray(counts, np.int64).reshape(-1)[valid])
 
         def fault_one(s):
             sub_ids = np.where(own == s, loc, -1)
-            return self.shard_backends[s].prepare(state[f"s{s}"], sub_ids)
+            return self.shard_backends[s].prepare(state[f"s{s}"], sub_ids,
+                                                  assume_unique)
 
         pool = self._ensure_pool()
         futs = [pool.submit(fault_one, s) for s in range(self.n_shards)]
@@ -995,7 +1158,13 @@ class ShardedBackend(EmbeddingBackend):
     def queue_init(self, ids_shape):
         if self.spec.staleness <= 0:
             return None
-        return {f"s{s}": sub.queue_init(ids_shape)
+        # one width for every shard's queue: the ROUTER-level cap — the
+        # plan's unique put is pushed into each shard masked to that
+        # shard's rows, so every sub-queue must hold the full unique width
+        return self._queue_init_width(self.queue_width(_prod(ids_shape)))
+
+    def _queue_init_width(self, width: int):
+        return {f"s{s}": sub._queue_init_width(width)
                 for s, sub in enumerate(self.shard_backends)}
 
     # -- traceable -----------------------------------------------------------
@@ -1004,32 +1173,62 @@ class ShardedBackend(EmbeddingBackend):
         local = flat - s * self.stride
         return jnp.where((local >= 0) & (local < self.stride), local, -1)
 
-    def lookup(self, state, dev_ids):
+    def _lookup_flat(self, state, dev_ids):
         shape = dev_ids.shape
         flat = dev_ids.reshape(-1)
         total = None
         for s, sub in enumerate(self.shard_backends):
-            acts, _ = sub.lookup(state[f"s{s}"], self._local_ids(flat, s))
+            acts, _ = sub._lookup_flat(state[f"s{s}"],
+                                       self._local_ids(flat, s))
             total = acts if total is None else total + acts
         return total.reshape(*shape, self.spec.dim), {}
 
-    def apply_put(self, state, dev_ids, grads):
+    def _lookup_unique(self, state, dev_u):
+        # every unique id is owned by exactly one shard: the per-shard
+        # gathers are disjoint (zeros elsewhere), so the sum is exact
+        total = None
+        for s, sub in enumerate(self.shard_backends):
+            acts, _ = sub._lookup_flat(state[f"s{s}"],
+                                       self._local_ids(dev_u, s))
+            total = acts if total is None else total + acts
+        return total, {}
+
+    def _put_flat(self, state, dev_ids, grads):
         flat = dev_ids.reshape(-1)
         g = grads.reshape(-1, self.spec.dim)
         new = dict(state)
         for s, sub in enumerate(self.shard_backends):
-            new[f"s{s}"], _ = sub.apply_put(state[f"s{s}"],
+            new[f"s{s}"], _ = sub._put_flat(state[f"s{s}"],
                                             self._local_ids(flat, s), g)
         return new, {}
 
-    def hybrid_update(self, state, queue, dev_ids, grads):
+    def _put_unique(self, state, dev_u, g_u):
+        new = dict(state)
+        for s, sub in enumerate(self.shard_backends):
+            new[f"s{s}"], _ = sub._put_unique(state[f"s{s}"],
+                                              self._local_ids(dev_u, s), g_u)
+        return new, {}
+
+    def _hybrid_flat(self, state, queue, dev_ids, grads):
         flat = dev_ids.reshape(-1)
         g = grads.reshape(-1, self.spec.dim)
         new_state, new_queue = dict(state), dict(queue or {})
         for s, sub in enumerate(self.shard_backends):
             q = None if queue is None else queue.get(f"s{s}")
-            st, q, _ = sub.hybrid_update(state[f"s{s}"], q,
-                                         self._local_ids(flat, s), g)
+            st, q, _ = sub._hybrid_flat(state[f"s{s}"], q,
+                                        self._local_ids(flat, s), g)
+            new_state[f"s{s}"] = st
+            new_queue[f"s{s}"] = q
+        if queue is None and all(v is None for v in new_queue.values()):
+            return new_state, None, {}
+        return new_state, new_queue, {}
+
+    def _hybrid_unique(self, state, queue, dev_u, g_u):
+        new_state, new_queue = dict(state), dict(queue or {})
+        for s, sub in enumerate(self.shard_backends):
+            q = None if queue is None else queue.get(f"s{s}")
+            st, q, _ = sub._hybrid_unique(state[f"s{s}"], q,
+                                          self._local_ids(dev_u, s), g_u)
             new_state[f"s{s}"] = st
             new_queue[f"s{s}"] = q
         if queue is None and all(v is None for v in new_queue.values()):
@@ -1141,8 +1340,17 @@ class CompressedWireBackend(EmbeddingBackend):
     def init(self, key, shards: int = 1, scale: float = 0.02):
         return self.inner.init(key, shards, scale)
 
-    def prepare(self, state, ids):
-        return self.inner.prepare(state, ids)
+    def prepare(self, state, ids, assume_unique: bool = False, counts=None):
+        return self.inner.prepare(state, ids, assume_unique, counts)
+
+    def dedup_rows(self) -> int:
+        return self.inner.dedup_rows()
+
+    def queue_width(self, n_occ: int) -> int:
+        # the wire ALWAYS dedups its puts (even on the legacy path), so its
+        # queue is capped regardless of batch_dedup — the pre-dedup width
+        # rule, kept so old wire checkpoints restore without migration
+        return D.dedup_cap(n_occ, self._dev_rows())
 
     def pin_slots(self, dev_ids):
         self.inner.pin_slots(dev_ids)
@@ -1170,8 +1378,8 @@ class CompressedWireBackend(EmbeddingBackend):
         # the queue lives PS-side, AFTER the wire: it holds deduped puts
         if self.spec.staleness <= 0:
             return None
-        cap = _dedup_cap(_prod(ids_shape), self._dev_rows())
-        return self.inner.queue_init((cap,))
+        return self.inner._queue_init_width(
+            self.queue_width(_prod(ids_shape)))
 
     def state_for_checkpoint(self, state):
         return self.inner.state_for_checkpoint(state)
@@ -1182,22 +1390,43 @@ class CompressedWireBackend(EmbeddingBackend):
     # -- traceable -----------------------------------------------------------
 
     def lookup(self, state, dev_ids):
-        acts, m = self.inner.lookup(state, dev_ids)
-        n_vals = int(acts.size)
-        blocks = -(-n_vals // self._block)
+        if D.is_plan(dev_ids):
+            # the wire ships ONE row per unique id; the inverse scatter to
+            # occurrence width happens on the NN-worker side, AFTER the
+            # (lossy) wire — so both the bytes moved and the quantisation
+            # work shrink by the batch's dup factor
+            acts_u, m = self.inner._lookup_unique(state, dev_ids.dev)
+            n_raw = int(dev_ids.inv.size) * self.spec.dim
+            n_wire = int(acts_u.size)
+            acts = D.plan_scatter(self._roundtrip(acts_u), dev_ids.inv)
+        else:
+            acts, m = self.inner.lookup(state, dev_ids)
+            n_raw = n_wire = int(acts.size)
+            acts = self._roundtrip(acts)
+        blocks = -(-n_wire // self._block)
         m = dict(m)
-        m["get_bytes_raw"] = jnp.float32(n_vals * 4)
+        m["get_bytes_raw"] = jnp.float32(n_raw * 4)
         m["get_bytes_wire"] = jnp.float32(blocks * self._block * 2
                                           + blocks * 4)
-        return self._roundtrip(acts), m
+        return acts, m
 
     def _compress_put(self, dev_ids, grads):
+        """(dev_ids | plan, occurrence grads) -> (unique ids, compressed
+        unique grads, byte metrics). With a plan the lossless dedup IS the
+        plan's segment-sum (no on-device sort); the legacy path keeps the
+        sort-based dedup_put."""
         spec = self.spec
-        flat = dev_ids.reshape(-1).astype(jnp.int32)
-        g = grads.reshape(-1, spec.dim).astype(jnp.float32)
-        n_put = int(flat.shape[0])
-        cap = _dedup_cap(n_put, self._dev_rows())
-        uniq, g_u = C.dedup_put(flat, g, cap)
+        if D.is_plan(dev_ids):
+            uniq = dev_ids.dev
+            g_u = D.plan_segment_sum(dev_ids.inv, grads,
+                                     int(uniq.shape[0]))
+            n_put = int(dev_ids.inv.size)
+        else:
+            flat = dev_ids.reshape(-1).astype(jnp.int32)
+            g = grads.reshape(-1, spec.dim).astype(jnp.float32)
+            n_put = int(flat.shape[0])
+            cap = D.dedup_cap(n_put, self._dev_rows())
+            uniq, g_u = C.dedup_put(flat, g, cap)
         g_u = self._roundtrip(g_u)
         n_uniq = jnp.sum(uniq >= 0).astype(jnp.float32)
         n_vals = n_uniq * spec.dim
@@ -1212,12 +1441,12 @@ class CompressedWireBackend(EmbeddingBackend):
 
     def apply_put(self, state, dev_ids, grads):
         uniq, g_u, m = self._compress_put(dev_ids, grads)
-        st, m2 = self.inner.apply_put(state, uniq, g_u)
+        st, m2 = self.inner._put_unique(state, uniq, g_u)
         return st, {**m, **m2}
 
     def hybrid_update(self, state, queue, dev_ids, grads):
         uniq, g_u, m = self._compress_put(dev_ids, grads)
-        st, q, m2 = self.inner.hybrid_update(state, queue, uniq, g_u)
+        st, q, m2 = self.inner._hybrid_unique(state, queue, uniq, g_u)
         return st, q, {**m, **m2}
 
     # -- capacity accounting -------------------------------------------------
@@ -1321,12 +1550,40 @@ def shard_step_metrics(backends) -> dict:
 
 
 def prepare_all(backends, states, ids):
-    """Host-level per-table fault-in + id translation (identity for dense)."""
+    """Host-level per-table prepare: batch dedup + fault-in + id
+    translation, once per (table, batch).
+
+    For tables with ``spec.batch_dedup`` (the default) this computes the
+    :class:`~repro.core.dedup.DedupPlan` — np.unique on the host, the
+    backend's ``prepare`` consuming the already-unique set (no second
+    np.unique in the fault path) — and returns it as the table's dev-ids
+    entry; the traceable ops then run at unique width. Legacy tables
+    (``batch_dedup=False``) keep the occurrence-width translation.
+
+    Returns ``(new_states, dev_ids, metrics)`` where metrics carries the
+    per-table ``dedup/<table>/{dup_factor,unique_rows,bytes_saved}``
+    host gauges."""
     new_states = dict(states)
     dev_ids = {}
+    metrics = {}
     for n in ids:
-        new_states[n], dev_ids[n] = backends[n].prepare(states[n], ids[n])
-    return new_states, dev_ids
+        b = backends[n]
+        spec = b.spec
+        if not spec.batch_dedup:
+            new_states[n], dev_ids[n] = b.prepare(states[n], ids[n])
+            continue
+        cap = D.dedup_cap(max(int(np.size(ids[n])), 1), b.dedup_rows())
+        u_pad, inv, counts, info = D.make_plan(ids[n], spec.rows, cap)
+        new_states[n], dev_u = b.prepare(states[n], u_pad,
+                                         assume_unique=True, counts=counts)
+        dev_ids[n] = DedupPlan(dev=jnp.asarray(dev_u, jnp.int32),
+                               inv=jnp.asarray(inv, jnp.int32))
+        itemsize = jnp.dtype(spec.dtype).itemsize
+        metrics[f"dedup/{n}/dup_factor"] = info["dup_factor"]
+        metrics[f"dedup/{n}/unique_rows"] = float(info["n_unique"])
+        metrics[f"dedup/{n}/bytes_saved"] = float(
+            (info["n_occ"] - info["n_unique"]) * spec.dim * itemsize)
+    return new_states, dev_ids, metrics
 
 
 def _tag(metrics, name, table_metrics):

@@ -1,0 +1,239 @@
+"""Worker-side batch deduplication — Persia §4.2.3's first communication
+optimisation moved to the FRONT of the embedding data path.
+
+A CTR batch's multi-hot ids repeat heavily (hot keys, repeated users/items):
+the worker should gather and ship **one row per unique id**, not one per
+occurrence. Before this module the repro only deduped *after* the expensive
+part — ``embedding_ps.apply_put`` segment-summed on device once full-width
+gradients had already been transferred, queued for ``tau`` steps and
+(optionally) wire-compressed, while ``lookup`` gathered per-occurrence.
+
+The :class:`DedupPlan` is computed **once per (table, batch) on the host**
+(the trainer's prepare phase, outside jit) and carries:
+
+* ``dev``  — the batch's unique ids translated to *device* ids (raw ids for
+  dense, cache slots for host_lru, shard-encoded for the router), padded
+  with ``-1`` to a power-of-two bucket (same trick as the host-LRU fault
+  path: each distinct unique count would otherwise dispatch a fresh jit
+  shape and trigger its own XLA compile).
+* ``inv``  — occurrence -> unique position (``-1`` for padding/invalid
+  occurrences), at the original id shape.
+
+Everything downstream then runs at *unique width*: ``lookup`` gathers
+``n_unique`` rows and scatters activations back through ``inv`` inside jit
+(:func:`plan_scatter`; the fused Pallas ``unique_bag`` kernel in
+``repro.kernels`` does gather + inverse + sum-pool in one pass for pooled
+consumers), and the backward pass segment-sums occurrence gradients to
+unique width (:func:`plan_segment_sum`) *before* they enter the staleness
+queue — so queue memory (``tau`` copies!), device puts and compressed-wire
+bytes all shrink by the batch's duplication factor.
+
+Bit-exactness: summing a unique id's occurrence gradients here (in
+occurrence order, fp32) produces the same bits as the old post-queue
+``dedup_put`` (stable sort keeps equal ids in occurrence order), and
+adagrad's row-sparse apply only sees the per-row *sums* — so segment-sum
+before vs. after the queue commutes. The one caveat is non-fp32 queue
+dtypes: the cast to the queue dtype now happens after the summation instead
+of before, so bf16 queues round at a different point (fp32 queues — the
+default — are bit-identical).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.utils import round_up
+
+
+# ---------------------------------------------------------------------------
+# The canonical dedup capacity rule (single source of truth)
+# ---------------------------------------------------------------------------
+
+def dedup_cap(n_put: int, n_rows: int) -> int:
+    """Capacity of a deduplicated put of ``n_put`` entries over an id space
+    of ``n_rows``: at most ``min(n_put, n_rows)`` rows can be distinct,
+    rounded up so the deduped arrays still shard over the batch axes on any
+    production mesh (up to 1024 batch shards).
+
+    This is THE rule — ``embedding_ps.apply_put``, the storage backends'
+    queue sizing and the compressed wire all share it (a drifted mirror
+    would make one layer drop rows another layer still ships). It is
+    idempotent (``dedup_cap(dedup_cap(n, r), r) == dedup_cap(n, r)``),
+    which is what lets checkpointed queue widths be re-derived on restore.
+    """
+    n_put = int(n_put)
+    return round_up(min(n_put, int(n_rows)), min(1024, max(n_put, 1)))
+
+
+def pow2_bucket(n: int, floor: int = 32) -> int:
+    """Smallest power of two >= n (and >= floor) — the jit shape-stability
+    bucket shared with the host-LRU fault path."""
+    b = floor
+    while b < n:
+        b <<= 1
+    return b
+
+
+# ---------------------------------------------------------------------------
+# The per-(table, batch) dedup plan
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class DedupPlan:
+    """One batch's unique-width routing for one table (a jit-able pytree).
+
+    ``dev``: (U,) int32 unique *device* ids, -1 padding (U is the pow2
+    bucket of the batch's unique count, capped at the table's dedup cap).
+    ``inv``: occurrence-shaped int32, occurrence -> position in ``dev``
+    (-1 for padding / out-of-range occurrences).
+    """
+    dev: jax.Array
+    inv: jax.Array
+
+
+jax.tree_util.register_dataclass(
+    DedupPlan, data_fields=("dev", "inv"), meta_fields=())
+
+
+def is_plan(x) -> bool:
+    return isinstance(x, DedupPlan)
+
+
+def plan_dev(x):
+    """The device-id array of a plan, or the array itself (host-side
+    callers — pinning, shard routing — that accept either form)."""
+    return x.dev if isinstance(x, DedupPlan) else x
+
+
+def make_plan(ids, n_rows: int, cap: int, floor: int = 32):
+    """Host-side dedup of one table's batch ids.
+
+    ids: any-shape int array, -1 (or out-of-range) = padding.
+    Returns ``(unique_ids, inverse, counts, info)``:
+
+    * ``unique_ids``: (bucket,) np.int64, sorted uniques padded with -1
+      (``bucket = min(pow2_bucket(n_unique, floor), cap)``);
+    * ``inverse``: ids-shaped np.int32, occurrence -> unique position
+      (-1 for invalid occurrences);
+    * ``counts``: (bucket,) np.int64 occurrence count per unique id (0 on
+      padding) — the router's traffic/imbalance gauges keep measuring the
+      raw id *stream*, not the deduped wire;
+    * ``info``: {n_unique, n_occ, dup_factor} host gauges.
+    """
+    arr = np.asarray(ids, np.int64)
+    flat = arr.reshape(-1)
+    valid = (flat >= 0) & (flat < int(n_rows))
+    uniq, inv_valid, cnt = np.unique(flat[valid], return_inverse=True,
+                                     return_counts=True)
+    bucket = min(pow2_bucket(max(int(uniq.size), 1), floor), int(cap))
+    if uniq.size > bucket:
+        # cap follows dedup_cap(n_occ, backend.dedup_rows()); for a
+        # host-backed table dedup_rows is bounded by the device cache, so a
+        # batch whose working set exceeds the cache lands HERE (before the
+        # fault path would have raised its own version of this error)
+        raise ValueError(
+            f"batch working set ({uniq.size} unique ids) exceeds this "
+            f"table's dedup capacity ({bucket} — bounded by the occurrence "
+            "count, the table rows and, for host-backed tables, the device "
+            "cache) — raise EmbeddingSpec.cache_rows or shrink the batch")
+    u_pad = np.full(bucket, -1, np.int64)
+    u_pad[: uniq.size] = uniq
+    counts = np.zeros(bucket, np.int64)
+    counts[: uniq.size] = cnt
+    inv = np.full(flat.shape, -1, np.int32)
+    inv[valid] = inv_valid.astype(np.int32)
+    n_occ = int(valid.sum())
+    info = {"n_unique": int(uniq.size), "n_occ": n_occ,
+            "dup_factor": n_occ / max(int(uniq.size), 1)}
+    return u_pad, inv.reshape(arr.shape), counts, info
+
+
+# ---------------------------------------------------------------------------
+# Traceable unique-width ops (jit-safe, shapes static per plan bucket)
+# ---------------------------------------------------------------------------
+
+def plan_scatter(acts_u, inv):
+    """Unique-width activations -> occurrence-width activations.
+
+    acts_u: (U, D); inv: occurrence-shaped int32 -> (*inv.shape, D) with
+    zero rows for invalid occurrences (inv < 0)."""
+    flat = inv.reshape(-1)
+    valid = flat >= 0
+    safe = jnp.clip(flat, 0, acts_u.shape[0] - 1)
+    out = acts_u[safe] * valid[:, None].astype(acts_u.dtype)
+    return out.reshape(*inv.shape, acts_u.shape[-1])
+
+
+def plan_segment_sum(inv, grads, width: int):
+    """Occurrence-width gradients -> (width, D) fp32 unique-width sums.
+
+    Sums run in occurrence order — the same order ``dedup_put``'s stable
+    sort visits equal ids in — so the per-row sums are bit-identical to the
+    old post-queue dedup. Invalid occurrences (inv < 0) contribute nothing
+    (scattered to a sacrificial row that is sliced off)."""
+    flat = inv.reshape(-1)
+    g = grads.reshape(flat.shape[0], -1).astype(jnp.float32)
+    safe = jnp.where(flat >= 0, flat, width)
+    return jnp.zeros((width + 1, g.shape[1]), jnp.float32).at[safe].add(
+        g)[:width]
+
+
+def pad_axis0(arr, width: int, fill):
+    """Pad (n, ...) to (width, ...) along axis 0 with ``fill`` (n <= width)
+    — fitting a plan-bucket-width put into the fixed-width staleness
+    queue."""
+    n = int(arr.shape[0])
+    if n == width:
+        return arr
+    pads = [(0, width - n)] + [(0, 0)] * (arr.ndim - 1)
+    return jnp.pad(arr, pads, constant_values=fill)
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint migration: full-width queue blobs -> unique width
+# ---------------------------------------------------------------------------
+
+def migrate_queue_blob(q, new_width: int):
+    """Re-encode one staleness-queue blob at ``new_width`` by deduplicating
+    each of its tau pending puts (numpy, host-side — the restore path).
+
+    Accepts the dense form ({ids, grads, ptr, filled}) and the host-LRU
+    form (+ slots; dedup keys on the slot, the id rides along). Summation
+    runs in occurrence order per key, so a migrated queue's pops apply the
+    exact same fp32 updates the full-width queue would have."""
+    ids = np.asarray(q["ids"])
+    grads = np.asarray(q["grads"])
+    slots = np.asarray(q["slots"]) if "slots" in q else None
+    tau, width = ids.shape
+    new_width = int(new_width)
+    key = slots if slots is not None else ids
+    new_ids = np.full((tau, new_width), -1, ids.dtype)
+    new_grads = np.zeros((tau, new_width, grads.shape[-1]), grads.dtype)
+    new_slots = (None if slots is None
+                 else np.full((tau, new_width), -1, slots.dtype))
+    for t in range(tau):
+        k = key[t]
+        valid = k >= 0
+        uniq, first, inv = np.unique(k[valid], return_index=True,
+                                     return_inverse=True)
+        if uniq.size > new_width:
+            raise ValueError(
+                f"queue slot {t} holds {uniq.size} unique puts but the "
+                f"migrated width is only {new_width} — the dedup capacity "
+                "rule should make this impossible; was the blob edited?")
+        acc = np.zeros((uniq.size, grads.shape[-1]), np.float32)
+        np.add.at(acc, inv, grads[t][valid].astype(np.float32))
+        new_grads[t, : uniq.size] = acc.astype(grads.dtype)
+        if slots is None:
+            new_ids[t, : uniq.size] = uniq
+        else:
+            new_slots[t, : uniq.size] = uniq
+            new_ids[t, : uniq.size] = ids[t][valid][first]
+    out = {"ids": new_ids, "grads": new_grads,
+           "ptr": np.asarray(q["ptr"]), "filled": np.asarray(q["filled"])}
+    if new_slots is not None:
+        out["slots"] = new_slots
+    return out

@@ -63,6 +63,13 @@ class EmbeddingSpec:
     # table). 1 = the plain single backend; k > 1 routes ids over k
     # per-shard backends with per-shard stores/locks and concurrent fault-in.
     emb_shards: int = 1
+    # -- worker-side batch dedup (core/dedup.py) ------------------------------
+    # True (default): the trainer's prepare phase computes a per-batch
+    # DedupPlan and the whole lookup/queue/put path runs at unique width
+    # (one row per unique id; staleness queues sized at the dedup cap).
+    # False: the pre-dedup occurrence-width data path (PR-4 behavior),
+    # kept for apples-to-apples benchmarking and old-format checkpoints.
+    batch_dedup: bool = True
 
     def padded_rows(self, n_shards: int) -> int:
         return round_up(self.rows, max(n_shards, 1))
@@ -199,13 +206,19 @@ def _axes_size(axes):
 # Gradient put + optimizer apply (Persia Alg.1 backward)
 # ---------------------------------------------------------------------------
 
-def apply_put(state, spec: EmbeddingSpec, ids, grads):
+def apply_put(state, spec: EmbeddingSpec, ids, grads, assume_unique=False):
     """Apply activation gradients to the table (put + PS-side optimizer).
 
     ids: (T,) int32; grads: (T, dim) — gradients of the *looked-up
     activations* (Persia's F^emb'), exactly what NN workers send back.
+
+    ``assume_unique=True`` declares the put pre-deduplicated (the
+    worker-side batch-dedup path, core/dedup.py: ids are a DedupPlan's
+    unique set, grads already segment-summed) and skips the on-device
+    sort-based dedup — the row-sparse apply is exact on unique ids.
     """
     from repro.core.compression import dedup_put
+    from repro.core.dedup import dedup_cap
     shard_axes, batch_axes = _axes_for(spec.mode)
     n = _n_shards(shard_axes)
     rows = spec.padded_rows(n)
@@ -227,9 +240,10 @@ def apply_put(state, spec: EmbeddingSpec, ids, grads):
     pos_signed = jnp.where(valid, pos.astype(jnp.int32), -1)
 
     def _dedup():
-        cap = round_up(min(int(pos.shape[0]), rows),
-                       min(1024, int(pos.shape[0])))
-        return dedup_put(pos_signed, g, cap)
+        if assume_unique:
+            return pos_signed, g
+        return dedup_put(pos_signed, g,
+                         dedup_cap(int(pos.shape[0]), rows))
 
     if n == 1:
         pos_u, g_u = _dedup()

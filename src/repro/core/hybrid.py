@@ -155,6 +155,26 @@ def _queue_width(q) -> int:
     return w
 
 
+def _migrate_queue_widths(backend, q):
+    """Restore-time staleness-queue width migration (worker-side dedup,
+    core/dedup.py): the queue width is derived from the blob's own width
+    through the backend's capacity rule — idempotent, so blobs already at
+    unique width pass through unchanged, while full-width blobs written by
+    a pre-dedup (or ``batch_dedup=False``) trainer are re-encoded by
+    deduplicating each pending put host-side."""
+    import numpy as np
+    from repro.core import dedup as DD
+    if q is None:
+        return None
+    if "ids" not in q:                   # sharded router: per-shard queues
+        return {k: _migrate_queue_widths(backend, v) for k, v in q.items()}
+    saved = int(np.shape(q["ids"])[1])
+    new_w = int(backend.queue_width(saved))
+    if new_w == saved:
+        return q
+    return DD.migrate_queue_blob(q, new_w)
+
+
 def _emb_grad_norm(agrads: dict) -> jax.Array:
     sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
              for g in agrads.values())
@@ -186,7 +206,8 @@ class PersiaTrainer:
 
     def __init__(self, adapter: ModelAdapter, mode: TrainMode | None = None,
                  opt: Any = None, lr_fn=None,
-                 per_table_staleness: bool = False):
+                 per_table_staleness: bool = False,
+                 batch_dedup: bool | None = None):
         from repro.optim.optimizers import OptConfig, make_optimizer
         self.adapter = adapter
         self.mode = mode or TrainMode.hybrid()
@@ -202,10 +223,19 @@ class PersiaTrainer:
         else:
             self.collection = adapter.collection.with_staleness(
                 self.mode.emb_staleness)
+        # batch_dedup=None honours each spec's own flag (default True:
+        # the worker-side dedup path, core/dedup.py); an explicit bool
+        # overrides every table — False restores the occurrence-width
+        # PR-4 data path (benchmarking / old-format checkpoints)
+        if batch_dedup is not None:
+            self.collection = self.collection.map_specs(
+                lambda _, s: dataclasses.replace(s, batch_dedup=batch_dedup))
         # one storage backend per table (core/backend.py): dense PS,
         # host-LRU out-of-core, or either behind the compressed wire
         self.backends = self.collection.make_backends()
         self._needs_prepare = BK.any_requires_prepare(self.backends)
+        self._needs_plan = any(s.batch_dedup
+                               for _, s in self.collection.items())
         self._fused = None
         self._eval = None
         self._decomposed = None
@@ -262,22 +292,25 @@ class PersiaTrainer:
                           emb_queue=emb_queue, dense_queue=dense_queue,
                           step=jnp.zeros((), jnp.int32))
 
-    # -- the host-side prepare phase (out-of-core fault-in) -------------------
+    # -- the host-side prepare phase (batch dedup + out-of-core fault-in) -----
     #
-    # Host-backed tables (backend 'host_lru') cannot fault inside a jitted
-    # program: the trainer runs each backend's `prepare` once per step OUTSIDE
-    # jit — it loads missing rows host->device, writes evicted rows back, and
-    # translates the batch's logical ids to device ids (cache slots). Dense
-    # tables pass through untouched, so the all-dense fast path stays exactly
-    # the pre-backend program.
+    # Two things happen here, once per step, OUTSIDE jit: (1) worker-side
+    # batch dedup (core/dedup.py) — each table's ids are deduplicated to a
+    # DedupPlan so the whole traceable path runs at unique width; (2) the
+    # out-of-core fault-in for host-backed tables — missing rows load
+    # host->device (consuming the plan's already-unique set, no second
+    # np.unique), evicted rows write back, ids translate to device ids.
+    # Only a trainer whose every table opts out (batch_dedup=False) with no
+    # host-backed tables skips the phase entirely — that all-dense legacy
+    # path is exactly the pre-dedup program.
 
     def _prepare(self, state: TrainState, batch):
-        """Returns (state-with-faulted-caches, dev_ids-or-None)."""
-        if not self._needs_prepare:
-            return state, None
+        """Returns (state-with-faulted-caches, dev_ids-or-None, metrics)."""
+        if not (self._needs_prepare or self._needs_plan):
+            return state, None, {}
         ids = self.adapter.emb_ids(batch)
-        emb, dev_ids = BK.prepare_all(self.backends, state.emb, ids)
-        return state.replace(emb=emb), dev_ids
+        emb, dev_ids, m = BK.prepare_all(self.backends, state.emb, ids)
+        return state.replace(emb=emb), dev_ids, m
 
     # -- fused step (one program, one schedule) -------------------------------
 
@@ -329,12 +362,14 @@ class PersiaTrainer:
                              step=state.step + 1), metrics
 
     def step(self, state: TrainState, batch):
-        """Fused step through a cached jit; donates ``state``. Host-backed
-        tables fault their rows in (host-level) before the jitted program."""
-        state, dev_ids = self._prepare(state, batch)
+        """Fused step through a cached jit; donates ``state``. The host
+        prepare phase (batch dedup + out-of-core fault-in) runs before the
+        jitted program."""
+        state, dev_ids, prep_m = self._prepare(state, batch)
         if self._fused is None:
             self._fused = jax.jit(self.train_step, donate_argnums=(0,))
         state, metrics = self._fused(state, batch, dev_ids)
+        metrics.update(prep_m)
         metrics.update(BK.shard_step_metrics(self.backends))
         return state, metrics
 
@@ -387,7 +422,7 @@ class PersiaTrainer:
         out-of-core fault-in (prepare), the embedding get, the dense step
         and the embedding put are separate dispatches."""
         lookup_fn, dense_step, emb_put = self.decomposed_fns()
-        state, dev_ids = self._prepare(state, batch)
+        state, dev_ids, prep_m = self._prepare(state, batch)
         if dev_ids is None:
             dev_ids = self.adapter.emb_ids(batch)
         acts, get_metrics = lookup_fn(state.emb, dev_ids)
@@ -398,6 +433,7 @@ class PersiaTrainer:
         emb, queues, put_metrics = emb_put(state.emb, state.emb_queue,
                                            dev_ids, agrads)
         metrics = dict(metrics)
+        metrics.update(prep_m)
         metrics.update(get_metrics)
         metrics.update(put_metrics)
         # host-side per-shard gauges (hit rates, faults, load imbalance)
@@ -459,9 +495,9 @@ class PersiaTrainer:
     def _prepare_inplace(self, state: TrainState, batch):
         """prepare() for read paths that return metrics, not state: the
         faulted cache arrays are written back into the caller's TrainState."""
-        if not self._needs_prepare:
+        if not (self._needs_prepare or self._needs_plan):
             return state, None
-        new_state, dev_ids = self._prepare(state, batch)
+        new_state, dev_ids, _ = self._prepare(state, batch)
         state.emb = new_state.emb
         return state, dev_ids
 
@@ -544,6 +580,15 @@ class PersiaTrainer:
                 # tolerated in-flight loss — and the FIFO restarts empty
                 # in the new geometry, replaying its warmup
                 emb_queue[n] = bk.queue_init((_queue_width(emb_queue[n]),))
+        for n in self.collection.names:
+            # old-format (occurrence-width) queue blobs restore into a
+            # batch-dedup trainer by re-encoding each pending put at the
+            # unique width this trainer runs (host-side dedup; the pops
+            # then apply the exact same fp32 updates). Width-stable blobs
+            # pass through untouched — same-geometry restores stay
+            # bit-identical.
+            emb_queue[n] = _migrate_queue_widths(self.backends[n],
+                                                 emb_queue[n])
         dq = dense_tree.get("dense_queue")
         tau_d = self.mode.dense_staleness
         dq_depth = 0 if dq is None else \

@@ -77,6 +77,7 @@ import time
 from typing import Any, Callable, Iterable, Optional
 
 from repro.core import backend as BK
+from repro.core.dedup import plan_dev
 from repro.core.hybrid import PersiaTrainer, TrainState
 
 STAGES = ("loader", "prepare", "lookup", "dense", "put")
@@ -317,7 +318,9 @@ class PipelinedTrainer:
             if bk.n_put_shards() > 1 and \
                     trainer.collection[n].staleness > 0:
                 return tuple(range(bk.n_put_shards()))
-            return bk.put_shards(dev_ids[n])
+            # a DedupPlan's unique dev ids touch exactly the shards the
+            # occurrence stream would (dedup never changes ownership)
+            return bk.put_shards(plan_dev(dev_ids[n]))
 
         def prepare():
             st = self._stats["prepare"]
@@ -339,14 +342,16 @@ class PipelinedTrainer:
                     sleep_for("prepare", idx)
                     ids = adapter.emb_ids(batch)
                     with store_lock:
-                        emb, dev_ids = BK.prepare_all(backends,
-                                                      store["emb"], ids)
+                        emb, dev_ids, prep_m = BK.prepare_all(
+                            backends, store["emb"], ids)
                         store["emb"] = emb
                         # pin this batch's cache slots until its put has
                         # been applied: a later batch's fault-in must not
                         # recycle rows a pending lookup/put still targets
+                        # (a plan's unique dev ids ARE the batch's slot
+                        # set — one pin per distinct slot)
                         for n in dev_ids:
-                            backends[n].pin_slots(dev_ids[n])
+                            backends[n].pin_slots(plan_dev(dev_ids[n]))
                     # decode the touched shards here, in the prepare
                     # stage, where the dev ids are fresh host-built
                     # arrays — not between the lookup stage's window
@@ -355,7 +360,8 @@ class PipelinedTrainer:
                                for n in names}
                     st.busy_s += time.perf_counter() - t0
                     st.items += 1
-                    if not q_put("lookup", (idx, batch, dev_ids, touched)):
+                    if not q_put("lookup", (idx, batch, dev_ids, touched,
+                                            prep_m)):
                         return
                 except Exception as e:   # noqa: BLE001
                     fail("prepare", idx, e)
@@ -370,7 +376,7 @@ class PipelinedTrainer:
                 if item is _DONE:
                     q_put("dense", _DONE)
                     return
-                idx, batch, dev_ids, touched = item
+                idx, batch, dev_ids, touched, prep_m = item
                 try:
                     t0 = time.perf_counter()
                     sleep_for("lookup", idx)
@@ -391,7 +397,7 @@ class PipelinedTrainer:
                     st.busy_s += time.perf_counter() - t0
                     st.items += 1
                     if not q_put("dense", (idx, batch, dev_ids, acts, get_m,
-                                           touched)):
+                                           touched, prep_m)):
                         return
                 except Exception as e:   # noqa: BLE001
                     fail("lookup", idx, e)
@@ -406,7 +412,7 @@ class PipelinedTrainer:
                 if item is _DONE:
                     q_put("put", _DONE)
                     return
-                idx, batch, dev_ids, acts, get_m, touched = item
+                idx, batch, dev_ids, acts, get_m, touched, prep_m = item
                 try:
                     t0 = time.perf_counter()
                     sleep_for("dense", idx)
@@ -419,7 +425,7 @@ class PipelinedTrainer:
                     st.busy_s += time.perf_counter() - t0
                     st.items += 1
                     if not q_put("put", (idx, dev_ids, agrads,
-                                         metrics, get_m, touched)):
+                                         metrics, get_m, touched, prep_m)):
                         return
                 except Exception as e:   # noqa: BLE001
                     fail("dense", idx, e)
@@ -431,7 +437,7 @@ class PipelinedTrainer:
                 item = q_get("put")
                 if item is None or item is _DONE:
                     return
-                idx, dev_ids, agrads, metrics, get_m, touched = item
+                idx, dev_ids, agrads, metrics, get_m, touched, prep_m = item
                 try:
                     t0 = time.perf_counter()
                     sleep_for("put", idx)
@@ -441,7 +447,7 @@ class PipelinedTrainer:
                         store["emb"] = emb
                         store["queues"] = queues
                         for n in dev_ids:
-                            backends[n].unpin_slots(dev_ids[n])
+                            backends[n].unpin_slots(plan_dev(dev_ids[n]))
                     self.applied_order.append(idx)
                     with out_lock:
                         for n in names:
@@ -451,6 +457,7 @@ class PipelinedTrainer:
                             windows[(n, s)].release()
                     inflight.release()
                     merged = dict(metrics)
+                    merged.update(prep_m)
                     merged.update(get_m)
                     merged.update(put_m)
                     merged.update(BK.shard_step_metrics(backends))

@@ -51,6 +51,14 @@ def embedding_bag(table, ids):
     return _bag.embedding_bag(table, ids, interpret=INTERPRET)
 
 
+@jax.jit
+def unique_bag(table, dev, inv):
+    """(V,D) x (U,) unique dev ids x (B,L) inverse -> (B,D): the dedup-plan
+    lookup (unique gather + inverse scatter + bag pool) in one fused pass."""
+    from repro.kernels import unique_bag as _ub
+    return _ub.unique_bag(table, dev, inv, interpret=INTERPRET)
+
+
 @functools.partial(jax.jit, static_argnames=("lr",))
 def embedding_sgd(table, ids, grads, lr: float = 1e-2):
     return _sgd.embedding_sgd(table, ids, grads, lr=lr, interpret=INTERPRET)

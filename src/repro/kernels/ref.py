@@ -25,6 +25,18 @@ def embedding_bag_ref(table, ids):
     return jnp.sum(rows * w, axis=1)
 
 
+def unique_bag_ref(table, dev, inv):
+    """table: (V,D); dev: (U,) unique row ids (-1 pad); inv: (B,L)
+    occurrence -> unique position (-1 pad) -> (B,D) sum pool of
+    table[dev[inv]] — the dedup-plan lookup (gather + inverse scatter +
+    bag pool) as one jnp expression."""
+    safe_u = jnp.where(inv >= 0, inv, 0)
+    rows_ids = dev[safe_u]                                # (B,L)
+    valid = (inv >= 0) & (rows_ids >= 0)
+    rows = table[jnp.where(valid, rows_ids, 0)]           # (B,L,D)
+    return jnp.sum(rows * valid[..., None].astype(table.dtype), axis=1)
+
+
 def embedding_sgd_ref(table, ids, grads, *, lr):
     """Row-wise SGD scatter-apply; ids -1 are no-ops. Duplicate ids
     accumulate (use dedup_put first for parity with the kernel)."""

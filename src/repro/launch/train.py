@@ -125,7 +125,9 @@ def train_ctr(args):
         collection=_ctr_collection_for(cfg, ds, args))
     mode = mode_from_name(args.mode, args.tau)
     trainer = PersiaTrainer(adapter, mode,
-                            OptConfig(kind="adam", lr=args.lr))
+                            OptConfig(kind="adam", lr=args.lr),
+                            batch_dedup=False if args.no_batch_dedup
+                            else None)
     it = ds.sampler(args.batch)
     eval_it = ds.sampler(args.batch, seed=999)
     batch = {k: jnp.asarray(v) for k, v in next(it).items()}
@@ -228,7 +230,9 @@ def train_lm(args):
         adapter = dataclasses.replace(adapter, collection=coll)
     mode = mode_from_name(args.mode, args.tau)
     trainer = PersiaTrainer(adapter, mode,
-                            OptConfig(kind="adam", lr=args.lr))
+                            OptConfig(kind="adam", lr=args.lr),
+                            batch_dedup=False if args.no_batch_dedup
+                            else None)
     it = lm_batches(cfg.vocab_size, args.batch, args.seq_len)
     batch = {k: jnp.asarray(v) for k, v in next(it).items()}
     state = trainer.init(jax.random.PRNGKey(args.seed), batch)
@@ -306,6 +310,12 @@ def main():
     ap.add_argument("--cache-rows", type=int, default=0,
                     help="host_lru device-cache slots per table "
                          "(0 = rows_per_field/8, at least 1024)")
+    ap.add_argument("--no-batch-dedup", action="store_true",
+                    help="disable worker-side batch dedup (core/dedup.py): "
+                         "run the pre-dedup occurrence-width lookup/queue/"
+                         "put path. Default is ON — one row per unique id "
+                         "per batch, staleness queues sized at the dedup "
+                         "cap, dedup/<table>/* step metrics")
     ap.add_argument("--emb-shards", default="1",
                     help="embedding-PS shards per table: an int for every "
                          "table, or 'table=k,table=k' pairs. k > 1 routes "

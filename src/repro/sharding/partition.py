@@ -94,6 +94,12 @@ def emb_state_specs(emb_state, spec: EmbeddingSpec):
 
 
 def queue_specs(queue):
+    """Staleness-queue specs: (tau, W[, dim]) arrays shard their width over
+    the batch axes. W is the *unique-width* dedup cap under worker-side
+    batch dedup (core/dedup.py) — dedup_cap rounds W up to a multiple of
+    min(1024, n_occurrences), so the narrowed queues keep dividing over up
+    to 1024 batch shards (and ``_guard`` drops the axis if a custom width
+    ever doesn't)."""
     if queue is None:
         return None
     if "ids" not in queue:               # sharded router: per-shard queues

@@ -116,6 +116,71 @@ else:
 
 
 # ---------------------------------------------------------------------------
+# unique_bag (worker-side batch dedup: fused gather + inverse + sum pool)
+# ---------------------------------------------------------------------------
+
+def _unique_bag_inputs(V, D, B, L, U, seed):
+    rng = np.random.default_rng(seed)
+    table = jnp.asarray(rng.standard_normal((V, D)).astype(np.float32))
+    n_live = max(U // 2, 1)                      # half the plan is padding
+    dev = np.full(U, -1, np.int32)
+    dev[:n_live] = rng.permutation(V)[:n_live]
+    inv = rng.integers(-1, U, (B, L))            # hits padding slots too
+    return table, jnp.asarray(dev, jnp.int32), jnp.asarray(inv, jnp.int32)
+
+
+@pytest.mark.parametrize("V,D,B,L,U", [(64, 128, 4, 6, 16),
+                                       (128, 256, 8, 3, 32),
+                                       (32, 128, 1, 1, 4),
+                                       (256, 128, 16, 12, 64)])
+def test_unique_bag_sweep(V, D, B, L, U):
+    table, dev, inv = _unique_bag_inputs(V, D, B, L, U, V + B + L)
+    got = ops.unique_bag(table, dev, inv)
+    want = ref.unique_bag_ref(table, dev, inv)
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+def test_unique_bag_all_duplicates():
+    """Every occurrence of the bag resolves to the SAME unique position —
+    the hot-key regime batch dedup exists for: the pool must be L * row."""
+    table = jnp.asarray(np.arange(8 * 128, dtype=np.float32).reshape(8, 128))
+    dev = jnp.asarray([5, -1, -1, -1], jnp.int32)
+    inv = jnp.zeros((2, 7), jnp.int32)           # all 14 occurrences -> u=0
+    out = ops.unique_bag(table, dev, inv)
+    np.testing.assert_allclose(out, np.tile(np.asarray(table[5]) * 7,
+                                            (2, 1)), atol=1e-4)
+
+
+def test_unique_bag_all_padding():
+    """inv=-1 (multi-hot padding) and dev=-1 (plan padding) both pool to
+    exact zeros."""
+    table = jnp.ones((16, 128))
+    dev = jnp.full((4,), -1, jnp.int32)
+    assert jnp.all(ops.unique_bag(table, dev,
+                                  jnp.full((2, 3), -1, jnp.int32)) == 0)
+    # inv points at live positions of an all-padding plan
+    assert jnp.all(ops.unique_bag(table, dev,
+                                  jnp.zeros((2, 3), jnp.int32)) == 0)
+
+
+def test_unique_bag_matches_unfused_plan_lookup():
+    """The kernel computes exactly pool(scatter(gather(table, dev), inv)) —
+    the three-step jnp lowering of the dedup-plan lookup."""
+    from repro.core import dedup as D_
+    rng = np.random.default_rng(3)
+    V, D, B, L = 64, 128, 8, 5
+    table = jnp.asarray(rng.standard_normal((V, D)).astype(np.float32))
+    ids = rng.integers(-1, V, (B, L))
+    u_pad, inv, _, _ = D_.make_plan(ids, V, D_.dedup_cap(B * L, V), floor=4)
+    dev = jnp.asarray(u_pad, jnp.int32)
+    inv = jnp.asarray(inv, jnp.int32)
+    acts_u = table[jnp.clip(dev, 0)] * (dev >= 0)[:, None]
+    want = jnp.sum(D_.plan_scatter(acts_u, inv), axis=1)
+    got = ops.unique_bag(table, dev, inv)
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
 # embedding_sgd
 # ---------------------------------------------------------------------------
 
