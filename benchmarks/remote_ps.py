@@ -1,0 +1,150 @@
+"""Multi-process PS honesty benchmark: what the RPC hop actually costs.
+
+Runs the same small CTR model three ways —
+
+* ``inprocess``      — backends in the trainer process (the upper bound);
+* ``multiproc_raw``  — 2 PS subprocesses, raw fp32 wire payloads;
+* ``multiproc_lossy``— 2 PS subprocesses, blockscale-fp16 wire payloads
+
+— and reports steps/s plus total bytes-on-wire (every client's
+``bytes_sent + bytes_recv``, so framing, ids and acks are all counted,
+not just tensor payloads).
+
+``--check`` pins the wire codec's honesty bar: compression must recover
+>= 2x the *RPC envelope* — the bytes the RPC hop adds beyond the tensor
+payload (ids, message keys, framing, acks). The envelope is solved from
+the two measured totals under the codec's structural model (fp16 +
+per-block fp32 scales halve the compressible payload):
+
+    W_raw = E + P,  W_lossy = E + P/2   =>   E = 2*W_lossy - W_raw
+
+and the bar is ``W_raw - W_lossy >= 2 * E`` — i.e. turning compression
+on saves at least twice what the RPC envelope costs.
+
+    PYTHONPATH=src python benchmarks/remote_ps.py --steps 20 --check
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.cluster import small_ctr_trainer, spawn_ps
+from repro.net.elastic import ElasticPSCluster
+
+N_PS = 2
+DIM = 32          # payload-dominated traffic: 32 fp32 per row vs 4B of id
+WARMUP = 2
+
+
+def _model(seed: int = 0):
+    return small_ctr_trainer(mode="sync", backend="dense", dim=DIM,
+                             seed=seed)
+
+
+def _batches(ds, n: int, batch: int = 16, seed: int = 0):
+    it = ds.sampler(batch, seed=seed)
+    return [{k: jnp.asarray(v) for k, v in next(it).items()}
+            for _ in range(n)]
+
+
+def _wire_bytes(trainer) -> int:
+    total = 0
+    for bk in trainer.backends.values():
+        for sub in bk.shard_backends:
+            total += sub._client.bytes_sent + sub._client.bytes_recv
+    return total
+
+
+def _inprocess(steps: int) -> float:
+    trainer, ds = _model()
+    bs = _batches(ds, steps + WARMUP)
+    state = trainer.init(jax.random.PRNGKey(0), bs[0])
+    for b in bs[:WARMUP]:
+        state, _ = trainer.decomposed_step(state, b)
+    jax.block_until_ready(state.dense)
+    t0 = time.perf_counter()
+    for b in bs[WARMUP:]:
+        state, _ = trainer.decomposed_step(state, b)
+    jax.block_until_ready(state.dense)
+    return steps / (time.perf_counter() - t0)
+
+
+def _multiproc(steps: int, lossy: bool):
+    """-> (steps/s, wire bytes over the timed steps)."""
+    trainer, ds = _model()
+    workdir = tempfile.mkdtemp(prefix="remote_ps_bench_")
+    members, cluster = [], None
+    try:
+        members = [spawn_ps(workdir, i) for i in range(N_PS)]
+        cluster = ElasticPSCluster(trainer, members)
+        cluster.connect(lossy=lossy)
+        bs = _batches(ds, steps + WARMUP)
+        state = trainer.init(jax.random.PRNGKey(0), bs[0])
+        for b in bs[:WARMUP]:
+            state, _ = cluster.step(state, b)
+        b0 = _wire_bytes(trainer)
+        t0 = time.perf_counter()
+        for b in bs[WARMUP:]:
+            state, _ = cluster.step(state, b)
+        dt = time.perf_counter() - t0
+        return steps / dt, _wire_bytes(trainer) - b0
+    finally:
+        if cluster is not None:
+            cluster.close()
+        for m in members:
+            if m.proc is not None and m.proc.poll() is None:
+                m.proc.kill()
+                m.proc.wait()
+
+
+def run(steps: int = 20, results: dict | None = None):
+    """benchmarks/run.py entry — CSV rows (name, us, derived)."""
+    sps_in = _inprocess(steps)
+    sps_raw, w_raw = _multiproc(steps, lossy=False)
+    sps_lossy, w_lossy = _multiproc(steps, lossy=True)
+    saved = w_raw - w_lossy
+    envelope = max(2 * w_lossy - w_raw, 1)
+    if results is not None:
+        results["saved"], results["envelope"] = saved, envelope
+    return [
+        ("remote_ps/inprocess", 1e6 / sps_in, f"{sps_in:.1f}steps/s"),
+        ("remote_ps/multiproc_raw", 1e6 / sps_raw,
+         f"{sps_raw:.1f}steps/s wire_bytes={w_raw} "
+         f"({w_raw // steps}B/step) slowdown="
+         f"{sps_in / sps_raw:.1f}x vs inprocess"),
+        ("remote_ps/multiproc_lossy", 1e6 / sps_lossy,
+         f"{sps_lossy:.1f}steps/s wire_bytes={w_lossy} "
+         f"({w_lossy // steps}B/step) saved={saved} "
+         f"envelope~{envelope} recovery={saved / envelope:.1f}x"),
+    ]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--check", action="store_true",
+                    help="exit nonzero unless compression saves >= 2x the "
+                         "RPC envelope bytes")
+    args = ap.parse_args()
+    results: dict = {}
+    rows = run(args.steps, results)
+    print("name,us_per_call,derived")
+    for n, us, derived in rows:
+        print(f"{n},{us:.1f},{derived}")
+    if args.check:
+        saved, envelope = results["saved"], results["envelope"]
+        if saved < 2 * envelope:
+            print(f"FAIL: compression saved {saved}B, < 2x the RPC "
+                  f"envelope (~{envelope}B)", file=sys.stderr)
+            raise SystemExit(1)
+        print(f"OK: compression saved {saved}B, "
+              f"{saved / envelope:.1f}x the RPC envelope (~{envelope}B)")
+
+
+if __name__ == "__main__":
+    main()

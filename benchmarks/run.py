@@ -11,6 +11,7 @@ the dry-run artifacts when present).
   pipeline      Fig 4-5        — serial vs async-pipelined execution
   shard_scaling §4.1           — prepare fault-in latency vs PS shards
   dedup         §4.2.3         — worker-side batch dedup vs occurrence path
+  remote_ps     §4.1           — in-process vs multi-process PS, wire bytes
 """
 from __future__ import annotations
 
@@ -21,7 +22,8 @@ import sys
 import traceback
 
 SUITES = ["compression", "scalability", "capacity", "convergence",
-          "staleness", "end_to_end", "pipeline", "shard_scaling", "dedup"]
+          "staleness", "end_to_end", "pipeline", "shard_scaling", "dedup",
+          "remote_ps"]
 
 
 def main() -> None:
@@ -46,6 +48,8 @@ def main() -> None:
             if args.fast and name == "shard_scaling":
                 kwargs["steps"] = 5
             if args.fast and name == "dedup":
+                kwargs["steps"] = 5
+            if args.fast and name == "remote_ps":
                 kwargs["steps"] = 5
             if args.fast and name == "end_to_end":
                 kwargs["target"] = 0.60

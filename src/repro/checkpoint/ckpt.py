@@ -142,10 +142,29 @@ def checkpoint_shard_layout(directory: str, step: int | None = None
             "blob (legacy save_checkpoint format?)")
     out = {}
     for name, blob in emb["emb"].items():
-        if isinstance(blob, dict) and "shard_meta" in blob:
-            out[name] = int(np.asarray(blob["shard_meta"]).reshape(-1)[0])
-        else:
-            out[name] = 1
+        if not isinstance(blob, dict) or \
+                ("shard_meta" not in blob and "shards" not in blob):
+            out[name] = 1                       # plain (unsharded) table blob
+            continue
+        if "shard_meta" not in blob or "shards" not in blob:
+            missing = "shard_meta" if "shard_meta" not in blob else "shards"
+            raise ValueError(
+                f"table {name!r}: sharded checkpoint blob is missing its "
+                f"{missing!r} entry — corrupt or truncated save")
+        meta = np.asarray(blob["shard_meta"]).reshape(-1)
+        if meta.size != 3 or not np.issubdtype(meta.dtype, np.integer) \
+                or int(meta[0]) < 1:
+            raise ValueError(
+                f"table {name!r}: corrupt shard_meta {meta!r} (expected "
+                "3 ints [n_shards, rows, dim] with n_shards >= 1)")
+        k = int(meta[0])
+        have = sorted(blob["shards"])
+        want = [f"s{s}" for s in range(k)]
+        if have != sorted(want):
+            raise ValueError(
+                f"table {name!r}: shard_meta declares {k} shards but the "
+                f"blob holds {have} (expected {want})")
+        out[name] = k
     return out
 
 

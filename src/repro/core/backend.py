@@ -976,6 +976,10 @@ class ShardedBackend(EmbeddingBackend):
     """
 
     requires_prepare = True
+    # floor on the shard count: the in-process router insists on >= 2 (a
+    # single shard IS the plain backend); subclasses whose shards live in
+    # other processes (repro.net) allow 1 — one PS process is still remote
+    min_shards = 2
 
     def __init__(self, spec: EmbeddingSpec, n_shards: int | None = None):
         base, _ = parse_backend_name(spec.backend)
@@ -990,11 +994,18 @@ class ShardedBackend(EmbeddingBackend):
         self._configure(int(n_shards if n_shards is not None
                             else spec.emb_shards))
 
+    def _make_sub(self, s: int, sub_spec: EmbeddingSpec) -> EmbeddingBackend:
+        """Build shard ``s``'s backend — the hook the remote router
+        (repro.net.remote.RemoteShardedBackend) overrides to place each
+        shard behind an RPC endpoint instead of in-process."""
+        return (HostLRUBackend(sub_spec) if self._base == "host_lru"
+                else DenseBackend(sub_spec))
+
     def _configure(self, k: int):
-        if k < 2:
+        if k < self.min_shards:
             raise ValueError(
-                f"ShardedBackend needs >= 2 shards (got {k}); use the plain "
-                "backend for a single shard")
+                f"{type(self).__name__} needs >= {self.min_shards} shards "
+                f"(got {k}); use the plain backend for a single shard")
         spec = self.spec
         self.n_shards = k
         self._routing = _ShardRouting(spec.rows, k)
@@ -1004,11 +1015,8 @@ class ShardedBackend(EmbeddingBackend):
             # cache_rows stays the table's TOTAL device-cache budget,
             # split evenly across shards
             kw["cache_rows"] = -(-spec.cache_rows // k)
-        subs = []
-        for _ in range(k):
-            sub_spec = dataclasses.replace(spec, **kw)
-            subs.append(HostLRUBackend(sub_spec) if self._base == "host_lru"
-                        else DenseBackend(sub_spec))
+        subs = [self._make_sub(s, dataclasses.replace(spec, **kw))
+                for s in range(k)]
         self.shard_backends = subs
         self.stride = (subs[0].cache_rows if self._base == "host_lru"
                        else sub_rows)

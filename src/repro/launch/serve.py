@@ -19,16 +19,20 @@ import numpy as np
 from repro.configs import get_config
 from repro.core.backend import create_backend
 from repro.core.embedding_ps import EmbeddingSpec
+from repro.launch.shards import parse_emb_shards, shards_for_table
 from repro.models import transformer as T
+
+VOCAB_TABLE = "vocab"      # serve's sole table name in --emb-shards pairs
 
 
 def serve(cfg, batch=4, prompt_len=32, gen=16, seed=0, temperature=0.0,
           emb_backend="dense", cache_rows=0, emb_shards=1):
     key = jax.random.PRNGKey(seed)
     dense = T.init_dense(cfg, key)
+    shards = shards_for_table(parse_emb_shards(emb_shards), VOCAB_TABLE)
     spec = EmbeddingSpec(rows=cfg.vocab_size, dim=cfg.d_model,
                          backend=emb_backend,
-                         emb_shards=max(int(emb_shards), 1))
+                         emb_shards=max(int(shards), 1))
     if emb_backend.startswith("host_lru"):
         spec = dataclasses.replace(
             spec, cache_rows=cache_rows or max(1024, cfg.vocab_size // 8))
@@ -107,10 +111,12 @@ def main():
                          "embedding tier out-of-core from host RAM")
     ap.add_argument("--cache-rows", type=int, default=0,
                     help="host_lru device-cache slots (0 = vocab/8)")
-    ap.add_argument("--emb-shards", type=int, default=1,
+    ap.add_argument("--emb-shards", default="1",
                     help="embedding-PS shards for the vocab table (> 1 "
                          "routes through the sharded router: hash id->shard "
-                         "routing + concurrent per-shard fault-in)")
+                         "routing + concurrent per-shard fault-in); same "
+                         "grammar as train.py — a bare int or 'table=k' "
+                         "pairs (the table here is named 'vocab')")
     args = ap.parse_args()
     cfg = get_config(args.arch, reduced=args.reduced)
     res = serve(cfg, args.batch, args.prompt_len, args.gen,

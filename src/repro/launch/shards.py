@@ -1,0 +1,32 @@
+"""Shared ``--emb-shards`` CLI parsing for the launchers (train / serve /
+cluster): one grammar — a bare int or comma-separated ``table=k`` pairs —
+so every entrypoint spells per-table PS shard counts the same way."""
+from __future__ import annotations
+
+
+def parse_emb_shards(s: str | int | None):
+    """``--emb-shards`` value -> int or {table: k} mapping. Accepts a bare
+    int ("4") or comma-separated ``table=k`` pairs ("field_00=4,field_02=2");
+    table names are validated downstream against the collection."""
+    if isinstance(s, int):
+        return s
+    s = (s or "1").strip()
+    if "=" not in s:
+        return int(s)
+    out = {}
+    for part in s.split(","):
+        name, _, k = part.partition("=")
+        if not name.strip() or not k.strip():
+            raise ValueError(
+                f"bad --emb-shards entry {part!r}: expected 'table=k'")
+        out[name.strip()] = int(k)
+    return out
+
+
+def shards_for_table(shards, name: str, default: int = 1) -> int:
+    """Resolve one table's shard count out of a parsed ``--emb-shards``
+    value (single-table launchers like serve.py name their sole table and
+    pick its entry; unknown names fall back to ``default``)."""
+    if isinstance(shards, int):
+        return shards
+    return int(shards.get(name, default))

@@ -84,21 +84,9 @@ def _pipelined_span(engine, state, it, n):
     return state, (ms[-1] if ms else {})
 
 
-def parse_emb_shards(s: str):
-    """``--emb-shards`` value -> int or {table: k} mapping. Accepts a bare
-    int ("4") or comma-separated ``table=k`` pairs ("field_00=4,field_02=2");
-    table names are validated downstream against the collection."""
-    s = (s or "1").strip()
-    if "=" not in s:
-        return int(s)
-    out = {}
-    for part in s.split(","):
-        name, _, k = part.partition("=")
-        if not name.strip() or not k.strip():
-            raise ValueError(
-                f"bad --emb-shards entry {part!r}: expected 'table=k'")
-        out[name.strip()] = int(k)
-    return out
+# the --emb-shards grammar is shared across launchers (train/serve/cluster);
+# re-exported here because this was its original home
+from repro.launch.shards import parse_emb_shards  # noqa: E402,F401
 
 
 def _ctr_collection_for(cfg, ds, args):

@@ -1,0 +1,36 @@
+"""Multi-process embedding parameter servers (paper §3-§4).
+
+Persia runs NN workers, embedding workers and the embedding PS as separate
+services; this package is that tier on one box, with real processes:
+
+* :mod:`repro.net.wire`   — length-prefixed framing + an array-tree codec
+  (the checkpoint blob layout on a socket) + the numpy blockscale wire
+  format matching the jnp reference bit-for-bit.
+* :mod:`repro.net.rpc`    — blocking request/response RPC with per-request
+  timeouts, bounded retry/backoff, reconnect, and at-most-once replay
+  suppression for mutating ops.
+* :mod:`repro.net.ps_server` — the PS process: any ``EmbeddingBackend``
+  (dense / host_lru) hosted behind the RPC surface, with a put spool so a
+  killed shard loses only its in-flight puts.
+* :mod:`repro.net.remote` — the client side: ``RemoteBackend`` implements
+  the ``EmbeddingBackend`` protocol over RPC (lookups via
+  ``jax.pure_callback``, puts via ordered ``jax.experimental.io_callback``),
+  and ``RemoteShardedBackend`` routes a table over k PS processes through
+  the same machinery as the in-process ``ShardedBackend``.
+* :mod:`repro.net.elastic` — heartbeats, failure detection and live
+  elastic membership (a dead shard's logical rows reshard onto survivors
+  mid-run, reusing the N->M checkpoint reshard path).
+"""
+
+from repro.net.rpc import PSUnavailableError, RpcClient, RpcError, RpcServer
+from repro.net.remote import (RemoteBackend, RemoteShardedBackend,
+                              connect_remote_backends, reset_trainer_jit)
+from repro.net.elastic import (ClusterDeadError, ElasticPSCluster,
+                               HeartbeatMonitor, PSMember, is_ps_failure)
+
+__all__ = [
+    "PSUnavailableError", "RpcClient", "RpcError", "RpcServer",
+    "RemoteBackend", "RemoteShardedBackend", "connect_remote_backends",
+    "reset_trainer_jit", "ClusterDeadError", "ElasticPSCluster",
+    "HeartbeatMonitor", "PSMember", "is_ps_failure",
+]

@@ -1,0 +1,369 @@
+"""Elastic PS membership: heartbeats, failure detection, and live
+recovery by resharding onto the surviving members (paper §5 — the PS tier
+must tolerate shard loss without restarting training).
+
+Failure model (exactly the paper's): a killed shard loses its
+bounded-staleness queue and any puts the trainer had not yet had ACKed —
+*applied* puts were spooled to disk before their ack (see
+``repro.net.ps_server``), so recovery re-seeds the dead shard's rows from
+its spool onto the survivors and only tolerated in-flight work is gone.
+A dead member with no spool loses its rows to zero-reinit (counted and
+reported, never silent).
+
+The recovery loop (:meth:`ElasticPSCluster.step`) has to respect two JAX
+realities:
+
+* the failed dispatch may have *donated* the input state's buffers, so the
+  dense/optimizer halves are backed up to host numpy before every step and
+  restored from there;
+* the trainer's cached jitted programs close over the old shard set, so a
+  membership change invalidates them (``reset_trainer_jit``) and the next
+  step retraces against the new geometry.
+
+A PS failure surfaces from inside a jitted program as a runtime callback
+error *wrapping* the transport's :class:`PSUnavailableError` (often only
+as text inside an ``XlaRuntimeError``), so :func:`is_ps_failure` matches
+the exception chain by name as well as by type.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.net import ps_server, remote
+from repro.net.remote import RemoteShardedBackend
+from repro.net.rpc import PSUnavailableError, RpcClient
+
+
+class ClusterDeadError(RuntimeError):
+    """No recovery path left: every PS member is gone, or the retry/
+    recovery budget is exhausted."""
+
+
+def is_ps_failure(exc) -> bool:
+    """True when ``exc`` (or anything in its cause/context chain) is — or
+    wraps — a :class:`PSUnavailableError`. Callback errors cross the XLA
+    runtime boundary as flattened text, so the match is by name too."""
+    stack, seen = [exc], set()
+    while stack:
+        e = stack.pop()
+        if e is None or id(e) in seen:
+            continue
+        seen.add(id(e))
+        if isinstance(e, PSUnavailableError):
+            return True
+        if "PSUnavailableError" in f"{type(e).__name__}: {e}":
+            return True
+        stack.extend((e.__cause__, e.__context__,
+                      getattr(e, "original", None)))
+    return False
+
+
+@dataclasses.dataclass
+class PSMember:
+    """One PS process in the membership: its endpoint, where it spools
+    applied state (for post-mortem recovery), and — when the launcher owns
+    the process — its handle."""
+    host: str
+    port: int
+    spool_dir: str | None = None
+    proc: object = None
+
+    @property
+    def endpoint(self) -> tuple[str, int]:
+        return (self.host, int(self.port))
+
+
+def _as_member(m) -> PSMember:
+    if isinstance(m, PSMember):
+        return m
+    return PSMember(*m)
+
+
+class HeartbeatMonitor:
+    """Background liveness prober: pings every member each ``interval``
+    seconds (fresh connection, zero retries — a heartbeat must not mask
+    death behind the transport's own retry budget) and declares a member
+    dead after ``miss_threshold`` consecutive misses."""
+
+    def __init__(self, endpoints, interval: float = 0.5,
+                 miss_threshold: int = 2, ping_timeout: float = 0.5):
+        self.interval = float(interval)
+        self.miss_threshold = int(miss_threshold)
+        self.ping_timeout = float(ping_timeout)
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+        self.events: list[dict] = []
+        self.reset(endpoints)
+
+    def reset(self, endpoints):
+        """Adopt a new membership (post-reshard); history stays in
+        ``events``, miss counters and the dead set start over."""
+        with self._lock:
+            self._endpoints = [tuple(e) for e in endpoints]
+            self._misses = {ep: 0 for ep in self._endpoints}
+            self.dead: set = set()
+
+    def start(self) -> "HeartbeatMonitor":
+        self._thread = threading.Thread(target=self._loop,
+                                        name="ps-heartbeat", daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self):
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=2 * self.interval + 2.0)
+
+    def _loop(self):
+        while not self._stop.wait(self.interval):
+            self.probe_once()
+
+    def _ping(self, ep) -> bool:
+        c = RpcClient(ep[0], ep[1], timeout=self.ping_timeout, retries=0)
+        try:
+            return c.ping(timeout=self.ping_timeout)
+        finally:
+            c.close()
+
+    def probe_once(self) -> set:
+        """One probe round; returns the (possibly grown) dead set."""
+        with self._lock:
+            eps = list(self._endpoints)
+        for ep in eps:
+            ok = self._ping(ep)
+            with self._lock:
+                if ep not in self._misses:
+                    continue                      # reset() raced the probe
+                if ok:
+                    self._misses[ep] = 0
+                elif ep not in self.dead:
+                    self._misses[ep] += 1
+                    if self._misses[ep] >= self.miss_threshold:
+                        self.dead.add(ep)
+                        self.events.append({"kind": "dead", "endpoint": ep,
+                                            "misses": self._misses[ep]})
+        with self._lock:
+            return set(self.dead)
+
+
+class ElasticPSCluster:
+    """Trainer-side membership driver: connect tables to the members,
+    detect shard death (heartbeats and/or failed steps), reshard the
+    survivors live, and keep stepping.
+
+    ``step`` is the resilient entrypoint: it backs the dense half of the
+    state up to host memory, runs one trainer step, and on a PS failure
+    probes the membership, reshards every table onto the survivors
+    (spool blobs standing in for the dead), rebuilds the
+    :class:`~repro.core.hybrid.TrainState` and retries — at most
+    ``max_recoveries`` times before :class:`ClusterDeadError`."""
+
+    def __init__(self, trainer, members, max_recoveries: int = 2,
+                 ping_timeout: float = 1.0):
+        self.trainer = trainer
+        self.members = [_as_member(m) for m in members]
+        if not self.members:
+            raise ValueError("ElasticPSCluster needs >= 1 member")
+        self.max_recoveries = int(max_recoveries)
+        self.ping_timeout = float(ping_timeout)
+        self.events: list[dict] = []
+        self.monitor: HeartbeatMonitor | None = None
+        self._last_backup = None
+
+    # -- membership ----------------------------------------------------------
+
+    def endpoints(self) -> list[tuple[str, int]]:
+        return [m.endpoint for m in self.members]
+
+    def connect(self, lossy: bool | None = None, **rpc_opts) -> dict:
+        remote.connect_remote_backends(self.trainer, self.endpoints(),
+                                       lossy=lossy, **rpc_opts)
+        for name, bk in self.trainer.backends.items():
+            if not isinstance(bk, RemoteShardedBackend):
+                raise TypeError(
+                    f"table {name!r}: elastic membership needs sharded "
+                    "remote tables — run >= 2 PS members")
+        return self.trainer.backends
+
+    def start_heartbeats(self, interval: float = 0.5,
+                         miss_threshold: int = 2) -> HeartbeatMonitor:
+        self.monitor = HeartbeatMonitor(
+            self.endpoints(), interval=interval,
+            miss_threshold=miss_threshold,
+            ping_timeout=self.ping_timeout).start()
+        return self.monitor
+
+    def close(self):
+        if self.monitor is not None:
+            self.monitor.stop()
+        for bk in self.trainer.backends.values():
+            if hasattr(bk, "close"):
+                bk.close()
+
+    def probe_dead(self) -> list[int]:
+        """Synchronous probe of every member; returns dead member indices
+        (== shard indices: tables shard in member order)."""
+        dead = []
+        for i, m in enumerate(self.members):
+            c = RpcClient(m.host, m.port, timeout=self.ping_timeout,
+                          retries=0)
+            try:
+                if not c.ping(timeout=self.ping_timeout):
+                    dead.append(i)
+            finally:
+                c.close()
+        return dead
+
+    # -- state plumbing ------------------------------------------------------
+
+    def _backup(self, state):
+        """Host copy of the non-PS half of the state — the failed dispatch
+        may have donated the originals.
+
+        A put dispatched by the *previous* step can fail asynchronously
+        after that step already returned (the paper's tolerated in-flight
+        loss); the XLA error then poisons the returned state's buffers,
+        including leaves no put writes. Poisoned leaves fall back to the
+        last good host copy leaf-wise: the dense halves were updated by
+        their own (successful) dispatch and usually re-read fine, and the
+        step counter — defined alongside the failed put — advances by
+        exactly one over the copy captured before that step ran."""
+        src = (state.dense, state.opt, state.dense_queue, state.step)
+        try:
+            out = jax.tree.map(lambda x: np.array(x, copy=True), src)
+        except Exception as e:                         # noqa: BLE001
+            if not is_ps_failure(e) or self._last_backup is None:
+                raise
+            fb_dense, fb_opt, fb_dq, fb_step = self._last_backup
+
+            def leaf(x, fb):
+                try:
+                    return np.array(x, copy=True)
+                except Exception as le:                # noqa: BLE001
+                    if not is_ps_failure(le):
+                        raise
+                    return np.array(fb, copy=True)
+
+            halves = jax.tree.map(
+                leaf, (state.dense, state.opt, state.dense_queue),
+                (fb_dense, fb_opt, fb_dq))
+            try:
+                step = np.array(state.step, copy=True)
+            except Exception as le:                    # noqa: BLE001
+                if not is_ps_failure(le):
+                    raise
+                fb_step = np.asarray(fb_step)
+                step = (fb_step + 1).astype(fb_step.dtype)
+            out = (*halves, step)
+        self._last_backup = out
+        return out
+
+    def _restate(self, backup, emb, emb_queue):
+        from repro.core.hybrid import TrainState
+        dense, opt, dq, step = jax.tree.map(jnp.asarray, backup)
+        return TrainState(dense=dense, opt=opt, emb=emb,
+                          emb_queue=emb_queue, dense_queue=dq, step=step)
+
+    def _fresh_emb(self):
+        """Fresh version scalars + reset queues for the *current* shard
+        set — the transient-failure rebuild (PS state itself is intact,
+        only the client-side pytree was lost to donation)."""
+        emb, eq = {}, {}
+        for name, bk in self.trainer.backends.items():
+            emb[name] = {f"s{s}": sub._fresh_state()
+                         for s, sub in enumerate(bk.shard_backends)}
+            eq[name] = (bk._queue_init_width(bk._queue_width_cfg)
+                        if bk.spec.staleness > 0 else None)
+        return emb, eq
+
+    # -- recovery ------------------------------------------------------------
+
+    def recover(self, backup, dead: list[int]):
+        """Reshard every table onto the members surviving ``dead`` (their
+        spools standing in for the dead shards' rows) and rebuild the
+        train state. Pending PS queues restart empty — the paper's
+        tolerated in-flight loss."""
+        dead = sorted(set(dead))
+        survivors = [m for i, m in enumerate(self.members) if i not in dead]
+        if not survivors:
+            raise ClusterDeadError(
+                f"all {len(self.members)} PS members are dead")
+        emb, eq, lost = {}, {}, {}
+        for name, bk in self.trainer.backends.items():
+            blobs = {}
+            for i in dead:
+                sd = self.members[i].spool_dir
+                if sd is not None:
+                    try:
+                        blobs[i] = ps_server.read_spool(sd, name)
+                    except (OSError, ValueError, KeyError):
+                        blobs[i] = None             # corrupt spool == no spool
+            emb[name], eq[name] = bk.reshard_live(
+                [m.endpoint for m in survivors], blobs)
+            lost[name] = int(bk.last_reshard_lost_rows)
+        self.members = survivors
+        if self.monitor is not None:
+            self.monitor.reset(self.endpoints())
+        remote.reset_trainer_jit(self.trainer)
+        self.events.append({"kind": "reshard", "dead": dead,
+                            "k": len(survivors), "lost_rows": lost})
+        return self._restate(backup, emb, eq)
+
+    def join(self, member, state):
+        """Grow the membership: reshard every table onto members + the
+        new one (live N -> N+1) and return the rebuilt state."""
+        m = _as_member(member)
+        backup = self._backup(state)
+        new_members = self.members + [m]
+        emb, eq = {}, {}
+        for name, bk in self.trainer.backends.items():
+            emb[name], eq[name] = bk.reshard_live(
+                [mm.endpoint for mm in new_members], None)
+        self.members = new_members
+        if self.monitor is not None:
+            self.monitor.reset(self.endpoints())
+        remote.reset_trainer_jit(self.trainer)
+        self.events.append({"kind": "join", "endpoint": m.endpoint,
+                            "k": len(new_members)})
+        return self._restate(backup, emb, eq)
+
+    # -- the resilient step loop ---------------------------------------------
+
+    def step(self, state, batch, step_fn=None):
+        """One trainer step that survives shard death. ``step_fn`` defaults
+        to the trainer's ``decomposed_step``; anything with the
+        ``(state, batch) -> (state, metrics)`` shape works."""
+        fn = step_fn if step_fn is not None else self.trainer.decomposed_step
+        last: Exception | None = None
+        for attempt in range(self.max_recoveries + 1):
+            backup = self._backup(state)
+            try:
+                out = fn(state, batch)
+                # the put callbacks dispatch asynchronously; block so a
+                # failure surfaces HERE (classified, recoverable) instead
+                # of poisoning buffers consumed after we report success
+                return jax.block_until_ready(out)
+            except Exception as e:                     # noqa: BLE001
+                if not is_ps_failure(e):
+                    raise
+                last = e
+                if attempt == self.max_recoveries:
+                    break
+                dead = self.probe_dead()
+                if dead:
+                    state = self.recover(backup, dead)
+                else:
+                    # transient (timeout blip): the membership is intact,
+                    # rebuild the donated pytree and retry the step
+                    self.events.append({"kind": "transient"})
+                    emb, eq = self._fresh_emb()
+                    state = self._restate(backup, emb, eq)
+        raise ClusterDeadError(
+            f"PS failure persisted through {self.max_recoveries} "
+            f"recoveries") from last

@@ -1,0 +1,358 @@
+"""The embedding-PS process: any in-process ``EmbeddingBackend`` hosted
+behind the RPC surface (paper §4.1 — the PS tier as its own service with
+its own failure domain).
+
+One server hosts any number of named tables; each table is a *plain*
+dense / host_lru backend over the shard's local id space (the sharded
+geometry lives client-side in ``RemoteShardedBackend``, exactly as the
+in-process router composes plain backends). The server owns the table
+state AND its bounded-staleness queue — queued puts are PS-side state, so
+killing a shard loses exactly the queue + unacked requests: the paper's
+tolerated in-flight loss, and nothing more, because applied puts are
+spooled to disk *before* the ack (``--spool-every 1``).
+
+Run one process per shard::
+
+    PYTHONPATH=src python -m repro.net.ps_server --port 0 \
+        --port-file /tmp/ps0.port --spool-dir /tmp/ps0.spool
+
+``--port 0`` binds an OS-assigned free port and publishes it through
+``--port-file`` (written atomically), so launchers never race on ports.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import shutil
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.ckpt import _read_blob, _write_blob
+from repro.core import backend as BK
+from repro.net import wire
+from repro.net.rpc import RpcServer
+
+MUTATING_OPS = frozenset({
+    "configure", "init", "seed_rows", "queue_init", "put", "hybrid",
+    "restore", "pin", "unpin", "reset_pins",
+})
+
+
+def read_spool(spool_dir: str, table: str):
+    """Latest spooled state blob for ``table``, or None if never spooled."""
+    root = os.path.join(spool_dir, table)
+    cur = os.path.join(root, "CURRENT")
+    if not os.path.exists(cur):
+        return None
+    with open(cur) as f:
+        gen = f.read().strip()
+    return _read_blob(os.path.join(root, gen))
+
+
+class PSServer:
+    """One PS shard process (or in-process thread, for tests)."""
+
+    def __init__(self, host: str = "127.0.0.1", port: int = 0,
+                 spool_dir: str | None = None, spool_every: int = 1):
+        self.spool_dir = spool_dir
+        self.spool_every = int(spool_every)
+        self._tables: dict[str, dict] = {}
+        self._lock = threading.RLock()
+        self._shutdown = threading.Event()
+        handlers = {
+            "ping": self._op_ping,
+            "configure": self._op_configure,
+            "init": self._op_init,
+            "seed_rows": self._op_seed_rows,
+            "queue_init": self._op_queue_init,
+            "prepare": self._op_prepare,
+            "lookup": self._op_lookup,
+            "put": self._op_put,
+            "hybrid": self._op_hybrid,
+            "pin": self._op_pin,
+            "unpin": self._op_unpin,
+            "reset_pins": self._op_reset_pins,
+            "checkpoint": self._op_checkpoint,
+            "restore": self._op_restore,
+            "export_logical": self._op_export_logical,
+            "metrics": self._op_metrics,
+            "shutdown": self._op_shutdown,
+            "die": self._op_die,
+        }
+        self.rpc = RpcServer(handlers, host, port, mutating_ops=MUTATING_OPS)
+
+    @property
+    def port(self) -> int:
+        return self.rpc.port
+
+    def start(self) -> "PSServer":
+        self.rpc.start()
+        return self
+
+    def stop(self):
+        self._shutdown.set()
+        self.rpc.stop()
+
+    def kill(self):
+        """Simulate shard death for in-process (threaded) servers: drop all
+        table state and stop answering — clients see connection errors,
+        exactly as if the process was SIGKILLed. The spool survives."""
+        self.stop()
+        with self._lock:
+            self._tables.clear()
+
+    def wait(self):
+        self._shutdown.wait()
+
+    # -- helpers -------------------------------------------------------------
+
+    def _entry(self, table: str) -> dict:
+        ent = self._tables.get(table)
+        if ent is None:
+            raise KeyError(f"table {table!r} not configured on this PS "
+                           f"(have {sorted(self._tables)})")
+        return ent
+
+    def _maybe_spool(self, table: str, ent: dict, force: bool = False):
+        """Persist the applied state BEFORE the op acks, so a killed shard
+        loses only unacked/queued puts (never an acknowledged apply)."""
+        if self.spool_dir is None or self.spool_every <= 0:
+            return
+        if not force and ent["puts"] % self.spool_every != 0:
+            return
+        root = os.path.join(self.spool_dir, table)
+        os.makedirs(root, exist_ok=True)
+        ent["spool_gen"] = ent.get("spool_gen", 0) + 1
+        gen = f"gen_{ent['spool_gen'] % 2}"            # two alternating slots
+        d = os.path.join(root, gen)
+        if os.path.exists(d):
+            shutil.rmtree(d)
+        os.makedirs(d)
+        _write_blob(d, ent["backend"].state_for_checkpoint(ent["state"]))
+        tmp = os.path.join(root, ".current_tmp")
+        with open(tmp, "w") as f:
+            f.write(gen)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, os.path.join(root, "CURRENT"))
+
+    def _ensure_queue(self, ent: dict, width: int):
+        """Lazy queue creation: a hybrid put arriving with no queue (fresh
+        configure, or post-restore) creates one at the incoming put width —
+        the same dedup-cap width the in-process queue_init derives."""
+        if ent["queue"] is None and ent["spec"].staleness > 0 and width > 0:
+            ent["queue"] = ent["backend"]._queue_init_width(int(width))
+
+    def _grads_in(self, ent: dict, grads) -> jnp.ndarray:
+        return jnp.asarray(wire.lossy_unpack(grads), jnp.float32)
+
+    def _acts_out(self, ent: dict, acts: np.ndarray):
+        if ent["lossy"]:
+            return wire.lossy_pack(acts, ent["spec"].wire_block)
+        return acts
+
+    # -- ops -----------------------------------------------------------------
+
+    def _op_ping(self):
+        return {"pid": os.getpid(), "tables": sorted(self._tables)}
+
+    def _op_configure(self, table: str, spec: dict, lossy: bool = False):
+        with self._lock:
+            s = wire.spec_from_dict(spec)
+            base, wrap = BK.parse_backend_name(s.backend)
+            if wrap or int(s.emb_shards) != 1:
+                raise ValueError(
+                    "PSServer hosts plain single-shard backends; the wire "
+                    "compression and shard geometry live client-side "
+                    f"(got backend={s.backend!r}, emb_shards={s.emb_shards})")
+            backend = BK.create_backend(s)
+            self._tables[table] = {
+                "spec": s, "backend": backend, "state": None, "queue": None,
+                "lossy": bool(lossy), "puts": 0,
+            }
+        return {}
+
+    def _op_init(self, table: str, key, scale: float = 0.02):
+        with self._lock:
+            ent = self._entry(table)
+            ent["state"] = ent["backend"].init(jnp.asarray(key), 1,
+                                               float(scale))
+            ent["queue"] = None
+            self._maybe_spool(table, ent, force=True)
+        return {}
+
+    def _op_seed_rows(self, table: str, ids, vecs, accs=None):
+        """Seed this shard's local rows (the router's init/reshard path):
+        ids are LOCAL row ids, vecs/accs their logical values."""
+        with self._lock:
+            ent = self._entry(table)
+            spec, backend = ent["spec"], ent["backend"]
+            ids = np.asarray(ids, np.int64)
+            vecs = np.asarray(vecs, np.float32)
+            if isinstance(backend, BK.HostLRUBackend):
+                ent["state"] = backend._init_with_rows(
+                    ids, vecs, None if accs is None
+                    else np.asarray(accs, np.float32))
+            else:
+                vec = np.zeros((spec.rows, spec.dim), np.float32)
+                vec[ids] = vecs
+                acc = None
+                if accs is not None:
+                    acc = np.zeros((spec.rows,), np.float32)
+                    acc[ids] = np.asarray(accs, np.float32)
+                ent["state"] = BK._dense_state_from_logical(
+                    spec, spec.rows, vec, acc)
+            ent["queue"] = None
+            self._maybe_spool(table, ent, force=True)
+        return {}
+
+    def _op_queue_init(self, table: str, width: int):
+        with self._lock:
+            ent = self._entry(table)
+            ent["queue"] = None
+            if int(width) > 0 and ent["spec"].staleness > 0:
+                ent["queue"] = ent["backend"]._queue_init_width(int(width))
+        return {}
+
+    def _op_prepare(self, table: str, ids, assume_unique: bool = False):
+        with self._lock:
+            ent = self._entry(table)
+            backend = ent["backend"]
+            state, dev = backend.prepare(ent["state"],
+                                         np.asarray(ids, np.int64),
+                                         bool(assume_unique))
+            ent["state"] = state
+            return {"dev": np.asarray(dev, np.int32),
+                    "faults": int(getattr(backend, "faults", 0)),
+                    "hits": int(getattr(backend, "hits", 0))}
+
+    def _op_lookup(self, table: str, dev):
+        with self._lock:
+            ent = self._entry(table)
+            acts, _ = ent["backend"]._lookup_flat(
+                ent["state"], jnp.asarray(np.asarray(dev, np.int32)))
+            return {"acts": self._acts_out(ent, np.asarray(acts, np.float32))}
+
+    def _op_put(self, table: str, dev, grads, unique: bool = False):
+        with self._lock:
+            ent = self._entry(table)
+            backend = ent["backend"]
+            dev_j = jnp.asarray(np.asarray(dev, np.int32))
+            g_j = self._grads_in(ent, grads)
+            if unique:
+                ent["state"], _ = backend._put_unique(ent["state"], dev_j,
+                                                      g_j)
+            else:
+                ent["state"], _ = backend._put_flat(ent["state"], dev_j, g_j)
+            ent["puts"] += 1
+            self._maybe_spool(table, ent)
+        return {}
+
+    def _op_hybrid(self, table: str, dev, grads, unique: bool = False):
+        with self._lock:
+            ent = self._entry(table)
+            backend = ent["backend"]
+            dev_j = jnp.asarray(np.asarray(dev, np.int32))
+            g_j = self._grads_in(ent, grads)
+            self._ensure_queue(ent, int(dev_j.reshape(-1).shape[0]))
+            if unique:
+                st, q, _ = backend._hybrid_unique(ent["state"], ent["queue"],
+                                                  dev_j, g_j)
+            else:
+                st, q, _ = backend._hybrid_flat(
+                    ent["state"], ent["queue"], dev_j,
+                    g_j.reshape(-1, ent["spec"].dim))
+            ent["state"], ent["queue"] = st, q
+            ent["puts"] += 1
+            self._maybe_spool(table, ent)
+        return {}
+
+    def _op_pin(self, table: str, slots):
+        self._entry(table)["backend"].pin_slots(np.asarray(slots, np.int64))
+        return {}
+
+    def _op_unpin(self, table: str, slots):
+        self._entry(table)["backend"].unpin_slots(np.asarray(slots, np.int64))
+        return {}
+
+    def _op_reset_pins(self, table: str):
+        self._entry(table)["backend"].reset_pins()
+        return {}
+
+    def _op_checkpoint(self, table: str):
+        with self._lock:
+            ent = self._entry(table)
+            return {"blob": ent["backend"].state_for_checkpoint(ent["state"])}
+
+    def _op_restore(self, table: str, blob):
+        with self._lock:
+            ent = self._entry(table)
+            backend = ent["backend"]
+            ent["state"] = backend.restore_from_checkpoint(blob)
+            # queued puts are addressed in pre-restore geometry: drop them
+            # (paper-tolerated in-flight loss); recreated lazily on first put
+            ent["queue"] = None
+            self._maybe_spool(table, ent, force=True)
+            return {"resharded": bool(getattr(backend,
+                                              "last_restore_resharded",
+                                              False))}
+
+    def _op_export_logical(self, table: str):
+        """This shard's rows in local-logical order (the live-reshard
+        export): always raw fp32 — reshard must not quantize rows."""
+        with self._lock:
+            ent = self._entry(table)
+            spec, backend = ent["spec"], ent["backend"]
+            base, _ = BK.parse_backend_name(spec.backend)
+            blob = backend.state_for_checkpoint(ent["state"])
+            vec, acc = BK.extract_logical_rows(blob, spec, base)
+            return {"vec": np.asarray(vec, np.float32),
+                    "acc": None if acc is None
+                    else np.asarray(acc, np.float32)}
+
+    def _op_metrics(self, table: str):
+        with self._lock:
+            ent = self._entry(table)
+            backend = ent["backend"]
+            return {"puts": ent["puts"],
+                    "faults": int(getattr(backend, "faults", 0)),
+                    "hits": int(getattr(backend, "hits", 0)),
+                    "host_bytes": int(backend.host_bytes())}
+
+    def _op_shutdown(self):
+        threading.Timer(0.05, self.stop).start()
+        return {}
+
+    def _op_die(self):
+        # fault injection for subprocess tests: vanish without a reply
+        os._exit(3)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description="embedding PS shard process")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=0,
+                    help="0 = OS-assigned (published via --port-file)")
+    ap.add_argument("--port-file", default=None,
+                    help="write the bound port here (atomic) once listening")
+    ap.add_argument("--spool-dir", default=None,
+                    help="spool applied state here before acking puts")
+    ap.add_argument("--spool-every", type=int, default=1,
+                    help="spool every N applied puts (0 = off)")
+    args = ap.parse_args(argv)
+    server = PSServer(args.host, args.port, spool_dir=args.spool_dir,
+                      spool_every=args.spool_every).start()
+    if args.port_file:
+        tmp = args.port_file + ".tmp"
+        with open(tmp, "w") as f:
+            f.write(str(server.port))
+        os.replace(tmp, args.port_file)
+    print(f"ps_server listening on {args.host}:{server.port} "
+          f"(pid {os.getpid()})", flush=True)
+    server.wait()
+
+
+if __name__ == "__main__":
+    main()

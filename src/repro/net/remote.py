@@ -1,0 +1,474 @@
+"""Client-side remote embedding backends: the ``EmbeddingBackend``
+protocol over RPC, so ``PersiaTrainer`` / ``PipelinedTrainer`` train
+against PS *processes* unchanged.
+
+How the traceable ops cross the process boundary
+------------------------------------------------
+``lookup`` runs as a :func:`jax.pure_callback` and puts as an *ordered*
+:func:`jax.experimental.io_callback` — the RPCs happen on the host while
+the program stays one jitted dispatch. The table's device state shrinks to
+a single int32 **version scalar**: every put returns ``version + 1`` and
+every lookup consumes the version, so the data dependency forces
+put-before-lookup ordering across JAX's async dispatch — the same
+happens-before edge the in-process backends get from threading the table
+arrays themselves. ``prepare``/checkpoint paths block on the version
+(``np.asarray``) before their own RPC, which drains every ACKed put.
+
+Numerics
+--------
+The server hosts the *same* dense/host_lru backend this process would, and
+runs the identical eager ops — so training over ``RemoteBackend`` with the
+raw fp32 wire is bit-exact with the in-process backend. With
+``lossy=True`` the wire carries blockscale-fp16 payloads (get activations
+and put gradients — never reshard/seed rows), compressed at exactly the
+points :class:`CompressedWireBackend` compresses, with a numpy codec that
+matches the jnp reference bit-for-bit: a single-endpoint remote+lossy
+table is bit-exact with in-process ``+compressed``. (Sharded lossy tables
+compress per shard — the in-process wire compresses at the router, so
+block boundaries differ there: same algorithm, not the same bits.)
+
+Sharding
+--------
+:class:`RemoteShardedBackend` subclasses the in-process
+:class:`ShardedBackend` router and only swaps the per-shard sub-backend
+factory for RPC endpoints — routing, concurrent per-shard prepare,
+shard-encoded device ids, shard-tagged checkpoints and the N->M reshard
+machinery are all inherited. ``reshard_live`` reuses that reshard path
+against *live* members for elastic leave/join (repro.net.elastic).
+
+Staleness queues live server-side (they are PS state, per the paper); the
+client threads a zero-byte ``(tau, 0)`` placeholder through the trainer so
+queue-depth validation and checkpoint plumbing stay unchanged. A remote
+checkpoint therefore snapshots applied state only — pending queued puts
+are dropped on save, the same tolerated in-flight loss as a reshard.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import io_callback
+
+from repro.core import backend as BK
+from repro.core import compression as C
+from repro.core import dedup as D
+from repro.core.backend import EmbeddingBackend, ShardedBackend, _prod
+from repro.core.embedding_ps import EmbeddingSpec
+from repro.net import wire
+from repro.net.rpc import PSUnavailableError, RpcClient, RpcError
+
+_SCALAR_F32 = jax.ShapeDtypeStruct((), jnp.float32)
+_SCALAR_I32 = jax.ShapeDtypeStruct((), jnp.int32)
+_PUT_OUT = (_SCALAR_I32, _SCALAR_F32, _SCALAR_F32)
+
+
+class RemoteBackend(EmbeddingBackend):
+    """One table (or one shard of a table) behind a PS process."""
+
+    def __init__(self, spec: EmbeddingSpec, endpoint, table: str = "t",
+                 lossy: bool = False, client: RpcClient | None = None,
+                 timeout: float = 30.0, retries: int = 3,
+                 backoff: float = 0.2, configure: bool = True):
+        base, wrap = BK.parse_backend_name(spec.backend)
+        if wrap:
+            raise ValueError(
+                "RemoteBackend compresses on the wire itself: pass "
+                "lossy=True instead of a '+compressed' backend suffix")
+        if int(spec.emb_shards) != 1:
+            raise ValueError(
+                "RemoteBackend is one PS shard; shard via "
+                "RemoteShardedBackend over multiple endpoints")
+        if base == "host_lru" and spec.cache_rows <= 0:
+            raise ValueError(
+                "host_lru backend needs EmbeddingSpec.cache_rows > 0 "
+                f"(got {spec.cache_rows})")
+        self.spec = spec
+        self._base = base
+        self.requires_prepare = base == "host_lru"
+        self.cache_rows = int(spec.cache_rows)
+        self._lossy = bool(lossy)
+        self._block = int(spec.wire_block)
+        self._table = str(table)
+        self._client = client if client is not None else RpcClient(
+            endpoint[0], endpoint[1], timeout=timeout, retries=retries,
+            backoff=backoff)
+        self.faults = 0           # host_lru fault/hit mirrors (shard gauges)
+        self.hits = 0
+        self._queue_width_cfg = 0
+        if configure:
+            self._call("configure", _mutating=True,
+                       spec=wire.spec_to_dict(spec), lossy=self._lossy)
+
+    # -- plumbing ------------------------------------------------------------
+
+    @property
+    def endpoint(self):
+        return self._client.endpoint
+
+    def _call(self, op: str, _mutating: bool = False, **kw):
+        return self._client.call(op, _mutating=_mutating, table=self._table,
+                                 **kw)
+
+    def close(self):
+        self._client.close()
+
+    def _fresh_state(self):
+        return {"version": jnp.zeros((), jnp.int32)}
+
+    def sync(self, state):
+        """Block until every put dispatched against ``state`` has been
+        ACKed by the PS (the version scalar is the last put's output)."""
+        np.asarray(state["version"])
+        return state
+
+    def _dev_rows(self) -> int:
+        return self.cache_rows if self._base == "host_lru" else self.spec.rows
+
+    # -- host-level ----------------------------------------------------------
+
+    def init(self, key, shards: int = 1, scale: float = 0.02):
+        if shards != 1:
+            raise ValueError(
+                "RemoteBackend is one PS shard; shard via "
+                f"RemoteShardedBackend (got shards={shards})")
+        self._call("init", _mutating=True, key=np.asarray(key),
+                   scale=float(scale))
+        return self._fresh_state()
+
+    def seed_rows(self, ids, vecs, accs=None):
+        """Seed this shard's local rows (router init / reshard path)."""
+        self._call("seed_rows", _mutating=True,
+                   ids=np.asarray(ids, np.int64),
+                   vecs=np.asarray(vecs, np.float32),
+                   accs=None if accs is None
+                   else np.asarray(accs, np.float32))
+        return self._fresh_state()
+
+    def prepare(self, state, ids, assume_unique: bool = False, counts=None):
+        if not self.requires_prepare:
+            return state, ids             # dense: ids ARE device ids
+        self.sync(state)                  # puts must land before fault-in
+        rep = self._call("prepare", ids=np.asarray(ids, np.int64),
+                         assume_unique=bool(assume_unique))
+        self.faults, self.hits = int(rep["faults"]), int(rep["hits"])
+        return state, jnp.asarray(rep["dev"], jnp.int32)
+
+    def dedup_rows(self) -> int:
+        return min(self.spec.rows, self._dev_rows())
+
+    def queue_width(self, n_occ: int) -> int:
+        if self._lossy:
+            # the lossy wire ALWAYS dedups its puts (CompressedWireBackend's
+            # pre-dedup width rule, mirrored so queue widths agree)
+            return D.dedup_cap(int(n_occ), self._dev_rows())
+        return super().queue_width(n_occ)
+
+    def queue_init(self, ids_shape):
+        if self.spec.staleness <= 0:
+            return None
+        return self._queue_init_width(self.queue_width(_prod(ids_shape)))
+
+    def _queue_init_width(self, width: int):
+        # width 0 = "re-derive" (a resharded restore of the zero-byte
+        # placeholder): fall back to the last configured width; the server
+        # also re-creates its queue lazily at the first put's width
+        width = int(width) or self._queue_width_cfg
+        self._queue_width_cfg = int(width)
+        self._call("queue_init", _mutating=True, width=int(width))
+        # client-side placeholder: depth tau (so restore validation holds),
+        # zero bytes (the real FIFO is PS-side state)
+        return {"ids": jnp.zeros((self.spec.staleness, 0), jnp.int32)}
+
+    def pin_slots(self, dev_ids):
+        if self.requires_prepare:
+            self._call("pin", _mutating=True,
+                       slots=np.asarray(dev_ids, np.int64).reshape(-1))
+
+    def unpin_slots(self, dev_ids):
+        if self.requires_prepare:
+            self._call("unpin", _mutating=True,
+                       slots=np.asarray(dev_ids, np.int64).reshape(-1))
+
+    def reset_pins(self):
+        if self.requires_prepare:
+            self._call("reset_pins", _mutating=True)
+
+    # -- checkpoint / reshard --------------------------------------------------
+
+    def state_for_checkpoint(self, state):
+        self.sync(state)
+        return self._call("checkpoint")["blob"]
+
+    def restore_from_checkpoint(self, blob):
+        rep = self._call("restore", _mutating=True, blob=blob)
+        self.last_restore_resharded = bool(rep["resharded"])
+        return self._fresh_state()
+
+    def export_logical(self):
+        """(vec, acc) of this shard's local rows — always raw fp32 (the
+        reshard path must not quantize)."""
+        rep = self._call("export_logical")
+        acc = rep["acc"]
+        return (np.asarray(rep["vec"], np.float32),
+                None if acc is None else np.asarray(acc, np.float32))
+
+    def remote_metrics(self) -> dict:
+        return self._call("metrics")
+
+    def host_bytes(self) -> int:
+        return 0      # the PS process owns the host tier, not this client
+
+    # -- traceable: lookup -----------------------------------------------------
+
+    def _lookup_host(self, version, dev):
+        del version                       # ordering operand only
+        dev = np.asarray(dev, np.int32)
+        rep = self._call("lookup", dev=dev)
+        acts = wire.lossy_unpack(rep["acts"]).astype(np.float32, copy=False)
+        acts = acts.reshape(dev.shape + (self.spec.dim,))
+        wire_b = dev.nbytes + wire.payload_nbytes(rep["acts"])
+        return acts, np.float32(wire_b), np.float32(dev.nbytes + acts.nbytes)
+
+    def _lookup_flat(self, state, dev_ids):
+        shape = tuple(dev_ids.shape)
+        out = (jax.ShapeDtypeStruct(shape + (self.spec.dim,), jnp.float32),
+               _SCALAR_F32, _SCALAR_F32)
+        acts, bw, br = jax.pure_callback(self._lookup_host, out,
+                                         state["version"], dev_ids)
+        return acts, {"get_bytes_wire": bw, "get_bytes_raw": br}
+
+    # -- traceable: puts -------------------------------------------------------
+
+    def _grads_payload(self, g: np.ndarray):
+        if self._lossy:
+            return wire.lossy_pack(g, self._block)
+        return g
+
+    def _put_host(self, op: str, unique: bool, version, dev, g):
+        dev = np.asarray(dev, np.int32)
+        g = np.asarray(g, np.float32)
+        payload = self._grads_payload(g)
+        self._call(op, _mutating=True, dev=dev, grads=payload, unique=unique)
+        wire_b = dev.nbytes + wire.payload_nbytes(payload)
+        return (np.int32(np.asarray(version) + 1), np.float32(wire_b),
+                np.float32(dev.nbytes + g.nbytes))
+
+    def _put_cb(self, op: str, unique: bool, state, dev, g):
+        def host(version, dev_, g_):
+            return self._put_host(op, unique, version, dev_, g_)
+        ver, bw, br = io_callback(host, _PUT_OUT, state["version"], dev, g,
+                                  ordered=True)
+        return ({"version": ver},
+                {"put_bytes_wire": bw, "put_bytes_raw": br})
+
+    def _put_flat(self, state, dev_ids, grads):
+        spec = self.spec
+        flat = dev_ids.reshape(-1)
+        g = grads.reshape(-1, spec.dim)
+        if self._lossy:
+            # mirror CompressedWireBackend._compress_put's legacy path:
+            # the wire dedups before it compresses
+            cap = D.dedup_cap(int(flat.shape[0]), self._dev_rows())
+            uniq, g_u = C.dedup_put(flat.astype(jnp.int32),
+                                    g.astype(jnp.float32), cap)
+            return self._put_unique(state, uniq, g_u)
+        return self._put_cb("put", False, state, flat, g)
+
+    def _put_unique(self, state, dev_u, g_u):
+        return self._put_cb("put", True, state, dev_u, g_u)
+
+    def _hybrid_flat(self, state, queue, dev_ids, grads):
+        spec = self.spec
+        flat = dev_ids.reshape(-1)
+        g = grads.reshape(-1, spec.dim)
+        if self._lossy:
+            cap = D.dedup_cap(int(flat.shape[0]), self._dev_rows())
+            uniq, g_u = C.dedup_put(flat.astype(jnp.int32),
+                                    g.astype(jnp.float32), cap)
+            return self._hybrid_unique(state, queue, uniq, g_u)
+        st, m = self._put_cb("hybrid", False, state, flat, g)
+        return st, queue, m
+
+    def _hybrid_unique(self, state, queue, dev_u, g_u):
+        st, m = self._put_cb("hybrid", True, state, dev_u, g_u)
+        return st, queue, m
+
+
+class RemoteShardedBackend(ShardedBackend):
+    """The in-process sharded router with every shard behind an RPC
+    endpoint: routing, concurrent per-shard prepare, shard-encoded device
+    ids, shard-tagged checkpoints and N->M restore resharding are all
+    inherited — only the sub-backend factory changes. Adds
+    :meth:`reshard_live` (elastic leave/join: redistribute logical rows
+    over a new member set mid-run) on top."""
+
+    min_shards = 1       # one PS process is still a remote deployment
+
+    def __init__(self, spec: EmbeddingSpec, endpoints, lossy: bool = False,
+                 table: str = "t", timeout: float = 30.0, retries: int = 3,
+                 backoff: float = 0.2):
+        self._endpoints = [tuple(e) for e in endpoints]
+        if not self._endpoints:
+            raise ValueError("RemoteShardedBackend needs >= 1 endpoint")
+        self._lossy = bool(lossy)
+        self._table = str(table)
+        self._rpc_opts = {"timeout": timeout, "retries": retries,
+                          "backoff": backoff}
+        self._queue_width_cfg = 0
+        self.last_reshard_lost_rows = 0
+        super().__init__(dataclasses.replace(
+            spec, emb_shards=len(self._endpoints)))
+
+    def _make_sub(self, s: int, sub_spec: EmbeddingSpec) -> RemoteBackend:
+        return RemoteBackend(sub_spec, self._endpoints[s], table=self._table,
+                             lossy=self._lossy, **self._rpc_opts)
+
+    def _configure(self, k: int):
+        if k != len(self._endpoints):
+            raise ValueError(
+                f"RemoteShardedBackend has {len(self._endpoints)} endpoints "
+                f"but was asked for {k} shards; change membership via "
+                "reshard_live(new_endpoints)")
+        for sub in getattr(self, "shard_backends", ()):
+            sub.close()
+        super()._configure(k)
+
+    def close(self):
+        for sub in self.shard_backends:
+            sub.close()
+        if self._pool is not None:
+            self._pool.shutdown(wait=False)
+            self._pool = None
+
+    def sync(self, state):
+        for s, sub in enumerate(self.shard_backends):
+            sub.sync(state[f"s{s}"])
+        return state
+
+    # -- seeding / queues over RPC ---------------------------------------------
+
+    def _sub_states_from_logical(self, vec, acc):
+        r = self._routing
+        ids = np.arange(self.spec.rows)
+        own, loc = r.shard_and_local(ids)
+
+        def seed(s):
+            sel = own == s
+            return self.shard_backends[s].seed_rows(
+                loc[sel], np.asarray(vec[sel], np.float32),
+                None if acc is None else np.asarray(acc[sel], np.float32))
+
+        pool = self._ensure_pool()
+        futs = [pool.submit(seed, s) for s in range(self.n_shards)]
+        return {f"s{s}": f.result() for s, f in enumerate(futs)}
+
+    def _queue_init_width(self, width: int):
+        width = int(width) or self._queue_width_cfg
+        self._queue_width_cfg = int(width)
+        return super()._queue_init_width(width)
+
+    # -- elastic membership (repro.net.elastic drives this) --------------------
+
+    def export_all_logical(self, dead_blobs: dict | None = None):
+        """Gather the full logical table from live members (concurrently)
+        plus spooled blobs for dead ones. A dead shard with no blob loses
+        its rows (zero-reinit, counted in ``last_reshard_lost_rows``)."""
+        dead_blobs = dead_blobs or {}
+        r = self._routing
+        ids = np.arange(self.spec.rows)
+        own, loc = r.shard_and_local(ids)
+        vec = np.zeros((self.spec.rows, self.spec.dim), np.float32)
+        acc = (np.zeros((self.spec.rows,), np.float32)
+               if self.spec.optimizer == "adagrad" else None)
+
+        def export(s):
+            blob = dead_blobs.get(s)
+            if blob is not None:
+                return BK.extract_logical_rows(
+                    blob, self.shard_backends[s].spec, self._base)
+            return self.shard_backends[s].export_logical()
+
+        pool = self._ensure_pool()
+        futs = [pool.submit(export, s) for s in range(self.n_shards)]
+        lost = 0
+        for s, f in enumerate(futs):
+            sel = own == s
+            try:
+                v_s, a_s = f.result()
+            except (PSUnavailableError, RpcError, OSError):
+                lost += int(sel.sum())
+                continue
+            vec[sel] = v_s[loc[sel]]
+            if acc is not None and a_s is not None:
+                acc[sel] = a_s[loc[sel]]
+        self.last_reshard_lost_rows = lost
+        return vec, acc
+
+    def reshard_live(self, endpoints, dead_blobs: dict | None = None):
+        """Live N->M reshard onto ``endpoints``: export every logical row
+        (survivors via RPC, dead members via their spool blobs), rebuild
+        the router over the new member set, and seed each new shard.
+        Returns ``(emb_state, emb_queue)`` for the table — queues restart
+        empty (pending puts are addressed in the old geometry: the same
+        tolerated in-flight loss as a resharded checkpoint restore)."""
+        vec, acc = self.export_all_logical(dead_blobs)
+        self._endpoints = [tuple(e) for e in endpoints]
+        self._configure(len(self._endpoints))
+        state = self._sub_states_from_logical(vec, acc)
+        queue = None
+        if self.spec.staleness > 0:
+            # width 0 = unknown (restored placeholder): the RPC still resets
+            # the PS queues and the servers re-create them lazily at the
+            # next put's width
+            queue = self._queue_init_width(self._queue_width_cfg)
+        return state, queue
+
+
+def connect_remote_backends(trainer, endpoints, lossy: bool | None = None,
+                            timeout: float = 30.0, retries: int = 3,
+                            backoff: float = 0.2) -> dict:
+    """Point every table of a built ``PersiaTrainer`` at remote PS members.
+
+    Call AFTER constructing the trainer and BEFORE ``init``/``restore``.
+    With one endpoint each table gets a plain :class:`RemoteBackend`
+    (device ids and the lossy wire then mirror the in-process plain /
+    ``+compressed`` backends exactly); with several, a
+    :class:`RemoteShardedBackend` over all of them. ``lossy=None``
+    derives the wire from each spec's own ``+compressed`` suffix; an
+    explicit bool overrides every table. Returns the new backends dict
+    (also installed on the trainer, with its jit caches invalidated)."""
+    endpoints = [tuple(e) for e in endpoints]
+    for name, spec in trainer.collection.items():
+        base, wrap = BK.parse_backend_name(spec.backend)
+        if spec.emb_shards > 1 and spec.emb_shards != len(endpoints):
+            raise ValueError(
+                f"table {name!r} declares emb_shards={spec.emb_shards} but "
+                f"{len(endpoints)} PS endpoints were given — the remote "
+                "shard count IS the member count")
+        use_lossy = wrap if lossy is None else bool(lossy)
+        sub = dataclasses.replace(spec, backend=base, emb_shards=1)
+        old = trainer.backends.get(name)
+        if old is not None and hasattr(old, "close"):
+            old.close()
+        if len(endpoints) == 1:
+            trainer.backends[name] = RemoteBackend(
+                sub, endpoints[0], table=name, lossy=use_lossy,
+                timeout=timeout, retries=retries, backoff=backoff)
+        else:
+            trainer.backends[name] = RemoteShardedBackend(
+                sub, endpoints, lossy=use_lossy, table=name,
+                timeout=timeout, retries=retries, backoff=backoff)
+    trainer._needs_prepare = BK.any_requires_prepare(trainer.backends)
+    reset_trainer_jit(trainer)
+    return trainer.backends
+
+
+def reset_trainer_jit(trainer):
+    """Invalidate the trainer's cached jitted programs — required after a
+    membership change: the traced callbacks are bound to the old shard
+    set/backend objects."""
+    trainer._fused = None
+    trainer._eval = None
+    trainer._decomposed = None

@@ -1,0 +1,245 @@
+"""Blocking request/response RPC over the :mod:`repro.net.wire` framing.
+
+Design points (all load-bearing for the PS tier):
+
+* One persistent TCP connection per client, one request in flight at a time
+  (the client serializes under a lock — the trainer's put/lookup stream is
+  sequential per table anyway; concurrency across *shards* comes from one
+  client per shard).
+* Per-request timeout + bounded retry with exponential backoff. Retries
+  reconnect from scratch, so a dead server surfaces as
+  :class:`PSUnavailableError` after the budget — a *named* error the
+  elastic layer catches to trigger a membership change.
+* Mutating ops carry a ``(client, seq)`` pair; the server remembers each
+  client's last applied seq and replays the cached reply instead of
+  re-applying — so a retry after a lost reply cannot double-apply a
+  gradient put (exactly-once apply over an at-least-once transport).
+* A handler exception travels back as :class:`RpcError` with the remote
+  type name — the server stays up (bad request != dead shard).
+"""
+from __future__ import annotations
+
+import socket
+import threading
+import time
+import traceback
+import uuid
+
+from repro.net import wire
+
+
+class RpcError(RuntimeError):
+    """The remote handler raised; carries the remote type and message."""
+
+
+class PSUnavailableError(ConnectionError):
+    """A PS endpoint could not be reached within the retry budget."""
+
+
+class RpcServer:
+    """Thread-per-connection frame server dispatching ``op`` to handlers.
+
+    ``handlers`` maps op name -> callable(**args) returning an
+    encodable tree. ``mutating_ops`` get at-most-once replay suppression
+    keyed on the request's ``(client, seq)``.
+    """
+
+    def __init__(self, handlers: dict, host: str = "127.0.0.1",
+                 port: int = 0, mutating_ops: set | None = None):
+        self.handlers = dict(handlers)
+        self.mutating_ops = set(mutating_ops or ())
+        self._listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._listener.bind((host, port))
+        self._listener.listen(64)
+        self.host, self.port = self._listener.getsockname()[:2]
+        self._threads: list[threading.Thread] = []
+        self._conns: set = set()
+        self._conn_lock = threading.Lock()
+        self._replay_lock = threading.Lock()
+        self._applied: dict[str, tuple[int, bytes]] = {}
+        self._stopping = False
+        self._accept_thread: threading.Thread | None = None
+
+    def start(self) -> "RpcServer":
+        self._accept_thread = threading.Thread(
+            target=self._accept_loop, name=f"rpc-accept-{self.port}",
+            daemon=True)
+        self._accept_thread.start()
+        return self
+
+    def stop(self):
+        self._stopping = True
+        try:
+            # closing alone leaves a thread blocked in accept() holding the
+            # kernel socket in LISTEN; shutdown wakes it so the port frees
+            self._listener.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        try:
+            self._listener.close()
+        except OSError:
+            pass
+        if self._accept_thread is not None:
+            self._accept_thread.join(timeout=5.0)
+        with self._conn_lock:
+            conns = list(self._conns)
+        for c in conns:
+            try:
+                c.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            try:
+                c.close()
+            except OSError:
+                pass
+
+    def _accept_loop(self):
+        while not self._stopping:
+            try:
+                conn, _ = self._listener.accept()
+            except OSError:
+                return
+            conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            with self._conn_lock:
+                self._conns.add(conn)
+            t = threading.Thread(target=self._serve_conn, args=(conn,),
+                                 name=f"rpc-conn-{self.port}", daemon=True)
+            t.start()
+            self._threads.append(t)
+
+    def _serve_conn(self, conn: socket.socket):
+        try:
+            while not self._stopping:
+                try:
+                    payload = wire.recv_frame(conn)
+                except (wire.WireError, OSError):
+                    return
+                reply = self._dispatch(payload)
+                try:
+                    wire.send_frame(conn, reply)
+                except OSError:
+                    return
+        finally:
+            with self._conn_lock:
+                self._conns.discard(conn)
+            try:
+                conn.close()
+            except OSError:
+                pass
+
+    def _dispatch(self, payload: bytes) -> bytes:
+        try:
+            msg = wire.decode(payload)
+            op = msg["op"]
+            args = msg.get("args") or {}
+            seq, client = msg.get("seq"), msg.get("client")
+            replay = op in self.mutating_ops and seq is not None \
+                and client is not None
+            if replay:
+                with self._replay_lock:
+                    cached = self._applied.get(client)
+                if cached is not None and cached[0] == seq:
+                    return cached[1]
+            handler = self.handlers.get(op)
+            if handler is None:
+                raise KeyError(f"unknown rpc op {op!r}")
+            result = handler(**args)
+            reply = wire.encode({"ok": result})
+            if replay:
+                with self._replay_lock:
+                    self._applied[client] = (seq, reply)
+            return reply
+        except Exception as e:                         # noqa: BLE001
+            return wire.encode({
+                "err": f"{type(e).__name__}: {e}",
+                "tb": traceback.format_exc(limit=8),
+            })
+
+
+class RpcClient:
+    """Blocking caller with reconnect + bounded retry/backoff.
+
+    ``call(op, ...)`` raises :class:`RpcError` when the remote handler
+    failed (no retry — the server is alive) and
+    :class:`PSUnavailableError` when the endpoint cannot be reached /
+    answered within ``retries + 1`` attempts.
+    """
+
+    def __init__(self, host: str, port: int, timeout: float = 30.0,
+                 retries: int = 3, backoff: float = 0.2):
+        self.host, self.port = host, int(port)
+        self.timeout = float(timeout)
+        self.retries = int(retries)
+        self.backoff = float(backoff)
+        self._sock: socket.socket | None = None
+        self._lock = threading.Lock()
+        self._client_id = uuid.uuid4().hex
+        self._seq = 0
+        self.bytes_sent = 0
+        self.bytes_recv = 0
+
+    @property
+    def endpoint(self) -> tuple[str, int]:
+        return (self.host, self.port)
+
+    def _connect(self, timeout: float) -> socket.socket:
+        s = socket.create_connection((self.host, self.port), timeout=timeout)
+        s.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        return s
+
+    def _close_locked(self):
+        if self._sock is not None:
+            try:
+                self._sock.close()
+            except OSError:
+                pass
+            self._sock = None
+
+    def close(self):
+        with self._lock:
+            self._close_locked()
+
+    def call(self, op: str, _mutating: bool = False,
+             _timeout: float | None = None, _retries: int | None = None,
+             **args):
+        timeout = self.timeout if _timeout is None else float(_timeout)
+        retries = self.retries if _retries is None else int(_retries)
+        with self._lock:
+            msg = {"op": op, "args": args}
+            if _mutating:
+                self._seq += 1
+                msg["seq"] = self._seq
+                msg["client"] = self._client_id
+            payload = wire.encode(msg)
+            last_err: Exception | None = None
+            for attempt in range(retries + 1):
+                if attempt:
+                    time.sleep(self.backoff * (2 ** (attempt - 1)))
+                try:
+                    if self._sock is None:
+                        self._sock = self._connect(timeout)
+                    self._sock.settimeout(timeout)
+                    self.bytes_sent += wire.send_frame(self._sock, payload)
+                    reply_raw = wire.recv_frame(self._sock)
+                    self.bytes_recv += len(reply_raw) + 12  # + frame header
+                except (OSError, wire.WireError) as e:
+                    last_err = e
+                    self._close_locked()
+                    continue
+                reply = wire.decode(reply_raw)
+                if "err" in reply:
+                    raise RpcError(reply["err"])
+                return reply["ok"]
+            raise PSUnavailableError(
+                f"PS at {self.host}:{self.port} unreachable for op {op!r} "
+                f"after {retries + 1} attempts: "
+                f"{type(last_err).__name__}: {last_err}")
+
+    def ping(self, timeout: float = 1.0, retries: int = 0) -> bool:
+        """Liveness probe; False instead of raising on an unreachable PS."""
+        try:
+            self.call("ping", _timeout=timeout, _retries=retries)
+            return True
+        except (PSUnavailableError, RpcError):
+            return False

@@ -1,0 +1,229 @@
+"""The PS wire format: framing, an array-tree codec, and the numpy side of
+the paper's §4.2.3 blockscale value compression.
+
+* Frames are ``MAGIC + u64 length + payload`` on a stream socket — the
+  length prefix is the whole protocol, so a half-written frame (a killed
+  peer) is detected as a short read, never a parse of garbage.
+* The payload codec serializes the same trees the checkpoint blobs hold
+  (nested dicts/lists of numpy arrays + scalars): a json header describing
+  the structure, then the raw little-endian array buffers concatenated —
+  serialisation is a memory copy, exactly the checkpoint's
+  manifest+data.bin layout but on a socket.
+* ``np_blockscale_compress`` mirrors ``repro.core.compression`` in numpy,
+  bit-for-bit (same fp32 scale arithmetic, same fp16 round-to-nearest
+  cast), so a remote table behind the lossy wire is numerically identical
+  to the in-process :class:`CompressedWireBackend` — tested in
+  ``tests/test_net.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import socket
+import struct
+
+import numpy as np
+
+MAGIC = b"PSR1"
+_HEADER = struct.Struct("<4sQ")       # magic + payload length
+MAX_FRAME = 1 << 33                   # 8 GiB sanity bound on one message
+
+KAPPA = 32_768.0                      # keep in sync with core/compression.py
+
+
+class WireError(ConnectionError):
+    """Framing/codec violation (bad magic, truncated frame, unknown node)."""
+
+
+# ---------------------------------------------------------------------------
+# Framing
+# ---------------------------------------------------------------------------
+
+def send_frame(sock: socket.socket, payload: bytes) -> int:
+    header = _HEADER.pack(MAGIC, len(payload))
+    sock.sendall(header + payload)
+    return len(header) + len(payload)
+
+
+def recv_exact(sock: socket.socket, n: int) -> bytes:
+    chunks = []
+    got = 0
+    while got < n:
+        chunk = sock.recv(min(n - got, 1 << 20))
+        if not chunk:
+            raise WireError(f"peer closed mid-frame ({got}/{n} bytes)")
+        chunks.append(chunk)
+        got += len(chunk)
+    return b"".join(chunks)
+
+
+def recv_frame(sock: socket.socket) -> bytes:
+    magic, length = _HEADER.unpack(recv_exact(sock, _HEADER.size))
+    if magic != MAGIC:
+        raise WireError(f"bad frame magic {magic!r}")
+    if length > MAX_FRAME:
+        raise WireError(f"frame length {length} exceeds MAX_FRAME")
+    return recv_exact(sock, length)
+
+
+# ---------------------------------------------------------------------------
+# Array-tree codec
+# ---------------------------------------------------------------------------
+
+def _enc_node(node, bufs: list[bytes]):
+    if node is None or isinstance(node, (bool, int, float, str)):
+        return node if not isinstance(node, bool) else {"t": "b", "v": node}
+    if isinstance(node, dict):
+        return {"t": "d", "v": {str(k): _enc_node(v, bufs)
+                                for k, v in node.items()}}
+    if isinstance(node, (list, tuple)):
+        return {"t": "l" if isinstance(node, list) else "t",
+                "v": [_enc_node(v, bufs) for v in node]}
+    a = np.asarray(node)
+    if a.dtype == object:
+        raise WireError(f"cannot encode object array {node!r}")
+    raw = np.ascontiguousarray(a).tobytes()
+    bufs.append(raw)
+    return {"t": "a", "d": str(a.dtype), "s": list(a.shape), "n": len(raw)}
+
+
+def _dec_node(node, bufs: list[memoryview], pos: list[int]):
+    if not isinstance(node, dict):
+        return node
+    t = node["t"]
+    if t == "b":
+        return bool(node["v"])
+    if t == "d":
+        return {k: _dec_node(v, bufs, pos) for k, v in node["v"].items()}
+    if t in ("l", "t"):
+        seq = [_dec_node(v, bufs, pos) for v in node["v"]]
+        return seq if t == "l" else tuple(seq)
+    if t == "a":
+        raw = bufs[pos[0]]
+        pos[0] += 1
+        arr = np.frombuffer(raw, dtype=node["d"]).reshape(node["s"])
+        return arr.copy()      # decouple from the receive buffer
+    raise WireError(f"unknown wire node tag {t!r}")
+
+
+def encode(tree) -> bytes:
+    """Tree of dicts/lists/scalars/arrays -> one bytes payload."""
+    bufs: list[bytes] = []
+    header = json.dumps(_enc_node(tree, bufs),
+                        separators=(",", ":")).encode()
+    parts = [struct.pack("<I", len(header)), header]
+    parts.extend(bufs)
+    return b"".join(parts)
+
+
+def decode(payload: bytes):
+    (hlen,) = struct.unpack_from("<I", payload, 0)
+    header = json.loads(payload[4: 4 + hlen].decode())
+    view = memoryview(payload)
+    bufs: list[memoryview] = []
+    off = 4 + hlen
+
+    def _collect(node):
+        nonlocal off
+        if isinstance(node, dict):
+            if node.get("t") == "a":
+                bufs.append(view[off: off + node["n"]])
+                off += node["n"]
+            elif node.get("t") == "d":
+                for v in node["v"].values():
+                    _collect(v)
+            elif node.get("t") in ("l", "t"):
+                for v in node["v"]:
+                    _collect(v)
+    _collect(header)
+    return _dec_node(header, bufs, [0])
+
+
+def tree_nbytes(tree) -> int:
+    """Array payload bytes of a tree (codec framing/header excluded) — the
+    honest bytes-on-wire gauge the benchmarks report."""
+    total = 0
+    for leaf in _iter_leaves(tree):
+        total += np.asarray(leaf).nbytes
+    return total
+
+
+def _iter_leaves(tree):
+    if isinstance(tree, dict):
+        for v in tree.values():
+            yield from _iter_leaves(v)
+    elif isinstance(tree, (list, tuple)):
+        for v in tree:
+            yield from _iter_leaves(v)
+    elif tree is not None and not isinstance(tree, (bool, int, float, str)):
+        yield tree
+
+
+# ---------------------------------------------------------------------------
+# Blockscale fp16 values on the wire (numpy mirror of core/compression.py)
+# ---------------------------------------------------------------------------
+
+def np_blockscale_compress(v: np.ndarray, block: int = 128):
+    """fp32 array -> (fp16 blocks, fp32 per-block scales, orig shape).
+    Same arithmetic as the jnp reference: linf per block, scale =
+    KAPPA / max(linf, 1e-30) in fp32, fp16 cast (round-to-nearest-even in
+    both numpy and XLA), so the roundtrip is bit-identical."""
+    v = np.asarray(v, np.float32)
+    orig_shape = v.shape
+    flat = v.reshape(-1)
+    pad = (-flat.size) % block
+    if pad:
+        flat = np.concatenate([flat, np.zeros(pad, np.float32)])
+    blocks = flat.reshape(-1, block)
+    linf = np.max(np.abs(blocks), axis=-1, keepdims=True)
+    scale = (np.float32(KAPPA) / np.maximum(linf, np.float32(1e-30))) \
+        .astype(np.float32)
+    comp = (blocks * scale).astype(np.float16)
+    return comp, scale[:, 0], orig_shape
+
+
+def np_blockscale_decompress(comp, scale, orig_shape):
+    blocks = comp.astype(np.float32) / np.asarray(scale, np.float32)[:, None]
+    n = 1
+    for s in orig_shape:
+        n *= int(s)
+    return blocks.reshape(-1)[:n].reshape(orig_shape)
+
+
+def lossy_pack(v: np.ndarray, block: int = 128) -> dict:
+    """Value payload for the lossy wire: fp16 blocks + fp32 scales."""
+    comp, scale, shape = np_blockscale_compress(v, block)
+    return {"__bs__": 1, "c": comp, "s": scale,
+            "shape": [int(x) for x in shape]}
+
+
+def lossy_unpack(payload) -> np.ndarray:
+    """Inverse of :func:`lossy_pack`; raw fp32 arrays pass through."""
+    if isinstance(payload, dict) and payload.get("__bs__"):
+        return np_blockscale_decompress(payload["c"], payload["s"],
+                                        tuple(payload["shape"]))
+    return np.asarray(payload, np.float32)
+
+
+def payload_nbytes(payload) -> int:
+    if isinstance(payload, dict) and payload.get("__bs__"):
+        return int(np.asarray(payload["c"]).nbytes
+                   + np.asarray(payload["s"]).nbytes)
+    return int(np.asarray(payload).nbytes)
+
+
+# ---------------------------------------------------------------------------
+# EmbeddingSpec <-> wire dict (all-primitive; dtype travels as its name)
+# ---------------------------------------------------------------------------
+
+def spec_to_dict(spec) -> dict:
+    d = dataclasses.asdict(spec)
+    d["dtype"] = np.dtype(d["dtype"]).name
+    return d
+
+
+def spec_from_dict(d: dict):
+    from repro.core.embedding_ps import EmbeddingSpec
+    d = dict(d)
+    d["dtype"] = np.dtype(d["dtype"])
+    return EmbeddingSpec(**d)

@@ -1,6 +1,27 @@
 import os
+import socket
 import sys
+
+import pytest
 
 # tests see the real single CPU device (the 512-device override is ONLY for
 # the dry-run); keep test jit cache warm across files.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.fixture
+def free_port():
+    """OS-assigned free TCP port (bind port 0, read it back, release).
+
+    The small race between release and reuse is why the PS servers
+    themselves bind port 0 and publish the result; this fixture is for
+    tests that must know a port BEFORE the server exists (e.g. dialing an
+    endpoint that is guaranteed dead)."""
+
+    def _get() -> int:
+        with socket.socket(socket.AF_INET, socket.SOCK_STREAM) as s:
+            s.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+            s.bind(("127.0.0.1", 0))
+            return s.getsockname()[1]
+
+    return _get

@@ -1,0 +1,81 @@
+"""checkpoint_shard_layout: per-table PS shard counts read straight off
+a saved checkpoint's embedding blob, without a trainer — plain tables,
+shard-tagged tables, mixed checkpoints, and the named failure modes for
+corrupt or truncated saves."""
+import numpy as np
+import pytest
+
+from repro.checkpoint.ckpt import checkpoint_shard_layout, save_checkpoint
+
+
+def _sub_blob(rows=4, dim=2):
+    return {"table": np.zeros((rows, dim), np.float32),
+            "acc": np.zeros((rows,), np.float32)}
+
+
+def _sharded_blob(k, rows=8, dim=2):
+    return {"shard_meta": np.asarray([k, rows, dim], np.int64),
+            "shards": {f"s{s}": _sub_blob(rows // k, dim)
+                       for s in range(k)}}
+
+
+def _save(tmp_path, emb_tables, step=0):
+    dense = {"w": np.zeros((3,), np.float32)}
+    emb = None if emb_tables is None else {"emb": emb_tables}
+    save_checkpoint(str(tmp_path), step, dense, emb)
+    return str(tmp_path)
+
+
+def test_layout_plain_tables(tmp_path):
+    d = _save(tmp_path, {"a": _sub_blob(), "b": _sub_blob()})
+    assert checkpoint_shard_layout(d) == {"a": 1, "b": 1}
+
+
+def test_layout_mixed_plain_and_sharded(tmp_path):
+    d = _save(tmp_path, {"plain": _sub_blob(),
+                         "two": _sharded_blob(2),
+                         "three": _sharded_blob(3, rows=9, dim=2)})
+    assert checkpoint_shard_layout(d) == {"plain": 1, "two": 2, "three": 3}
+
+
+def test_layout_no_embedding_blob_is_named(tmp_path):
+    d = _save(tmp_path, None)
+    with pytest.raises(ValueError, match="no per-table embedding"):
+        checkpoint_shard_layout(d)
+
+
+def test_layout_missing_shards_entry_is_corrupt(tmp_path):
+    blob = _sharded_blob(2)
+    del blob["shards"]
+    d = _save(tmp_path, {"t": blob})
+    with pytest.raises(ValueError, match="missing its 'shards'"):
+        checkpoint_shard_layout(d)
+
+
+def test_layout_missing_shard_meta_is_corrupt(tmp_path):
+    blob = _sharded_blob(2)
+    del blob["shard_meta"]
+    d = _save(tmp_path, {"t": blob})
+    with pytest.raises(ValueError, match="missing its 'shard_meta'"):
+        checkpoint_shard_layout(d)
+
+
+@pytest.mark.parametrize("meta", [
+    np.asarray([2, 8], np.int64),             # wrong arity
+    np.asarray([0, 8, 2], np.int64),          # n_shards < 1
+    np.asarray([2.0, 8.0, 2.0], np.float32),  # non-integer dtype
+])
+def test_layout_corrupt_shard_meta(tmp_path, meta):
+    blob = _sharded_blob(2)
+    blob["shard_meta"] = meta
+    d = _save(tmp_path, {"t": blob})
+    with pytest.raises(ValueError, match="corrupt shard_meta"):
+        checkpoint_shard_layout(d)
+
+
+def test_layout_shard_count_mismatch(tmp_path):
+    blob = _sharded_blob(3, rows=9)
+    del blob["shards"]["s1"]                  # meta says 3, blob holds 2
+    d = _save(tmp_path, {"t": blob})
+    with pytest.raises(ValueError, match="declares 3 shards"):
+        checkpoint_shard_layout(d)

@@ -1,0 +1,55 @@
+"""The multi-process launcher (repro/launch/cluster.py): a real
+trainer + k PS subprocess run over the RPC wire, and the kill-a-shard
+drill — SIGKILL one shard mid-run, reshard its spooled rows onto the
+survivors, keep training."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.launch.cluster import run_cluster
+from repro.launch.shards import parse_emb_shards, shards_for_table
+
+
+def test_emb_shards_grammar_is_shared_across_launchers():
+    assert parse_emb_shards(4) == 4
+    assert parse_emb_shards("4") == 4
+    assert parse_emb_shards(None) == 1
+    assert parse_emb_shards(" field_00=4, field_02=2") == \
+        {"field_00": 4, "field_02": 2}
+    with pytest.raises(ValueError, match="expected 'table=k'"):
+        parse_emb_shards("field_00=")
+    with pytest.raises(ValueError):
+        parse_emb_shards("nope")
+    assert shards_for_table(4, "vocab") == 4
+    assert shards_for_table({"vocab": 2}, "vocab") == 2
+    assert shards_for_table({"other": 2}, "vocab") == 1
+
+
+@pytest.mark.timeout(240)
+def test_cluster_smoke_two_ps(tmp_path):
+    res = run_cluster(steps=5, n_ps=2, workdir=str(tmp_path))
+    assert res["steps"] == 5
+    assert res["members"] == 2
+    assert np.isfinite(res["loss"])
+    assert res["steps_per_s"] > 0
+    # a clean run never reshards
+    assert not [e for e in res["events"] if e["kind"] == "reshard"]
+    # every shard published its port and spooled applied state
+    for i in range(2):
+        assert os.path.isdir(tmp_path / f"ps{i}.spool")
+
+
+@pytest.mark.timeout(240)
+def test_cluster_kill_a_shard_reshards_onto_survivors(tmp_path):
+    res = run_cluster(steps=10, n_ps=3, kill_shard=1, kill_at=4,
+                      workdir=str(tmp_path))
+    assert res["members"] == 2
+    resh = [e for e in res["events"] if e["kind"] == "reshard"]
+    assert resh and resh[0]["dead"] == [1]
+    assert resh[0]["k"] == 2
+    # applied puts were spooled before their ack: the kill loses at most
+    # in-flight work, never applied rows
+    assert res["lost_rows"] and all(v == 0
+                                    for v in res["lost_rows"].values())
+    assert np.isfinite(res["loss"])

@@ -1,0 +1,249 @@
+"""The PS wire + RPC layer (repro/net/wire.py, rpc.py): framing over real
+sockets, array-tree codec roundtrips, numpy-vs-jnp blockscale bit parity,
+request timeout/retry/unavailable semantics, remote-error propagation, and
+at-most-once replay suppression for mutating ops."""
+import socket
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import compression as C
+from repro.net import wire
+from repro.net.rpc import PSUnavailableError, RpcClient, RpcError, RpcServer
+
+
+# ---------------------------------------------------------------------------
+# framing
+# ---------------------------------------------------------------------------
+
+def test_frame_roundtrip_over_socketpair():
+    a, b = socket.socketpair()
+    payload = b"x" * 100_000
+    try:
+        t = threading.Thread(target=wire.send_frame, args=(a, payload))
+        t.start()
+        got = wire.recv_frame(b)
+        t.join()
+        assert got == payload
+    finally:
+        a.close()
+        b.close()
+
+
+def test_frame_bad_magic_and_short_read():
+    a, b = socket.socketpair()
+    try:
+        a.sendall(b"NOPE" + (8).to_bytes(8, "little"))
+        with pytest.raises(wire.WireError, match="magic"):
+            wire.recv_frame(b)
+        # a peer dying mid-frame is a short read, never a garbage parse
+        a.sendall(wire.MAGIC + (100).to_bytes(8, "little") + b"abc")
+        a.close()
+        with pytest.raises(wire.WireError, match="mid-frame"):
+            wire.recv_frame(b)
+    finally:
+        b.close()
+
+
+# ---------------------------------------------------------------------------
+# array-tree codec
+# ---------------------------------------------------------------------------
+
+def test_codec_roundtrip_nested_tree():
+    tree = {
+        "a": np.arange(12, dtype=np.int64).reshape(3, 4),
+        "b": {"c": np.float32(0).reshape(()) + 1.5,
+              "empty": np.zeros((0, 8), np.float32),
+              "f16": np.arange(6, dtype=np.float16)},
+        "scalars": [1, 2.5, "name", None, True, False],
+        "tup": (np.int32(7), [np.ones(3, np.float64)]),
+    }
+    out = wire.decode(wire.encode(tree))
+    assert isinstance(out["tup"], tuple)           # tuples survive
+    assert isinstance(out["scalars"], list)
+    assert out["scalars"] == [1, 2.5, "name", None, True, False]
+    assert out["scalars"][4] is True and out["scalars"][5] is False
+    np.testing.assert_array_equal(out["a"], tree["a"])
+    assert out["a"].dtype == np.int64
+    np.testing.assert_array_equal(out["b"]["f16"], tree["b"]["f16"])
+    assert out["b"]["empty"].shape == (0, 8)
+    assert out["b"]["empty"].dtype == np.float32
+    np.testing.assert_array_equal(out["tup"][1][0], np.ones(3, np.float64))
+
+
+def test_codec_decoded_arrays_are_owned():
+    # decode() must copy out of the receive buffer: the arrays outlive it
+    src = np.arange(100, dtype=np.float32)
+    out = wire.decode(wire.encode({"x": src}))
+    assert out["x"].flags["WRITEABLE"]
+    out["x"][0] = -1.0
+    assert src[0] == 0.0
+
+
+def test_codec_rejects_object_arrays():
+    with pytest.raises(wire.WireError, match="object"):
+        wire.encode({"bad": np.array([object()])})
+
+
+def test_spec_dict_roundtrip():
+    from repro.core.embedding_ps import EmbeddingSpec
+    spec = EmbeddingSpec(rows=64, dim=8, backend="host_lru", cache_rows=16,
+                         staleness=2)
+    out = wire.spec_from_dict(wire.decode(wire.encode(
+        wire.spec_to_dict(spec))))
+    assert out == spec
+
+
+# ---------------------------------------------------------------------------
+# blockscale wire: numpy mirror == jnp reference, bit for bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(7,), (16, 8), (3, 128), (130,)])
+def test_np_blockscale_matches_jnp_reference(shape):
+    rng = np.random.default_rng(0)
+    v = (rng.standard_normal(shape)
+         * 10.0 ** rng.integers(-4, 4, shape)).astype(np.float32)
+    comp_np, scale_np, _ = wire.np_blockscale_compress(v, block=128)
+    comp_j, scale_j, _ = C.blockscale_compress(v, block=128)
+    np.testing.assert_array_equal(comp_np, np.asarray(comp_j))
+    np.testing.assert_array_equal(scale_np, np.asarray(scale_j).reshape(-1))
+    # and the decompressed values match the jnp roundtrip exactly
+    out_np = wire.np_blockscale_decompress(comp_np, scale_np, shape)
+    np.testing.assert_array_equal(out_np, np.asarray(
+        C.blockscale_roundtrip(v, block=128)))
+
+
+def test_lossy_pack_roundtrip_and_sizes():
+    v = np.random.default_rng(1).standard_normal((40, 8)).astype(np.float32)
+    p = wire.lossy_pack(v, block=128)
+    out = wire.lossy_unpack(p)
+    assert out.shape == v.shape
+    np.testing.assert_allclose(out, v, rtol=2e-3, atol=1e-6)
+    # fp16 payload + fp32 per-block scales: roughly half the raw bytes
+    assert wire.payload_nbytes(p) < v.nbytes
+    # raw arrays pass through unpack untouched
+    np.testing.assert_array_equal(wire.lossy_unpack(v), v)
+    assert wire.payload_nbytes(v) == v.nbytes
+
+
+# ---------------------------------------------------------------------------
+# RPC semantics
+# ---------------------------------------------------------------------------
+
+def _echo_server(extra=None):
+    calls = {"n": 0}
+
+    def bump(**kw):
+        calls["n"] += 1
+        return {"n": calls["n"], **kw}
+
+    handlers = {"ping": lambda: {"pong": True},
+                "echo": lambda **kw: kw,
+                "bump": bump,
+                "boom": lambda: (_ for _ in ()).throw(
+                    ValueError("handler exploded"))}
+    if extra:
+        handlers.update(extra)
+    srv = RpcServer(handlers, mutating_ops={"bump"}).start()
+    return srv, calls
+
+
+def test_rpc_call_and_remote_error():
+    srv, _ = _echo_server()
+    try:
+        c = RpcClient("127.0.0.1", srv.port, timeout=5.0, retries=0)
+        out = c.call("echo", x=np.arange(5, dtype=np.int32), s="hi")
+        np.testing.assert_array_equal(out["x"], np.arange(5, dtype=np.int32))
+        assert out["s"] == "hi"
+        assert c.ping()
+        # handler exceptions come back typed, the server stays up
+        with pytest.raises(RpcError, match="ValueError: handler exploded"):
+            c.call("boom")
+        with pytest.raises(RpcError, match="unknown rpc op"):
+            c.call("nope")
+        assert c.call("echo", ok=1)["ok"] == 1       # still serving
+        assert c.bytes_sent > 0 and c.bytes_recv > 0
+        c.close()
+    finally:
+        srv.stop()
+
+
+def test_rpc_unavailable_after_retries(free_port):
+    c = RpcClient("127.0.0.1", free_port(), timeout=0.5, retries=1,
+                  backoff=0.01)
+    with pytest.raises(PSUnavailableError, match="after 2 attempts"):
+        c.call("ping")
+    assert c.ping() is False
+
+
+def test_rpc_reconnects_after_server_restart():
+    srv, _ = _echo_server()
+    port = srv.port
+    c = RpcClient("127.0.0.1", port, timeout=5.0, retries=4, backoff=0.05)
+    assert c.call("echo", a=1)["a"] == 1
+    srv.stop()
+    # same port comes back (retrying the bind out of TIME_WAIT, as a
+    # restarted PS would): the client's retry loop must reconnect
+    # transparently
+    deadline = time.time() + 10.0
+    while True:
+        try:
+            srv2 = RpcServer({"echo": lambda **kw: kw}, port=port).start()
+            break
+        except OSError:
+            if time.time() > deadline:
+                raise
+            time.sleep(0.05)
+    try:
+        assert c.call("echo", a=2)["a"] == 2
+    finally:
+        c.close()
+        srv2.stop()
+
+
+def test_rpc_replay_suppression_applies_mutations_once():
+    srv, calls = _echo_server()
+    try:
+        c = RpcClient("127.0.0.1", srv.port, timeout=5.0, retries=0)
+        r1 = c.call("bump", _mutating=True, tag="a")
+        assert (r1["n"], calls["n"]) == (1, 1)
+        # replay the exact same (client, seq) — as a retry after a lost
+        # reply would: the cached ack comes back, the handler does NOT run
+        payload = wire.encode({"op": "bump", "args": {"tag": "a"},
+                               "seq": 1, "client": c._client_id})
+        reply = wire.decode(srv._dispatch(payload))
+        assert reply["ok"]["n"] == 1
+        assert calls["n"] == 1                        # not re-applied
+        # a NEW seq applies normally
+        assert c.call("bump", _mutating=True)["n"] == 2
+        assert calls["n"] == 2
+        c.close()
+    finally:
+        srv.stop()
+
+
+def test_rpc_concurrent_clients():
+    srv, calls = _echo_server()
+    errs = []
+
+    def worker(i):
+        try:
+            c = RpcClient("127.0.0.1", srv.port, timeout=10.0, retries=0)
+            for j in range(20):
+                out = c.call("echo", i=i, j=j)
+                assert (out["i"], out["j"]) == (i, j)
+            c.close()
+        except Exception as e:                        # noqa: BLE001
+            errs.append(e)
+
+    try:
+        ts = [threading.Thread(target=worker, args=(i,)) for i in range(4)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        assert not errs
+    finally:
+        srv.stop()

@@ -1,0 +1,308 @@
+"""Multi-process embedding PS (repro/net): training over RemoteBackend /
+RemoteShardedBackend against threaded PS servers — bit-exactness with the
+in-process backends across sync/hybrid/async x dense/host_lru, the
+pipelined engine at max_inflight=1, the lossy wire vs CompressedWireBackend,
+checkpoint byte-compat both directions, heartbeat failure detection, and
+elastic kill -> reshard -> join membership changes."""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core import adapters
+from repro.core.embedding_ps import EmbeddingSpec
+from repro.core.hybrid import PersiaTrainer, TrainMode
+from repro.core.pipeline import PipelinedTrainer
+from repro.data.ctr import CTRDataset
+from repro.net import (ClusterDeadError, ElasticPSCluster, PSMember,
+                       PSUnavailableError, RemoteBackend,
+                       RemoteShardedBackend, connect_remote_backends,
+                       is_ps_failure)
+from repro.net.ps_server import PSServer, read_spool
+from repro.optim.optimizers import OptConfig
+
+F, RPF, D = 2, 64, 8
+
+CFG = ModelConfig(name="rps", arch_type="recsys", n_id_fields=F,
+                  ids_per_field=3, emb_dim=D, emb_rows=F * RPF,
+                  n_dense_features=4, mlp_dims=(16,), n_tasks=1)
+DS = CTRDataset("rps", n_rows=F * RPF, n_fields=F, ids_per_field=3,
+                n_dense=4)
+
+
+def _batches(n, batch=16, seed=0):
+    it = DS.sampler(batch, seed=seed)
+    return [{k: jnp.asarray(v) for k, v in next(it).items()}
+            for _ in range(n)]
+
+
+def _trainer(backend="dense", cache_rows=None, mode=None, tau=2):
+    coll = adapters.ctr_collection(CFG, lr=5e-2, field_rows=DS.field_rows())
+    if backend != "dense":
+        coll = coll.with_backend(backend, cache_rows)
+    ad = adapters.recsys_adapter(CFG, field_rows=DS.field_rows(),
+                                 collection=coll)
+    return PersiaTrainer(ad, mode or TrainMode.hybrid(tau),
+                         OptConfig(kind="adam", lr=5e-3))
+
+
+@pytest.fixture
+def servers():
+    """Threaded PS servers with per-server spool dirs; killed/stopped at
+    teardown."""
+    started = []
+
+    def make(n, spool_root=None):
+        for i in range(n):
+            sd = None
+            if spool_root is not None:
+                sd = os.path.join(str(spool_root), f"ps{i}")
+            started.append(PSServer(spool_dir=sd).start())
+        return started[-n:]
+
+    yield make
+    for s in started:
+        s.stop()
+
+
+def _endpoints(srvs):
+    return [("127.0.0.1", s.port) for s in srvs]
+
+
+def _probe_all_rows(trainer, state, chunk=8):
+    out = {}
+    for n in trainer.collection.names:
+        bk = trainer.backends[n]
+        rows = []
+        for lo in range(0, RPF, chunk):
+            ids = jnp.arange(lo, min(lo + chunk, RPF), dtype=jnp.int32)
+            st, dev = bk.prepare(state.emb[n], ids)
+            state.emb = {**state.emb, n: st}
+            acts, _ = bk.lookup(st, dev)
+            rows.append(np.asarray(acts))
+        out[n] = np.concatenate(rows)
+    return out
+
+
+def _run(trainer, batches, endpoints=None, lossy=None):
+    if endpoints is not None:
+        connect_remote_backends(trainer, endpoints, lossy=lossy)
+    state = trainer.init(jax.random.PRNGKey(0), batches[0])
+    metrics = {}
+    for b in batches:
+        state, metrics = trainer.decomposed_step(state, b)
+    return state, metrics
+
+
+# ---------------------------------------------------------------------------
+# bit-exactness: remote == in-process, per mode x backend
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", [TrainMode.sync(), TrainMode.hybrid(2),
+                                  TrainMode.async_(2, 2)],
+                         ids=["sync", "hybrid", "async"])
+@pytest.mark.parametrize("backend,cache", [("dense", None),
+                                           ("host_lru", 48)])
+def test_remote_training_bit_exact(servers, mode, backend, cache):
+    bs = _batches(3)
+    t_ref = _trainer(backend, cache, mode=mode)
+    ref, m_ref = _run(t_ref, bs)
+    t = _trainer(backend, cache, mode=mode)
+    st, m = _run(t, bs, endpoints=_endpoints(servers(2)))
+    assert np.float32(m["loss"]) == np.float32(m_ref["loss"])
+    assert jax.tree.all(jax.tree.map(
+        lambda a, b: np.array_equal(np.asarray(a), np.asarray(b)),
+        st.dense, ref.dense))
+    # the full logical tables agree row for row
+    rows_ref = _probe_all_rows(t_ref, ref)
+    rows = _probe_all_rows(t, st)
+    for n in rows:
+        np.testing.assert_array_equal(rows[n], rows_ref[n])
+
+
+def test_remote_pipelined_inflight1_bit_exact(servers):
+    bs = _batches(4)
+    t0 = _trainer("host_lru", 48)
+    s0 = t0.init(jax.random.PRNGKey(0), bs[0])
+    s0, ms0 = PipelinedTrainer(t0, max_inflight=1).run(s0, iter(bs))
+    t1 = _trainer("host_lru", 48)
+    connect_remote_backends(t1, _endpoints(servers(2)))
+    s1 = t1.init(jax.random.PRNGKey(0), bs[0])
+    s1, ms1 = PipelinedTrainer(t1, max_inflight=1).run(s1, iter(bs))
+    assert np.float32(ms1[-1]["loss"]) == np.float32(ms0[-1]["loss"])
+
+
+def test_remote_sharded_matches_inprocess_sharded(servers):
+    bs = _batches(3)
+    coll = adapters.ctr_collection(CFG, lr=5e-2, field_rows=DS.field_rows())
+    ad = adapters.recsys_adapter(CFG, field_rows=DS.field_rows(),
+                                 collection=coll.with_shards(2))
+    t0 = PersiaTrainer(ad, TrainMode.hybrid(2), OptConfig(kind="adam",
+                                                          lr=5e-3))
+    s0, m0 = _run(t0, bs)
+    t1 = _trainer("dense")
+    s1, m1 = _run(t1, bs, endpoints=_endpoints(servers(2)))
+    assert np.float32(m1["loss"]) == np.float32(m0["loss"])
+
+
+def test_remote_lossy_single_endpoint_matches_compressed_wire(servers):
+    bs = _batches(3)
+    _, m0 = _run(_trainer("dense+compressed"), bs)
+    t1 = _trainer("dense+compressed")      # suffix selects the lossy wire
+    (ep,) = _endpoints(servers(1))
+    _, m1 = _run(t1, bs, endpoints=[ep])
+    assert isinstance(t1.backends[t1.collection.names[0]], RemoteBackend)
+    assert np.float32(m1["loss"]) == np.float32(m0["loss"])
+    # and the lossy wire differs from the raw one (it really compressed)
+    t2 = _trainer("dense")
+    _, m2 = _run(t2, bs, endpoints=[ep])
+    assert np.float32(m2["loss"]) != np.float32(m1["loss"])
+
+
+# ---------------------------------------------------------------------------
+# checkpoints: remote <-> in-process byte compatibility
+# ---------------------------------------------------------------------------
+
+def test_remote_checkpoint_restores_in_process_and_back(servers, tmp_path):
+    from repro.checkpoint.ckpt import checkpoint_shard_layout
+    bs = _batches(3)
+    t0 = _trainer("dense")
+    s0, _ = _run(t0, bs, endpoints=_endpoints(servers(2)))
+    t0.save(str(tmp_path / "remote_ck"), s0)
+    assert checkpoint_shard_layout(str(tmp_path / "remote_ck")) == \
+        {n: 2 for n in t0.collection.names}
+    # a shard-tagged remote checkpoint restores into an IN-PROCESS trainer
+    coll = adapters.ctr_collection(CFG, lr=5e-2, field_rows=DS.field_rows())
+    ad = adapters.recsys_adapter(CFG, field_rows=DS.field_rows(),
+                                 collection=coll.with_shards(2))
+    t1 = PersiaTrainer(ad, TrainMode.hybrid(2), OptConfig(kind="adam",
+                                                          lr=5e-3))
+    t1.init(jax.random.PRNGKey(1), bs[0])
+    s1 = t1.restore(str(tmp_path / "remote_ck"))
+    # reference: the same run fully in process
+    t2 = PersiaTrainer(
+        adapters.recsys_adapter(CFG, field_rows=DS.field_rows(),
+                                collection=coll.with_shards(2)),
+        TrainMode.hybrid(2), OptConfig(kind="adam", lr=5e-3))
+    s2, _ = _run(t2, bs)
+    rows1, rows2 = _probe_all_rows(t1, s1), _probe_all_rows(t2, s2)
+    for n in rows1:
+        np.testing.assert_array_equal(rows1[n], rows2[n])
+    # ... and an in-process checkpoint restores into a REMOTE trainer
+    t2.save(str(tmp_path / "local_ck"), s2)
+    t3 = _trainer("dense")
+    connect_remote_backends(t3, _endpoints(servers(2)))
+    t3.init(jax.random.PRNGKey(2), bs[0])
+    s3 = t3.restore(str(tmp_path / "local_ck"))
+    rows3 = _probe_all_rows(t3, s3)
+    for n in rows3:
+        np.testing.assert_array_equal(rows3[n], rows2[n])
+
+
+# ---------------------------------------------------------------------------
+# validation / failure classification
+# ---------------------------------------------------------------------------
+
+def test_remote_backend_validation(servers):
+    (srv,) = servers(1)
+    spec = EmbeddingSpec(rows=64, dim=8)
+    with pytest.raises(ValueError, match="lossy"):
+        RemoteBackend(dataclasses.replace(spec, backend="dense+compressed"),
+                      ("127.0.0.1", srv.port))
+    with pytest.raises(ValueError, match="RemoteShardedBackend"):
+        RemoteBackend(dataclasses.replace(spec, emb_shards=2),
+                      ("127.0.0.1", srv.port))
+    coll3 = adapters.ctr_collection(
+        CFG, lr=5e-2, field_rows=DS.field_rows()).with_shards(3)
+    ad3 = adapters.recsys_adapter(CFG, field_rows=DS.field_rows(),
+                                  collection=coll3)
+    t = PersiaTrainer(ad3, TrainMode.hybrid(2),
+                      OptConfig(kind="adam", lr=5e-3))
+    with pytest.raises(ValueError, match="emb_shards=3"):
+        connect_remote_backends(t, _endpoints([srv]))
+
+
+def test_unavailable_is_named_and_classified(free_port):
+    spec = EmbeddingSpec(rows=64, dim=8)
+    with pytest.raises(PSUnavailableError) as ei:
+        RemoteBackend(spec, ("127.0.0.1", free_port()), timeout=0.3,
+                      retries=1, backoff=0.01)
+    assert is_ps_failure(ei.value)
+    # ... including when wrapped the way XLA callback errors surface
+    wrapped = RuntimeError(f"callback failed: {ei.value!r}")
+    assert is_ps_failure(wrapped)
+    assert not is_ps_failure(ValueError("unrelated"))
+
+
+# ---------------------------------------------------------------------------
+# heartbeats + elastic membership
+# ---------------------------------------------------------------------------
+
+def test_heartbeat_detects_killed_server(servers):
+    from repro.net.elastic import HeartbeatMonitor
+    srvs = servers(2)
+    mon = HeartbeatMonitor(_endpoints(srvs), interval=0.05,
+                           miss_threshold=2, ping_timeout=0.3)
+    assert mon.probe_once() == set()
+    srvs[1].kill()
+    dead = set()
+    for _ in range(4):
+        dead = mon.probe_once()
+    assert dead == {("127.0.0.1", srvs[1].port)}
+    assert any(e["kind"] == "dead" for e in mon.events)
+
+
+def test_elastic_kill_reshard_join(servers, tmp_path):
+    srvs = servers(3, spool_root=tmp_path)
+    members = [PSMember("127.0.0.1", s.port, spool_dir=s.spool_dir)
+               for s in srvs]
+    bs = _batches(6)
+    t = _trainer("host_lru", 48)
+    cluster = ElasticPSCluster(t, members, max_recoveries=2,
+                               ping_timeout=0.5)
+    cluster.connect(timeout=1.0, retries=1, backoff=0.05)
+    state = t.init(jax.random.PRNGKey(0), bs[0])
+    for b in bs[:2]:
+        state, _ = cluster.step(state, b)
+    # the spool holds every APPLIED put: the kill loses at most in-flight
+    assert read_spool(srvs[0].spool_dir, t.collection.names[0]) is not None
+    srvs[1].kill()
+    for b in bs[2:4]:
+        state, m = cluster.step(state, b)
+    assert len(cluster.members) == 2
+    resh = [e for e in cluster.events if e["kind"] == "reshard"]
+    assert resh and resh[0]["dead"] == [1]
+    assert all(v == 0 for v in resh[0]["lost_rows"].values())
+    assert np.isfinite(float(m["loss"]))
+    # elastic JOIN: a fresh member grows the shard set back to 3
+    new = PSServer(spool_dir=str(tmp_path / "ps_new")).start()
+    srvs.append(new)            # the fixture variable keeps teardown simple
+    state = cluster.join(PSMember("127.0.0.1", new.port,
+                                  spool_dir=str(tmp_path / "ps_new")), state)
+    assert len(cluster.members) == 3
+    for name in t.collection.names:
+        assert t.backends[name].n_shards == 3
+    for b in bs[4:]:
+        state, m = cluster.step(state, b)
+    assert np.isfinite(float(m["loss"]))
+
+
+def test_elastic_all_dead_raises_named_error(servers, tmp_path):
+    srvs = servers(2, spool_root=tmp_path)
+    members = [PSMember("127.0.0.1", s.port, spool_dir=s.spool_dir)
+               for s in srvs]
+    bs = _batches(2)
+    t = _trainer("dense")
+    cluster = ElasticPSCluster(t, members, max_recoveries=1,
+                               ping_timeout=0.3)
+    cluster.connect(timeout=0.5, retries=1, backoff=0.02)
+    state = t.init(jax.random.PRNGKey(0), bs[0])
+    state, _ = cluster.step(state, bs[0])
+    for s in srvs:
+        s.kill()
+    with pytest.raises(ClusterDeadError):
+        cluster.step(state, bs[1])
