@@ -12,6 +12,7 @@ the dry-run artifacts when present).
   shard_scaling §4.1           — prepare fault-in latency vs PS shards
   dedup         §4.2.3         — worker-side batch dedup vs occurrence path
   remote_ps     §4.1           — in-process vs multi-process PS, wire bytes
+  serving_latency §1/§4        — online serving p50/p99/QPS vs micro-batch
 """
 from __future__ import annotations
 
@@ -23,7 +24,7 @@ import traceback
 
 SUITES = ["compression", "scalability", "capacity", "convergence",
           "staleness", "end_to_end", "pipeline", "shard_scaling", "dedup",
-          "remote_ps"]
+          "remote_ps", "serving_latency"]
 
 
 def main() -> None:
@@ -51,6 +52,8 @@ def main() -> None:
                 kwargs["steps"] = 5
             if args.fast and name == "remote_ps":
                 kwargs["steps"] = 5
+            if args.fast and name == "serving_latency":
+                kwargs["requests"] = 64
             if args.fast and name == "end_to_end":
                 kwargs["target"] = 0.60
             rows = mod.run(**kwargs)

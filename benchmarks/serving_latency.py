@@ -1,0 +1,174 @@
+"""Serving latency benchmark: micro-batching vs single-request dispatch.
+
+Measures the p50/p99 latency and sustained QPS of the online serving
+service (repro.serving) across the two latency-budget knobs:
+
+* ``single``           — max_batch=1 (every request is its own dispatch;
+                         the no-batching baseline);
+* ``batchN_waitW``     — micro-batching at flush size N / wait budget W;
+* ``train_concurrent`` — the best batched config while a trainer thread
+                         steps the SAME backend under the state cell lock
+                         (the honest serve-while-train number).
+
+``--check`` pins the tentpole claim: micro-batching must clear >= 2x the
+single-request QPS while holding p99 under ``--p99-budget-ms``, and the
+concurrent run must stay within the staleness bound (sync tables read 0
+stale steps).
+
+    PYTHONPATH=src python benchmarks/serving_latency.py --check --fast
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import threading
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.cluster import small_ctr_trainer
+from repro.serving import (ServingConfig, ServingService, StateCell,
+                           TrafficModel)
+
+CONFIGS = [(4, 2.0), (8, 2.0), (16, 5.0)]   # (max_batch, max_wait_ms)
+
+
+def _service(trainer, state, max_batch, max_wait_ms):
+    cell = StateCell(state, 0)
+    return cell, ServingService(
+        trainer, cell, ServingConfig(max_batch=max_batch,
+                                     max_wait_ms=max_wait_ms))
+
+
+def _drive(svc, reqs, n_threads: int = 4):
+    """Hammer the service from ``n_threads`` closed-loop clients; returns
+    the service's own metrics dict."""
+    chunk = max(len(reqs) // n_threads, 1)
+
+    def worker(lo):
+        for r in reqs[lo: lo + chunk]:
+            svc.predict(r)
+
+    threads = [threading.Thread(target=worker, args=(i * chunk,))
+               for i in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    return svc.metrics()
+
+
+def run(requests: int = 256, steps: int = 0, results: dict | None = None):
+    """benchmarks/run.py entry — CSV rows (name, us, derived).
+
+    ``steps`` > 0 adds the serve-while-train row with that many concurrent
+    trainer steps (0 sizes it off the request count)."""
+    trainer, ds = small_ctr_trainer(mode="sync", backend="host_lru")
+    sampler = ds.sampler(16, seed=0)
+    first = {k: jnp.asarray(v) for k, v in next(sampler).items()}
+    state = trainer.init(jax.random.PRNGKey(0), first)
+    traffic = TrafficModel.for_dataset(ds, n_users=10_000)
+    reqs = [r for _, r in traffic.requests(requests, seed=1)]
+    warm = [r for _, r in traffic.requests(
+        max(requests // 8, 8), seed=2)]
+
+    rows, out = [], {}
+
+    def measure(name, max_batch, max_wait_ms, train_steps=0):
+        cell, svc = _service(trainer, state, max_batch, max_wait_ms)
+        with svc:
+            _drive(svc, warm)              # compile + cache warmup
+        cell, svc = _service(trainer, state, max_batch, max_wait_ms)
+        trainer_thread = None
+        if train_steps:
+            def train_loop():
+                s = state
+                for t in range(train_steps):
+                    b = {k: jnp.asarray(v)
+                         for k, v in next(sampler).items()}
+                    with cell.lock:
+                        s, _ = trainer.step(s, b)
+                        cell.publish(s, t + 1)
+            trainer_thread = threading.Thread(target=train_loop)
+        with svc:
+            if trainer_thread is not None:
+                trainer_thread.start()
+            m = _drive(svc, reqs)
+            if trainer_thread is not None:
+                trainer_thread.join()
+        out[name] = m
+        stale = max((v for k, v in m.items()
+                     if k.endswith("/stale_steps")), default=0.0)
+        rows.append((
+            f"serving_latency/{name}",
+            1e6 / max(m["serving/qps"], 1e-9),
+            f"qps={m['serving/qps']:.1f} p50={m['serving/p50_ms']:.2f}ms "
+            f"p99={m['serving/p99_ms']:.2f}ms "
+            f"fill={m.get('serving/field_00/batch_fill', 0.0):.2f} "
+            f"stale_max={stale:.0f}"))
+        return m
+
+    measure("single", 1, 0.0)
+    for mb, mw in CONFIGS:
+        measure(f"batch{mb}_wait{mw:g}", mb, mw)
+    best = max((n for n in out if n.startswith("batch")),
+               key=lambda n: out[n]["serving/qps"])
+    mb, mw = next((c for c in CONFIGS
+                   if f"batch{c[0]}_wait{c[1]:g}" == best))
+    measure("train_concurrent", mb, mw,
+            train_steps=steps or max(requests // 32, 4))
+
+    if results is not None:
+        results.update(out)
+        results["best"] = best
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=256)
+    ap.add_argument("--steps", type=int, default=0,
+                    help="concurrent trainer steps for the serve-while-"
+                         "train row (0 = requests/32)")
+    ap.add_argument("--fast", action="store_true",
+                    help="CI smoke sizing")
+    ap.add_argument("--p99-budget-ms", type=float, default=250.0)
+    ap.add_argument("--check", action="store_true",
+                    help="exit nonzero unless micro-batching >= 2x single-"
+                         "request QPS at bounded p99, and the concurrent "
+                         "run holds the sync staleness bound")
+    args = ap.parse_args()
+    requests = 64 if args.fast else args.requests
+    results: dict = {}
+    rows = run(requests=requests, steps=args.steps, results=results)
+    print("name,us_per_call,derived")
+    for n, us, derived in rows:
+        print(f"{n},{us:.1f},{derived}")
+    if args.check:
+        single = results["single"]["serving/qps"]
+        best = results[results["best"]]
+        speedup = best["serving/qps"] / max(single, 1e-9)
+        conc = results["train_concurrent"]
+        stale = max((v for k, v in conc.items()
+                     if k.endswith("/stale_steps")), default=0.0)
+        fails = []
+        if speedup < 2.0:
+            fails.append(f"micro-batching QPS {best['serving/qps']:.1f} < "
+                         f"2x single-request {single:.1f}")
+        if best["serving/p99_ms"] > args.p99_budget_ms:
+            fails.append(f"p99 {best['serving/p99_ms']:.1f}ms exceeds "
+                         f"budget {args.p99_budget_ms:.0f}ms")
+        if stale > 0:
+            fails.append(f"sync tables read {stale:.0f} stale steps "
+                         "during concurrent training (bound is 0)")
+        if fails:
+            for f in fails:
+                print(f"FAIL: {f}", file=sys.stderr)
+            raise SystemExit(1)
+        print(f"OK: batching {speedup:.1f}x single-request QPS, p99 "
+              f"{best['serving/p99_ms']:.1f}ms <= "
+              f"{args.p99_budget_ms:.0f}ms, concurrent stale_max=0")
+
+
+if __name__ == "__main__":
+    main()

@@ -145,6 +145,34 @@ class EmbeddingBackend:
         the per-unique occurrence counts for traffic accounting."""
         return state, ids
 
+    def read_rows(self, state, ids):
+        """Serve-path read: LOGICAL ids -> ``(rows, info)`` where ``rows``
+        is fp32 of shape ``ids.shape + (dim,)`` and ``info`` carries the
+        read gauges ``reads`` (unique ids resolved), ``hits`` (served from
+        device-resident rows) and ``misses`` (served from the host tier).
+
+        Unlike ``prepare`` + ``lookup`` this is **read-only**: no row is
+        faulted into the device cache, no slot is evicted, no host
+        bookkeeping changes — so a serving thread can call it concurrently
+        with a trainer stepping on the same backend. Host-cached
+        implementations resolve residency against the *caller's* state
+        snapshot (whose table and slot map can never desync), take the
+        backend lock for the host-tier reads, and pin the slots they
+        gather from so a concurrent fault-in never recycles a row
+        mid-inference. Invalid ids (< 0 or >= rows) read as zero rows.
+
+        The device-resident default gathers through the backend's own
+        lookup (every read is a hit)."""
+        if self.requires_prepare:
+            raise NotImplementedError
+        arr = np.asarray(ids, np.int64)
+        acts, _ = self._lookup_flat(state, jnp.asarray(arr, jnp.int32))
+        flat = arr.reshape(-1)
+        n = int(np.unique(flat[(flat >= 0) & (flat < self.spec.rows)]).size)
+        rows = np.asarray(acts.astype(jnp.float32)).reshape(
+            arr.shape + (self.spec.dim,))
+        return rows, {"reads": n, "hits": n, "misses": 0}
+
     # -- worker-side dedup sizing --------------------------------------------
 
     def dedup_rows(self) -> int:
@@ -600,6 +628,69 @@ class HostLRUBackend(EmbeddingBackend):
     def reset_pins(self):
         with self._lock:
             self._pin_count[:] = 0
+
+    # -- serve-path read (read-only, thread-safe) ----------------------------
+
+    def read_rows(self, state, ids):
+        """Read rows without faulting them in (see the base-class doc).
+
+        Residency is resolved against the CALLER's state snapshot — its
+        ``slot_ids`` array, not the backend's live slot map — so the gather
+        and the residency decision come from the same immutable snapshot
+        and a concurrent trainer fault-in/evict can never make this read
+        return the wrong row. Misses are read straight from the host store
+        (under the backend lock), quantized through the cache dtype so a
+        served row is bit-identical whether it happens to be cached or
+        not. Hit slots are pinned across the gather: on a server whose
+        state IS mutated in place between ops (repro.net.ps_server), the
+        pin keeps an interleaved fault-in from recycling the slot
+        mid-read."""
+        spec = self.spec
+        arr = np.asarray(ids, np.int64)
+        flat = arr.reshape(-1)
+        valid = (flat >= 0) & (flat < spec.rows)
+        uniq = np.unique(flat[valid])
+        slot_of = np.asarray(state["slot_ids"], np.int64)   # slot -> id
+        if uniq.size:
+            order = np.argsort(slot_of, kind="stable")
+            pos = np.clip(np.searchsorted(slot_of, uniq, sorter=order),
+                          0, self.cache_rows - 1)
+            cand = order[pos]
+            hit = slot_of[cand] == uniq
+        else:
+            cand = np.zeros(0, np.int64)
+            hit = np.zeros(0, bool)
+        hit_slots = cand[hit]
+        missing = uniq[~hit]
+        with self._lock:
+            if missing.size:
+                m_vecs, _ = self.store.read_rows(missing)
+                m_vecs = np.asarray(
+                    jnp.asarray(m_vecs, jnp.float32).astype(spec.dtype)
+                    .astype(jnp.float32))
+            else:
+                m_vecs = np.zeros((0, spec.dim), np.float32)
+            np.add.at(self._pin_count, hit_slots, 1)
+        try:
+            if hit_slots.size:
+                idx = np.zeros(_pow2_bucket(hit_slots.size), np.int64)
+                idx[:hit_slots.size] = hit_slots
+                h_vecs = np.asarray(_gather_rows(
+                    state["table"],
+                    jnp.asarray(idx, jnp.int32)))[:hit_slots.size]
+            else:
+                h_vecs = np.zeros((0, spec.dim), np.float32)
+        finally:
+            self.unpin_slots(hit_slots)
+        rows_u = np.zeros((uniq.size, spec.dim), np.float32)
+        rows_u[hit] = h_vecs
+        rows_u[~hit] = m_vecs
+        out = np.zeros((flat.size, spec.dim), np.float32)
+        if uniq.size:
+            out[valid] = rows_u[np.searchsorted(uniq, flat[valid])]
+        return (out.reshape(arr.shape + (spec.dim,)),
+                {"reads": int(uniq.size), "hits": int(hit_slots.size),
+                 "misses": int(missing.size)})
 
     def dedup_rows(self) -> int:
         # a batch's unique set must fit the device cache (prepare raises
@@ -1131,6 +1222,34 @@ class ShardedBackend(EmbeddingBackend):
                        own * self.stride + local_dev, -1)
         return new_state, jnp.asarray(out.reshape(shape), jnp.int32)
 
+    def read_rows(self, state, ids):
+        """Serve-path read through the routing: every shard reads its own
+        subset concurrently on the router's thread pool (each shard
+        pins/reads under its own lock), and the disjoint per-shard rows
+        are merged back into occurrence order."""
+        spec = self.spec
+        arr = np.asarray(ids, np.int64)
+        flat = arr.reshape(-1)
+        valid = (flat >= 0) & (flat < spec.rows)
+        own_raw, loc = self._routing.shard_and_local(np.where(valid, flat, 0))
+        own = np.where(valid, own_raw, -1)
+
+        def read_one(s):
+            return self.shard_backends[s].read_rows(
+                state[f"s{s}"], np.where(own == s, loc, -1))
+
+        pool = self._ensure_pool()
+        futs = [pool.submit(read_one, s) for s in range(self.n_shards)]
+        out = np.zeros((flat.size, spec.dim), np.float32)
+        info = {"reads": 0, "hits": 0, "misses": 0}
+        for s, f in enumerate(futs):
+            rows, inf = f.result()
+            sel = own == s
+            out[sel] = rows.reshape(-1, spec.dim)[sel]
+            for k in info:
+                info[k] += int(inf.get(k, 0))
+        return out.reshape(arr.shape + (spec.dim,)), info
+
     # -- slot pinning / shard introspection ----------------------------------
 
     def _split_dev(self, dev_ids):
@@ -1350,6 +1469,13 @@ class CompressedWireBackend(EmbeddingBackend):
 
     def prepare(self, state, ids, assume_unique: bool = False, counts=None):
         return self.inner.prepare(state, ids, assume_unique, counts)
+
+    def read_rows(self, state, ids):
+        # serve reads cross the same lossy wire as training lookups
+        rows, info = self.inner.read_rows(state, ids)
+        flat = jnp.asarray(rows.reshape(-1, self.spec.dim))
+        return (np.asarray(self._roundtrip(flat),
+                           np.float32).reshape(rows.shape), info)
 
     def dedup_rows(self) -> int:
         return self.inner.dedup_rows()

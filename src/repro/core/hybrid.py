@@ -478,34 +478,37 @@ class PersiaTrainer:
         _, metrics = self.adapter.loss(state.dense, acts, batch)
         return metrics
 
-    def eval(self, state: TrainState, batch):
-        """Eval on the current tables. For host-backed tables this faults
-        the batch's rows into the device cache first and updates
-        ``state.emb`` IN PLACE (TrainState is mutable) so the caller's
-        state stays consistent with the backend's host-side slot maps.
-        Caveat: if the cache is near capacity, that fault-in can evict
-        slots whose staleness-queue puts are still pending — those puts
-        are then dropped (tolerated, Alg.1 lock-free semantics), so eval
-        on host-backed tables is not perfectly side-effect-free."""
-        state, dev_ids = self._prepare_inplace(state, batch)
-        if self._eval is None:
-            self._eval = jax.jit(self.eval_step)
-        return self._eval(state, batch, dev_ids)
+    def serve_lookup(self, state: TrainState, batch):
+        """Read-path lookup (``EmbeddingBackend.read_rows``): logical ids
+        -> fp32 activations, **without** faulting rows into the device
+        cache or touching any backend host state. Host-tier rows are read
+        straight from the store; residency is resolved against the passed
+        state snapshot, so a serving thread can call this concurrently
+        with a trainer stepping on the same backends. Returns ``(acts,
+        info)`` with per-table ``{reads, hits, misses}`` read gauges."""
+        ids = self.adapter.emb_ids(batch)
+        acts, info = {}, {}
+        for n, a in ids.items():
+            rows, inf = self.backends[n].read_rows(state.emb[n], a)
+            acts[n] = jnp.asarray(rows)
+            info[n] = inf
+        return acts, info
 
-    def _prepare_inplace(self, state: TrainState, batch):
-        """prepare() for read paths that return metrics, not state: the
-        faulted cache arrays are written back into the caller's TrainState."""
-        if not (self._needs_prepare or self._needs_plan):
-            return state, None
-        new_state, dev_ids, _ = self._prepare(state, batch)
-        state.emb = new_state.emb
-        return state, dev_ids
+    def eval(self, state: TrainState, batch):
+        """Eval on the current tables through the read-only serve path.
+        Unlike the pre-serving implementation this never faults rows into
+        the device cache — no state mutation, no evictions, no dropped
+        queued puts — so eval is perfectly side-effect-free on every
+        backend."""
+        acts, _ = self.serve_lookup(state, batch)
+        if self._eval is None:
+            adapter = self.adapter
+            self._eval = jax.jit(
+                lambda dense, acts_, b: adapter.loss(dense, acts_, b)[1])
+        return self._eval(state.dense, acts, batch)
 
     def lookup(self, state: TrainState, batch):
-        state, dev_ids = self._prepare_inplace(state, batch)
-        if dev_ids is None:
-            dev_ids = self.adapter.emb_ids(batch)
-        acts, _ = BK.lookup_all(self.backends, state.emb, dev_ids)
+        acts, _ = self.serve_lookup(state, batch)
         return acts
 
     def predict(self, state: TrainState, batch):

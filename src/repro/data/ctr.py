@@ -20,6 +20,64 @@ import numpy as np
 
 
 @dataclass(frozen=True)
+class PlantedTruth:
+    """The planted logistic ground truth behind a CTR stream: bucket
+    effects over hashed ids + dense-feature effects, squashed through a
+    sigmoid with a negative bias (~25% positives at bias=1.0).
+
+    Shared by the offline sampler and the online click-feedback loop
+    (repro.serving.feedback): both label examples from the SAME model, so
+    a trainer fed served click feedback chases the same target as one fed
+    the offline stream."""
+
+    w_buckets: np.ndarray        # (n_fields, 256) hashed-id bucket effects
+    w_dense: np.ndarray          # (max(n_dense,1), n_tasks)
+    w_field: np.ndarray          # (n_fields, n_tasks)
+    bias: float = 1.0            # prob = sigmoid(sig - bias)
+
+    @staticmethod
+    def from_seed(seed: int, n_fields: int, n_dense: int,
+                  n_tasks: int = 1, bias: float = 1.0) -> "PlantedTruth":
+        # draw order is load-bearing: it reproduces the pre-refactor
+        # sampler's weights bit-for-bit from the same dataset seed
+        truth = np.random.default_rng(seed)
+        return PlantedTruth(
+            w_buckets=truth.standard_normal((n_fields, 256))
+            .astype(np.float32),
+            w_dense=truth.standard_normal((max(n_dense, 1), n_tasks))
+            .astype(np.float32),
+            w_field=truth.standard_normal((n_fields, n_tasks))
+            .astype(np.float32),
+            bias=float(bias))
+
+    @property
+    def n_fields(self) -> int:
+        return int(self.w_buckets.shape[0])
+
+    @property
+    def n_tasks(self) -> int:
+        return int(self.w_field.shape[1])
+
+    def prob(self, ids: np.ndarray, dense: np.ndarray | None = None
+             ) -> np.ndarray:
+        """True click probability for ``ids`` (B, n_fields, L) with -1
+        padding and ``dense`` (B, >= w_dense rows) — (B, n_tasks)."""
+        ids = np.asarray(ids, np.int64)
+        F = self.n_fields
+        mask = ids >= 0
+        bucket = self.w_buckets[np.arange(F)[None, :, None],
+                                np.where(mask, ids, 0) % 256]
+        bucket = np.where(mask, bucket, 0.0)
+        sig = (bucket.sum(-1) @ self.w_field) / np.sqrt(F)
+        nd = self.w_dense.shape[0]
+        if dense is None:
+            dense = np.zeros((ids.shape[0], nd), np.float32)
+        sig = sig + (np.asarray(dense, np.float32)[:, :nd]
+                     @ self.w_dense) / np.sqrt(nd)
+        return 1.0 / (1.0 + np.exp(-(sig - self.bias)))
+
+
+@dataclass(frozen=True)
 class CTRDataset:
     name: str
     n_rows: int                 # total embedding rows (sparse id space)
@@ -41,6 +99,13 @@ class CTRDataset:
         ``adapters.ctr_collection(..., field_rows=...)``."""
         return (self.rows_per_field,) * self.n_fields
 
+    def truth(self) -> PlantedTruth:
+        """The dataset's planted logistic ground truth — keyed to the
+        DATASET seed only, so every stream (offline sampler, online click
+        feedback, any sample seed) labels from the same model."""
+        return PlantedTruth.from_seed(self.seed, self.n_fields,
+                                      self.n_dense, self.n_tasks)
+
     def sampler(self, batch_size: int, *, seed: int | None = None):
         """Infinite generator of batches (online-learning setting, no
         shuffling schema — paper §4.2.4).
@@ -48,16 +113,9 @@ class CTRDataset:
         The planted logistic ground truth is keyed to the DATASET seed only
         — every stream (train, eval, any seed) shares one truth; `seed`
         varies just the samples drawn from it."""
-        truth = np.random.default_rng(self.seed)
+        truth = self.truth()
         rng = np.random.default_rng(self.seed if seed is None else seed)
         rows_per_field = self.rows_per_field
-        # planted logistic model over hashed id buckets + dense features
-        w_buckets = truth.standard_normal((self.n_fields, 256)) \
-            .astype(np.float32)
-        w_dense = truth.standard_normal((max(self.n_dense, 1),
-                                         self.n_tasks)).astype(np.float32)
-        w_field = truth.standard_normal((self.n_fields, self.n_tasks)) \
-            .astype(np.float32)
 
         while True:
             # Zipf-ish ids: rejection-free bounded zipf via inverse-cdf approx
@@ -78,13 +136,7 @@ class CTRDataset:
 
             dense = rng.standard_normal((batch_size, max(self.n_dense, 1))) \
                 .astype(np.float32)
-            # planted signal: bucket effects + dense effects
-            bucket = w_buckets[np.arange(self.n_fields)[None, :, None],
-                               ranks % 256]
-            bucket = np.where(mask, bucket, 0.0)
-            sig = (bucket.sum(-1) @ w_field) / np.sqrt(self.n_fields)
-            sig = sig + (dense @ w_dense) / np.sqrt(max(self.n_dense, 1))
-            prob = 1.0 / (1.0 + np.exp(-(sig - 1.0)))          # ~25% positives
+            prob = truth.prob(ids, dense)                  # ~25% positives
             labels = (rng.random((batch_size, self.n_tasks)) < prob) \
                 .astype(np.float32)
             batch = {"ids": ids.astype(np.int32),

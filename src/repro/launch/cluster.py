@@ -32,6 +32,7 @@ from repro.configs.base import ModelConfig
 from repro.core import adapters
 from repro.core.hybrid import PersiaTrainer, TrainMode
 from repro.data.ctr import CTRDataset
+from repro.launch.shards import apply_backend_choice
 from repro.net.elastic import ElasticPSCluster, PSMember
 from repro.optim.optimizers import OptConfig
 
@@ -93,10 +94,7 @@ def small_ctr_trainer(mode: str = "hybrid", backend: str = "host_lru",
     ds = CTRDataset("cluster", n_rows=fields * rows_per_field,
                     n_fields=fields, ids_per_field=3, n_dense=4)
     coll = adapters.ctr_collection(cfg, lr=5e-2, field_rows=ds.field_rows())
-    if backend.partition("+")[0] != "dense":
-        coll = coll.with_backend(backend, cache_rows)
-    elif backend != "dense":
-        coll = coll.with_backend(backend, None)
+    coll = apply_backend_choice(coll, backend, cache_rows)
     ad = adapters.recsys_adapter(cfg, field_rows=ds.field_rows(),
                                  collection=coll)
     tm = {"sync": TrainMode.sync(), "hybrid": TrainMode.hybrid(tau),

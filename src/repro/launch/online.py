@@ -1,0 +1,220 @@
+"""Online-learning driver: trainer + serving service over ONE backend.
+
+The paper's headline deployment (§1, §4): the recommender serves live
+traffic while the trainer folds the resulting click feedback straight
+back into the same embedding state — serve -> train -> serve, with the
+hybrid algorithm's staleness bound as the consistency contract between
+the two sides. This driver runs that loop on one box:
+
+* a trainer thread stepping the CTR model, preferring fresh feedback
+  batches off the :class:`~repro.serving.feedback.FeedbackQueue` and
+  falling back to the offline sampler when serving hasn't produced a
+  full batch yet (cold start);
+* a :class:`~repro.serving.service.ServingService` micro-batching
+  concurrent client requests against the live ``StateCell`` snapshot;
+* closed-loop client threads replaying Zipf traffic, labeling each
+  served impression through the planted click model, and feeding it back.
+
+With ``--ps k`` the embedding tables live in ``k`` PS processes (the
+multi-process cluster of launch/cluster.py) and BOTH sides go over the
+RPC wire — the serve path reads through the same atomic ``read_rows``
+op the trainer's backend exposes in-process.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.online --steps 50 --clients 2
+    PYTHONPATH=src python -m repro.launch.online --steps 30 --ps 2 \
+        --backend dense --mode sync
+"""
+from __future__ import annotations
+
+import argparse
+import tempfile
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.cluster import small_ctr_trainer, spawn_ps
+from repro.serving import (ClickModel, FeedbackQueue, ServingConfig,
+                           ServingService, StateCell, TrafficGenerator,
+                           TrafficModel)
+
+
+def logloss(p: np.ndarray, y: np.ndarray) -> float:
+    p = np.clip(np.asarray(p, np.float64), 1e-7, 1 - 1e-7)
+    y = np.asarray(y, np.float64)
+    return float(np.mean(-(y * np.log(p) + (1 - y) * np.log(1 - p))))
+
+
+def run_online(steps: int = 50, mode: str = "hybrid",
+               backend: str = "host_lru", tau: int = 2, batch: int = 16,
+               max_batch: int = 8, max_wait_ms: float = 2.0,
+               n_clients: int = 2, requests_per_client: int = 64,
+               qps: float = 0.0, n_users: int = 10_000, n_ps: int = 0,
+               lossy: bool | None = None, seed: int = 0,
+               workdir: str | None = None) -> dict:
+    """Run the closed serve->train->serve loop; returns a summary with
+    trainer throughput, serving latency percentiles, the staleness
+    gauges, and the served-traffic logloss trend (first half vs second
+    half of impressions — online learning should bend it down)."""
+    trainer, ds = small_ctr_trainer(mode=mode, backend=backend, tau=tau,
+                                    seed=seed)
+    members = []
+    try:
+        if n_ps > 0:
+            workdir = workdir or tempfile.mkdtemp(prefix="online_ps_")
+            from repro.net.remote import connect_remote_backends
+            members = [spawn_ps(workdir, i) for i in range(n_ps)]
+            connect_remote_backends(
+                trainer, [(m.host, m.port) for m in members], lossy=lossy)
+
+        sampler = ds.sampler(batch, seed=seed)
+        first = {k: jnp.asarray(v) for k, v in next(sampler).items()}
+        state = trainer.init(jax.random.PRNGKey(seed), first)
+        cell = StateCell(state, 0)
+
+        traffic = TrafficModel.for_dataset(ds, n_users=n_users)
+        click = ClickModel.for_dataset(ds)
+        feedback = FeedbackQueue(batch_size=batch)
+        svc = ServingService(trainer, cell,
+                             ServingConfig(max_batch=max_batch,
+                                           max_wait_ms=max_wait_ms))
+
+        train_log = {"losses": [], "feedback_batches": 0,
+                     "fallback_batches": 0}
+        stop_serving = threading.Event()
+
+        def trainer_loop():
+            s = state
+            for t in range(steps):
+                fb = feedback.next_batch(timeout=0.05)
+                if fb is None:
+                    fb = next(sampler)
+                    train_log["fallback_batches"] += 1
+                else:
+                    train_log["feedback_batches"] += 1
+                b = {k: jnp.asarray(v) for k, v in fb.items()}
+                with cell.lock:
+                    s, m = trainer.step(s, b)
+                    cell.publish(s, t + 1)
+                train_log["losses"].append(float(m.get("loss", np.nan)))
+            stop_serving.set()
+
+        served = []                       # (impression idx, pred, label)
+        served_lock = threading.Lock()
+
+        def client_loop(cid: int):
+            def serve_one(req):
+                pred = svc.predict(req)
+                label = click.click(req)
+                feedback.put(req, label)
+                with served_lock:
+                    served.append((float(pred[0]), float(label[0])))
+
+            if qps > 0:
+                gen = TrafficGenerator(traffic, qps=qps / max(n_clients, 1),
+                                       seed=seed + cid)
+                gen.replay(requests_per_client, serve_one)
+            else:                          # closed loop: as fast as served
+                for _, req in traffic.requests(requests_per_client,
+                                               seed=seed + cid):
+                    if stop_serving.is_set():
+                        break
+                    serve_one(req)
+
+        svc.start()
+        t0 = time.monotonic()
+        threads = [threading.Thread(target=trainer_loop, name="trainer")]
+        threads += [threading.Thread(target=client_loop, args=(c,),
+                                     name=f"client{c}")
+                    for c in range(n_clients)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        dt = time.monotonic() - t0
+        svc.stop()
+
+        half = len(served) // 2
+        p = np.asarray([s[0] for s in served], np.float64)
+        y = np.asarray([s[1] for s in served], np.float64)
+        summary = {
+            "steps": steps,
+            "steps_per_s": steps / max(dt, 1e-9),
+            "loss_first": float(np.nanmean(train_log["losses"][: max(
+                steps // 2, 1)])),
+            "loss_last": float(np.nanmean(train_log["losses"][steps // 2:])),
+            "feedback_batches": train_log["feedback_batches"],
+            "fallback_batches": train_log["fallback_batches"],
+            "served": len(served),
+            "served_logloss_first": logloss(p[:half], y[:half])
+            if half else float("nan"),
+            "served_logloss_last": logloss(p[half:], y[half:])
+            if half else float("nan"),
+            "feedback": feedback.stats,
+            "serving": svc.metrics(),
+        }
+        return summary
+    finally:
+        for m in members:
+            if m.proc is not None and m.proc.poll() is None:
+                m.proc.kill()
+                m.proc.wait()
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="closed-loop online learning: trainer + serving over "
+                    "one embedding backend")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--mode", default="hybrid",
+                    choices=["sync", "hybrid", "async"])
+    ap.add_argument("--backend", default="host_lru",
+                    choices=["dense", "host_lru"])
+    ap.add_argument("--tau", type=int, default=2)
+    ap.add_argument("--batch", type=int, default=16,
+                    help="training batch size (feedback batches match)")
+    ap.add_argument("--max-batch", type=int, default=8,
+                    help="serving micro-batch flush size")
+    ap.add_argument("--max-wait-ms", type=float, default=2.0,
+                    help="serving micro-batch latency budget")
+    ap.add_argument("--clients", type=int, default=2)
+    ap.add_argument("--requests", type=int, default=64,
+                    help="requests per client thread")
+    ap.add_argument("--qps", type=float, default=0.0,
+                    help="open-loop target QPS across clients "
+                         "(0 = closed loop)")
+    ap.add_argument("--users", type=int, default=10_000)
+    ap.add_argument("--ps", type=int, default=0,
+                    help="embedding-PS processes (0 = in-process backend)")
+    ap.add_argument("--lossy", action="store_true", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    res = run_online(steps=args.steps, mode=args.mode, backend=args.backend,
+                     tau=args.tau, batch=args.batch,
+                     max_batch=args.max_batch, max_wait_ms=args.max_wait_ms,
+                     n_clients=args.clients,
+                     requests_per_client=args.requests, qps=args.qps,
+                     n_users=args.users, n_ps=args.ps, lossy=args.lossy,
+                     seed=args.seed)
+    sv = res["serving"]
+    print(f"online: {res['steps']} steps @ {res['steps_per_s']:.2f} "
+          f"steps/s, {res['served']} impressions served "
+          f"({res['feedback_batches']} feedback / "
+          f"{res['fallback_batches']} fallback batches)")
+    print(f"  train loss {res['loss_first']:.4f} -> {res['loss_last']:.4f}")
+    print(f"  served logloss {res['served_logloss_first']:.4f} -> "
+          f"{res['served_logloss_last']:.4f}")
+    print(f"  serving p50 {sv['serving/p50_ms']:.2f}ms "
+          f"p99 {sv['serving/p99_ms']:.2f}ms qps {sv['serving/qps']:.1f}")
+    stale = {k.split("/")[1]: v for k, v in sv.items()
+             if k.endswith("/stale_steps")}
+    print(f"  staleness gauges: {stale}")
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -9,7 +9,6 @@ Usage:
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax
@@ -18,8 +17,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core.backend import create_backend
-from repro.core.embedding_ps import EmbeddingSpec
-from repro.launch.shards import parse_emb_shards, shards_for_table
+from repro.launch.shards import build_embedding_spec
 from repro.models import transformer as T
 
 VOCAB_TABLE = "vocab"      # serve's sole table name in --emb-shards pairs
@@ -29,13 +27,9 @@ def serve(cfg, batch=4, prompt_len=32, gen=16, seed=0, temperature=0.0,
           emb_backend="dense", cache_rows=0, emb_shards=1):
     key = jax.random.PRNGKey(seed)
     dense = T.init_dense(cfg, key)
-    shards = shards_for_table(parse_emb_shards(emb_shards), VOCAB_TABLE)
-    spec = EmbeddingSpec(rows=cfg.vocab_size, dim=cfg.d_model,
-                         backend=emb_backend,
-                         emb_shards=max(int(shards), 1))
-    if emb_backend.startswith("host_lru"):
-        spec = dataclasses.replace(
-            spec, cache_rows=cache_rows or max(1024, cfg.vocab_size // 8))
+    spec = build_embedding_spec(cfg.vocab_size, cfg.d_model,
+                                backend=emb_backend, cache_rows=cache_rows,
+                                emb_shards=emb_shards, table=VOCAB_TABLE)
     backend = create_backend(spec)
     # same key fan-out as EmbeddingCollection.init (one table -> keys[0])
     emb = backend.init(jax.random.split(key, 1)[0])

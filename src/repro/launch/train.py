@@ -86,7 +86,8 @@ def _pipelined_span(engine, state, it, n):
 
 # the --emb-shards grammar is shared across launchers (train/serve/cluster);
 # re-exported here because this was its original home
-from repro.launch.shards import parse_emb_shards  # noqa: E402,F401
+from repro.launch.shards import (  # noqa: E402,F401
+    apply_backend_choice, default_cache_rows, parse_emb_shards)
 
 
 def _ctr_collection_for(cfg, ds, args):
@@ -96,9 +97,9 @@ def _ctr_collection_for(cfg, ds, args):
     router of core/backend.py)."""
     coll = adapters.ctr_collection(cfg, lr=args.emb_lr,
                                    field_rows=ds.field_rows())
-    if args.emb_backend != "dense":
-        cache = args.cache_rows or max(1024, ds.rows_per_field // 8)
-        coll = coll.with_backend(args.emb_backend, cache)
+    coll = apply_backend_choice(
+        coll, args.emb_backend,
+        default_cache_rows(ds.rows_per_field, args.cache_rows))
     shards = parse_emb_shards(args.emb_shards)
     if shards != 1:
         coll = coll.with_shards(shards)
@@ -207,10 +208,9 @@ def train_lm(args):
     import dataclasses
     cfg = small_lm_cfg()
     adapter = adapters.lm_adapter(cfg, lr=args.emb_lr)
-    coll = adapter.collection
-    if args.emb_backend != "dense":
-        cache = args.cache_rows or max(1024, cfg.vocab_size // 8)
-        coll = coll.with_backend(args.emb_backend, cache)
+    coll = apply_backend_choice(
+        adapter.collection, args.emb_backend,
+        default_cache_rows(cfg.vocab_size, args.cache_rows))
     shards = parse_emb_shards(args.emb_shards)
     if shards != 1:
         coll = coll.with_shards(shards)

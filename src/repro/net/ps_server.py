@@ -69,6 +69,7 @@ class PSServer:
             "queue_init": self._op_queue_init,
             "prepare": self._op_prepare,
             "lookup": self._op_lookup,
+            "read_rows": self._op_read_rows,
             "put": self._op_put,
             "hybrid": self._op_hybrid,
             "pin": self._op_pin,
@@ -234,6 +235,21 @@ class PSServer:
             acts, _ = ent["backend"]._lookup_flat(
                 ent["state"], jnp.asarray(np.asarray(dev, np.int32)))
             return {"acts": self._acts_out(ent, np.asarray(acts, np.float32))}
+
+    def _op_read_rows(self, table: str, ids):
+        """Serve-path read: one atomic RPC resolving logical ids against
+        the live state under the server lock (read-only — NOT in
+        MUTATING_OPS, so a retried read never perturbs replay
+        suppression). A single op replaces the prepare+lookup pair a
+        client would otherwise need, closing the window where a
+        concurrent trainer fault-in could recycle a slot between the two
+        RPCs."""
+        with self._lock:
+            ent = self._entry(table)
+            rows, info = ent["backend"].read_rows(ent["state"],
+                                                  np.asarray(ids, np.int64))
+            return {"acts": self._acts_out(ent, np.asarray(rows, np.float32)),
+                    **info}
 
     def _op_put(self, table: str, dev, grads, unique: bool = False):
         with self._lock:

@@ -155,6 +155,19 @@ class RemoteBackend(EmbeddingBackend):
         self.faults, self.hits = int(rep["faults"]), int(rep["hits"])
         return state, jnp.asarray(rep["dev"], jnp.int32)
 
+    def read_rows(self, state, ids):
+        """Serve-path read as ONE RPC, executed atomically under the
+        server's lock — no prepare/lookup pair for a concurrent trainer
+        fault-in to interleave with. Blocks on the version scalar first so
+        the read sees every put dispatched against ``state``."""
+        self.sync(state)
+        arr = np.asarray(ids, np.int64)
+        rep = self._call("read_rows", ids=arr)
+        acts = wire.lossy_unpack(rep["acts"]).astype(np.float32, copy=False)
+        return (acts.reshape(arr.shape + (self.spec.dim,)),
+                {"reads": int(rep["reads"]), "hits": int(rep["hits"]),
+                 "misses": int(rep["misses"])})
+
     def dedup_rows(self) -> int:
         return min(self.spec.rows, self._dev_rows())
 

@@ -1,0 +1,28 @@
+"""Online-learning serving subsystem (paper §1/§3: the recommender serves
+live traffic while the trainer continuously updates the same embedding
+state, bounded staleness as the native consistency model).
+
+Four pieces close the serve -> train -> serve loop:
+
+* :class:`~repro.serving.service.ServingService` — micro-batched inference
+  against the live training backend (flush on ``max_batch`` or
+  ``max_wait_ms``), reading embeddings through the read-only
+  ``EmbeddingBackend.read_rows`` path.
+* :class:`~repro.serving.service.StateCell` — the shared trainer-state
+  cell both sides synchronize on.
+* :mod:`repro.serving.traffic` — power-law (Zipf) traffic over a simulated
+  million-user id distribution, with configurable QPS and arrival jitter.
+* :mod:`repro.serving.feedback` — click labels from the planted logistic
+  ground truth, queued back into the trainer's input stream.
+
+``repro.launch.online`` drives the whole loop; ``benchmarks/
+serving_latency.py`` pins p50/p99/QPS vs the latency-budget knobs.
+"""
+from repro.serving.feedback import ClickModel, FeedbackQueue
+from repro.serving.service import ServingConfig, ServingService, StateCell
+from repro.serving.traffic import TrafficGenerator, TrafficModel
+
+__all__ = [
+    "ClickModel", "FeedbackQueue", "ServingConfig", "ServingService",
+    "StateCell", "TrafficGenerator", "TrafficModel",
+]

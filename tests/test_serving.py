@@ -1,0 +1,428 @@
+"""Online serving subsystem (repro/serving): the read-only ``read_rows``
+path vs the training lookup path, micro-batching bit-exactness and flush
+triggers, serve-while-train safety (a reader thread hammering lookups
+during training must see exactly the serial trajectory), the staleness
+gauge bounds (sync = 0, hybrid <= tau), the Zipf traffic model, the click
+feedback queue, and the closed serve -> train -> serve loop beating a
+frozen-model control on the same traffic."""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core import adapters
+from repro.core.hybrid import PersiaTrainer, TrainMode
+from repro.data.ctr import CTRDataset
+from repro.optim.optimizers import OptConfig
+from repro.serving import (ClickModel, FeedbackQueue, ServingConfig,
+                           ServingService, StateCell, TrafficModel)
+from repro.serving.service import queue_lag
+
+F, RPF, D = 2, 64, 8
+
+CFG = ModelConfig(name="srv", arch_type="recsys", n_id_fields=F,
+                  ids_per_field=3, emb_dim=D, emb_rows=F * RPF,
+                  n_dense_features=4, mlp_dims=(16,), n_tasks=1)
+DS = CTRDataset("srv", n_rows=F * RPF, n_fields=F, ids_per_field=3,
+                n_dense=4)
+
+BACKENDS = ["dense", "host_lru", "sharded", "dense+compressed",
+            "host_lru+compressed"]
+
+
+def _trainer(backend="dense", mode=None, tau=2, cache_rows=40):
+    coll = adapters.ctr_collection(CFG, lr=5e-2, field_rows=DS.field_rows())
+    if backend == "sharded":
+        coll = coll.with_shards(2)
+    elif backend != "dense":
+        coll = coll.with_backend(backend, cache_rows
+                                 if "host_lru" in backend else None)
+    ad = adapters.recsys_adapter(CFG, field_rows=DS.field_rows(),
+                                 collection=coll)
+    return PersiaTrainer(ad, mode or TrainMode.hybrid(tau),
+                         OptConfig(kind="adam", lr=5e-3))
+
+
+def _batches(n, batch=16, seed=0):
+    it = DS.sampler(batch, seed=seed)
+    return [{k: jnp.asarray(v) for k, v in next(it).items()}
+            for _ in range(n)]
+
+
+def _np_acts(acts):
+    return {n: np.asarray(a) for n, a in acts.items()}
+
+
+# ---------------------------------------------------------------------------
+# read_rows: the read-only serve path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_read_rows_matches_training_lookup(backend):
+    """Serve reads return bit-exactly what the training lookup path
+    returns for resident rows — same quantization, same masking."""
+    trainer = _trainer(backend)
+    bs = _batches(3)
+    state = trainer.init(jax.random.PRNGKey(0), bs[0])
+    for b in bs:
+        state, _ = trainer.step(state, b)
+    probe = bs[1]
+    # train path: prepare (faults rows in) + lookup
+    want = {}
+    for n, ids in trainer.adapter.emb_ids(probe).items():
+        bk = trainer.backends[n]
+        st, dev = bk.prepare(state.emb[n], ids)
+        state.emb = {**state.emb, n: st}
+        acts, _ = bk.lookup(st, dev)
+        want[n] = np.asarray(acts, np.float32)
+    acts, info = trainer.serve_lookup(state, probe)
+    for i, n in enumerate(trainer.collection.names):
+        np.testing.assert_array_equal(np.asarray(acts[n]), want[n])
+        fid = np.asarray(probe["ids"])[:, i]
+        uniq = np.unique(fid[fid >= 0]).size
+        assert info[n]["reads"] == uniq
+        assert info[n]["hits"] + info[n]["misses"] == info[n]["reads"]
+
+
+def test_read_rows_padding_and_out_of_range():
+    trainer = _trainer("dense")
+    b = _batches(1)[0]
+    state = trainer.init(jax.random.PRNGKey(0), b)
+    name = trainer.collection.names[0]
+    bk = trainer.backends[name]
+    rows, info = bk.read_rows(state.emb[name],
+                              np.array([[0, -1, RPF + 5]], np.int64))
+    assert rows.shape == (1, 3, D)
+    np.testing.assert_array_equal(rows[0, 1], np.zeros(D, np.float32))
+    np.testing.assert_array_equal(rows[0, 2], np.zeros(D, np.float32))
+    assert info["reads"] == 1
+
+
+def test_read_rows_leaves_host_lru_device_state_untouched():
+    """Serve reads must not fault, evict, or reorder the device cache —
+    cache misses are answered from the host store directly."""
+    trainer = _trainer("host_lru", cache_rows=32)
+    bs = _batches(3)
+    state = trainer.init(jax.random.PRNGKey(0), bs[0])
+    for b in bs:
+        state, _ = trainer.step(state, b)
+    name = trainer.collection.names[0]
+    before_slots = np.asarray(state.emb[name]["slot_ids"]).copy()
+    before_table = np.asarray(state.emb[name]["table"]).copy()
+    bk = trainer.backends[name]
+    all_ids = np.arange(RPF, dtype=np.int64)     # misses guaranteed
+    rows, info = bk.read_rows(state.emb[name], all_ids)
+    assert info["misses"] > 0 and info["hits"] > 0
+    np.testing.assert_array_equal(
+        np.asarray(state.emb[name]["slot_ids"]), before_slots)
+    np.testing.assert_array_equal(
+        np.asarray(state.emb[name]["table"]), before_table)
+    assert int(np.asarray(bk._pin_count).sum()) == 0   # pins released
+
+
+def test_eval_is_side_effect_free_and_matches_trajectory():
+    """eval through the serve path must not perturb training: a run with
+    interleaved evals matches an uninterrupted clone bit-for-bit."""
+    bs = _batches(5)
+    t1, t2 = _trainer("host_lru"), _trainer("host_lru")
+    s1 = t1.init(jax.random.PRNGKey(0), bs[0])
+    s2 = t2.init(jax.random.PRNGKey(0), bs[0])
+    for b in bs:
+        s1, m1 = t1.step(s1, b)
+        t2.eval(s2, bs[0])                       # extra reads
+        s2, m2 = t2.step(s2, b)
+        t2.eval(s2, bs[-1])
+        assert float(m1["loss"]) == float(m2["loss"])
+    for a, b_ in zip(jax.tree_util.tree_leaves(s1.dense),
+                     jax.tree_util.tree_leaves(s2.dense)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b_))
+
+
+# ---------------------------------------------------------------------------
+# micro-batching
+# ---------------------------------------------------------------------------
+
+def _requests(n, seed=0):
+    tm = TrafficModel.for_dataset(DS, n_users=500)
+    return [r for _, r in tm.requests(n, seed=seed)]
+
+
+def test_micro_batched_equals_single_request():
+    trainer = _trainer("dense", mode=TrainMode.sync())
+    b = _batches(1)[0]
+    state = trainer.init(jax.random.PRNGKey(0), b)
+    reqs = _requests(12)
+    cell = StateCell(state, 0)
+    with ServingService(trainer, cell, ServingConfig(1, 0.0)) as svc:
+        single = svc.predict_many(reqs)
+    with ServingService(trainer, cell, ServingConfig(8, 50.0)) as svc:
+        futs = [svc.submit(r) for r in reqs]
+        batched = np.stack([f.result(30.0) for f in futs])
+    np.testing.assert_array_equal(single, batched)
+
+
+def test_flush_on_max_batch_not_timeout():
+    trainer = _trainer("dense", mode=TrainMode.sync())
+    b = _batches(1)[0]
+    state = trainer.init(jax.random.PRNGKey(0), b)
+    reqs = _requests(4)
+    cell = StateCell(state, 0)
+    svc = ServingService(trainer, cell,
+                         ServingConfig(max_batch=4, max_wait_ms=60_000))
+    with svc:
+        svc.predict_many(reqs[:4])               # full batch: flushes now
+        m = svc.metrics()
+    assert m["serving/batches"] == 1
+    assert m[f"serving/{trainer.collection.names[0]}/batch_fill"] == 1.0
+
+
+def test_flush_on_timeout_with_partial_batch():
+    trainer = _trainer("dense", mode=TrainMode.sync())
+    b = _batches(1)[0]
+    state = trainer.init(jax.random.PRNGKey(0), b)
+    cell = StateCell(state, 0)
+    svc = ServingService(trainer, cell,
+                         ServingConfig(max_batch=64, max_wait_ms=30.0))
+    with svc:
+        p = svc.predict(_requests(1)[0], timeout=30.0)   # alone in queue
+        m = svc.metrics()
+    assert p.shape == (CFG.n_tasks,)
+    assert m["serving/batches"] == 1
+    assert m[f"serving/{trainer.collection.names[0]}/batch_fill"] < 1.0
+
+
+# ---------------------------------------------------------------------------
+# serve-while-train: concurrency regression (satellite: reader-safe lookup)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["dense", "host_lru", "sharded"])
+def test_concurrent_reader_sees_serial_trajectory(backend):
+    """A reader thread hammering serve_lookup during training observes,
+    at every published step, bit-exactly the state a serial run produces
+    — and never perturbs the training trajectory itself."""
+    steps = 6
+    bs = _batches(steps + 1)
+    probe = bs[0]
+
+    ref_trainer = _trainer(backend)
+    s = ref_trainer.init(jax.random.PRNGKey(0), bs[0])
+    ref = {0: _np_acts(ref_trainer.serve_lookup(s, probe)[0])}
+    for t in range(steps):
+        s, _ = ref_trainer.step(s, bs[t + 1])
+        ref[t + 1] = _np_acts(ref_trainer.serve_lookup(s, probe)[0])
+
+    trainer = _trainer(backend)
+    state = trainer.init(jax.random.PRNGKey(0), bs[0])
+    cell = StateCell(state, 0)
+    errors, checked = [], [0]
+    done = threading.Event()
+
+    def reader():
+        while not done.is_set():
+            with cell.lock:
+                snap, t = cell.snapshot()
+                acts = _np_acts(trainer.serve_lookup(snap, probe)[0])
+            for n, a in acts.items():
+                if not np.array_equal(a, ref[t][n]):
+                    errors.append((t, n))
+            checked[0] += 1
+
+    threads = [threading.Thread(target=reader) for _ in range(2)]
+    for th in threads:
+        th.start()
+    st = state
+    for t in range(steps):
+        with cell.lock:
+            st, _ = trainer.step(st, bs[t + 1])
+            cell.publish(st, t + 1)
+    done.set()
+    for th in threads:
+        th.join()
+    assert not errors, f"reader saw non-serial rows at {errors[:5]}"
+    assert checked[0] >= steps        # the readers actually overlapped
+    with cell.lock:
+        final = _np_acts(trainer.serve_lookup(st, probe)[0])
+    for n, a in final.items():
+        np.testing.assert_array_equal(a, ref[steps][n])
+
+
+# ---------------------------------------------------------------------------
+# staleness gauge (satellite: serving step metrics)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode,tau", [("sync", 0), ("hybrid", 2)])
+def test_staleness_gauge_bounds(mode, tau):
+    tm = TrainMode.sync() if mode == "sync" else TrainMode.hybrid(tau)
+    trainer = _trainer("dense", mode=tm, tau=tau)
+    bs = _batches(7)
+    state = trainer.init(jax.random.PRNGKey(0), bs[0])
+    cell = StateCell(state, 0)
+    reqs = _requests(24)
+    with ServingService(trainer, cell, ServingConfig(4, 2.0)) as svc:
+        stop = threading.Event()
+
+        def client():
+            i = 0
+            while not stop.is_set():
+                svc.predict(reqs[i % len(reqs)])
+                i += 1
+
+        th = threading.Thread(target=client)
+        th.start()
+        s = state
+        for t in range(6):
+            with cell.lock:
+                s, _ = trainer.step(s, bs[t + 1])
+                cell.publish(s, t + 1)
+        stop.set()
+        th.join()
+        m = svc.metrics()
+    for n in trainer.collection.names:
+        stale = m[f"serving/{n}/stale_steps"]
+        assert stale <= tau, f"{mode}: {n} read {stale} stale steps > {tau}"
+        assert m[f"serving/{n}/hit_rate"] == 1.0   # dense: all resident
+    assert m["serving/requests"] > 0
+
+
+def test_queue_lag_helper():
+    assert queue_lag(None, 5, 0) == 0
+    q = {"ids": np.zeros((2, 4), np.int32), "grads": 0,
+         "ptr": 0, "filled": np.asarray(1)}
+    assert queue_lag(q, 5, 2) == 1
+    assert queue_lag({"s0": q, "s1": {**q, "filled": np.asarray(2)}},
+                     5, 2) == 2
+    remote = {"ids": np.zeros((2, 0), np.int32)}    # placeholder: bound
+    assert queue_lag(remote, 1, 2) == 1
+    assert queue_lag(remote, 9, 2) == 2
+
+
+# ---------------------------------------------------------------------------
+# traffic model
+# ---------------------------------------------------------------------------
+
+def test_traffic_is_deterministic_and_in_range():
+    tm = TrafficModel.for_dataset(DS, n_users=1000)
+    a = [(u, r) for u, r in tm.requests(20, seed=3)]
+    b = [(u, r) for u, r in tm.requests(20, seed=3)]
+    for (ua, ra), (ub, rb) in zip(a, b):
+        assert ua == ub
+        np.testing.assert_array_equal(ra["ids"], rb["ids"])
+        np.testing.assert_array_equal(ra["dense"], rb["dense"])
+    for _, r in a:
+        assert r["ids"].shape == (F, DS.ids_per_field)
+        assert r["ids"].max() < RPF
+        assert (r["ids"] >= 0).any(axis=1).all()   # >= 1 id per field
+    # same user, any stream: identical profile
+    np.testing.assert_array_equal(tm.request_for(7)["ids"],
+                                  tm.request_for(7)["ids"])
+
+
+def test_traffic_is_zipf_skewed():
+    tm = TrafficModel.for_dataset(DS, n_users=100_000)
+    uids = tm.user_ids(5000, seed=1)
+    top = np.sum(uids < 1000)          # top 1% of the user population
+    assert top / len(uids) > 0.3       # carries a dominant traffic share
+    assert len(np.unique(uids)) > 100  # but there IS a long tail
+
+
+# ---------------------------------------------------------------------------
+# click feedback
+# ---------------------------------------------------------------------------
+
+def test_click_model_matches_dataset_truth():
+    click = ClickModel.for_dataset(DS)
+    b = next(DS.sampler(32, seed=5))
+    p = click.prob(b["ids"], b.get("dense"))
+    assert p.shape == (32, CFG.n_tasks)
+    assert np.all((p > 0) & (p < 1))
+    truth = DS.truth()
+    np.testing.assert_array_equal(p, truth.prob(b["ids"], b.get("dense")))
+    lab = click.click({"ids": b["ids"][0], "dense": b["dense"][0]})
+    assert lab.shape == (CFG.n_tasks,) and set(np.unique(lab)) <= {0.0, 1.0}
+
+
+def test_feedback_queue_batches_and_starvation():
+    fq = FeedbackQueue(batch_size=4)
+    reqs = _requests(6)
+    click = ClickModel.for_dataset(DS)
+    assert fq.next_batch(timeout=0.02) is None      # starved
+    for r in reqs:
+        fq.put(r, click.click(r))
+    batch = fq.next_batch(timeout=1.0)
+    assert batch["ids"].shape == (4, F, DS.ids_per_field)
+    assert batch["labels"].shape == (4, CFG.n_tasks)
+    assert batch["dense"].shape == (4, DS.n_dense)
+    assert len(fq) == 2
+    assert fq.next_batch(timeout=0.02) is None      # only 2 left
+    assert fq.stats["put"] == 6 and fq.stats["dropped"] == 0
+
+
+def test_feedback_queue_drops_oldest_beyond_capacity():
+    fq = FeedbackQueue(batch_size=2, capacity=4)
+    for i in range(6):
+        fq.put({"ids": np.full((F, 3), i, np.int32)},
+               np.zeros(1, np.float32))
+    assert fq.stats["dropped"] == 2
+    batch = fq.next_batch(timeout=0.5)
+    assert batch["ids"][0, 0, 0] == 2               # 0 and 1 were dropped
+
+
+# ---------------------------------------------------------------------------
+# the closed loop (satellite: feedback-loop end-to-end)
+# ---------------------------------------------------------------------------
+
+def _closed_loop_logloss(train: bool, steps=50, batch=16, seed=0):
+    """Serve -> click -> (optionally train) for ``steps`` rounds; returns
+    per-round logloss of the SERVED predictions. Deterministic: traffic,
+    clicks and init share seeds, and serving flushes whole bursts."""
+    trainer = _trainer("dense", mode=TrainMode.sync())
+    tm = TrafficModel.for_dataset(DS, n_users=2000)
+    click = ClickModel.for_dataset(DS)
+    fq = FeedbackQueue(batch_size=batch)
+    first = next(DS.sampler(batch, seed=seed))
+    state = trainer.init(jax.random.PRNGKey(seed),
+                         {k: jnp.asarray(v) for k, v in first.items()})
+    cell = StateCell(state, 0)
+    losses = []
+    with ServingService(trainer, cell,
+                        ServingConfig(max_batch=batch,
+                                      max_wait_ms=100.0)) as svc:
+        s = state
+        for t in range(steps):
+            reqs = [r for _, r in tm.requests(batch, seed=1000 + t)]
+            preds = svc.predict_many(reqs)
+            labels = np.stack([click.click(r) for r in reqs])
+            p = np.clip(preds.astype(np.float64), 1e-7, 1 - 1e-7)
+            losses.append(float(np.mean(
+                -(labels * np.log(p) + (1 - labels) * np.log(1 - p)))))
+            if train:
+                fq.put_many(reqs, labels)
+                fb = fq.next_batch(timeout=1.0)
+                assert fb is not None
+                b = {k: jnp.asarray(v) for k, v in fb.items()}
+                with cell.lock:
+                    s, _ = trainer.step(s, b)
+                    cell.publish(s, t + 1)
+    return np.asarray(losses)
+
+
+def test_feedback_loop_beats_frozen_control():
+    """50 closed-loop rounds: training on served click feedback must beat
+    the frozen-model control on the same traffic and the same clicks."""
+    online = _closed_loop_logloss(train=True)
+    frozen = _closed_loop_logloss(train=False)
+    # identical first round: no update has happened yet
+    assert online[0] == frozen[0]
+    tail = slice(len(online) // 2, None)
+    assert online[tail].mean() < frozen[tail].mean() - 0.01, (
+        f"online {online[tail].mean():.4f} not better than frozen "
+        f"{frozen[tail].mean():.4f}")
+
+
+def test_feedback_loop_is_deterministic():
+    a = _closed_loop_logloss(train=True, steps=8)
+    b = _closed_loop_logloss(train=True, steps=8)
+    np.testing.assert_array_equal(a, b)
