@@ -13,6 +13,7 @@ the dry-run artifacts when present).
   dedup         §4.2.3         — worker-side batch dedup vs occurrence path
   remote_ps     §4.1           — in-process vs multi-process PS, wire bytes
   serving_latency §1/§4        — online serving p50/p99/QPS vs micro-batch
+  cache_tiers   §4.2.2         — admission hit-rate, disk tier, prefetch
 """
 from __future__ import annotations
 
@@ -24,7 +25,7 @@ import traceback
 
 SUITES = ["compression", "scalability", "capacity", "convergence",
           "staleness", "end_to_end", "pipeline", "shard_scaling", "dedup",
-          "remote_ps", "serving_latency"]
+          "remote_ps", "serving_latency", "cache_tiers"]
 
 
 def main() -> None:
@@ -54,6 +55,9 @@ def main() -> None:
                 kwargs["steps"] = 5
             if args.fast and name == "serving_latency":
                 kwargs["requests"] = 64
+            # cache_tiers keeps its default steps even under --fast: the
+            # admission sketch needs ~100 steps of stream to warm past
+            # its threshold, and the suite is cheap at that length
             if args.fast and name == "end_to_end":
                 kwargs["target"] = 0.60
             rows = mod.run(**kwargs)

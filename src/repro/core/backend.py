@@ -56,6 +56,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import os
 import threading
 from concurrent.futures import ThreadPoolExecutor
 
@@ -68,7 +69,9 @@ from repro.core import dedup as D
 from repro.core import embedding_ps as PS
 from repro.core.dedup import DedupPlan
 from repro.core.embedding_ps import EmbeddingSpec
+from repro.core.hotness import HotnessSketch
 from repro.core.lru import LRUEmbeddingStore
+from repro.core.mmap_store import TieredHostStore
 from repro.utils import round_up
 
 
@@ -212,6 +215,12 @@ class EmbeddingBackend:
         return (0,)
 
     def shard_metrics(self) -> dict:
+        return {}
+
+    def cache_metrics(self) -> dict:
+        """Per-step cache-admission gauges (keys are relative: the prepare
+        driver prefixes ``cache/<table>/``). Empty for backends without an
+        admission policy."""
         return {}
 
     def queue_init(self, ids_shape):
@@ -414,7 +423,25 @@ class HostLRUBackend(EmbeddingBackend):
             raise ValueError(spec.optimizer)
         self.spec = spec
         self.cache_rows = int(spec.cache_rows)
-        self.store: LRUEmbeddingStore | None = None
+        # three-tier variant: the host store becomes a TieredHostStore
+        # (host LRU over mmap disk) instead of an all-rows LRU store
+        self._disk = "disk" in (spec.backend or "").split("+")
+        # frequency-aware admission (MixCache-style): a decayed count-min
+        # sketch scores each unique id; ids below admit_threshold are
+        # served from BYPASS slots — a small scratch region appended after
+        # the main cache — so a once-seen cold id never evicts a hot
+        # resident. admit_threshold <= 0 disables the sketch entirely and
+        # keeps the pre-admission behaviour bit-identical.
+        self.admit_threshold = float(spec.admit_threshold)
+        if self.admit_threshold > 0:
+            self.bypass_rows = (int(spec.bypass_rows)
+                                or max(1, self.cache_rows // 4))
+            self._sketch: HotnessSketch | None = HotnessSketch()
+        else:
+            self.bypass_rows = 0
+            self._sketch = None
+        self.dev_slots = self.cache_rows + self.bypass_rows
+        self.store: LRUEmbeddingStore | TieredHostStore | None = None
         self._lock = threading.RLock()
         self._slot_for_id: dict[int, int] = {}
         # vectorized mirror of _slot_for_id (id -> cache slot, -1 = absent):
@@ -422,13 +449,19 @@ class HostLRUBackend(EmbeddingBackend):
         # per-id dict sweep — the dict stays authoritative for the sparse
         # mutations (fault-in adds, eviction deletes) and introspection
         self._slot_arr = np.full(spec.rows, -1, np.int32)
-        self._id_for_slot = np.full(self.cache_rows, -1, np.int64)
-        self._slot_clock = np.zeros(self.cache_rows, np.int64)
-        self._pin_count = np.zeros(self.cache_rows, np.int32)
+        self._id_for_slot = np.full(self.dev_slots, -1, np.int64)
+        self._slot_clock = np.zeros(self.dev_slots, np.int64)
+        self._pin_count = np.zeros(self.dev_slots, np.int32)
         self._tick = 0
         self.faults = 0          # rows moved host -> device
         self.writebacks = 0      # rows moved device -> host
         self.hits = 0            # unique ids resolved without a fault
+        self.admits = 0          # faults granted a main-cache slot
+        self.bypasses = 0        # faults served from the bypass region
+        self.promotes = 0        # bypass rows re-admitted once hot
+        self.last_admit = 0      # per-step versions of the three above
+        self.last_bypass = 0
+        self.last_promote = 0
 
     # -- host-level ----------------------------------------------------------
 
@@ -466,28 +499,42 @@ class HostLRUBackend(EmbeddingBackend):
         with self._lock:
             return self._init_with_rows_locked(ids, vecs, accs)
 
+    def _make_store(self):
+        """Build the host tier: a plain all-rows LRU store (never evicts —
+        skip per-access recency upkeep on the fault path), or, under
+        ``+disk``, the tiered host-over-mmap hierarchy whose host tier
+        genuinely evicts (spilling to disk)."""
+        spec = self.spec
+        if self._disk:
+            host_rows = int(spec.host_rows) or max(1024, spec.rows // 4)
+            return TieredHostStore(spec.rows, spec.dim,
+                                   host_rows=host_rows,
+                                   path=spec.disk_path)
+        return LRUEmbeddingStore(spec.rows, spec.dim, track_recency=False)
+
     def _init_with_rows_locked(self, ids, vecs, accs=None):
         spec = self.spec
-        # this store backs a cache holding ALL logical rows and never
-        # evicts: skip per-access recency upkeep on the fault path
-        self.store = LRUEmbeddingStore(spec.rows, spec.dim,
-                                       track_recency=False)
+        self.store = self._make_store()
         self.store.preload(np.asarray(ids, np.int64),
                            np.asarray(vecs, np.float32), accs)
         # a (re-)init starts a fresh run: drop any previous slot bookkeeping
         self._slot_for_id = {}
         self._slot_arr = np.full(spec.rows, -1, np.int32)
-        self._id_for_slot = np.full(self.cache_rows, -1, np.int64)
-        self._slot_clock = np.zeros(self.cache_rows, np.int64)
-        self._pin_count = np.zeros(self.cache_rows, np.int32)
+        self._id_for_slot = np.full(self.dev_slots, -1, np.int64)
+        self._slot_clock = np.zeros(self.dev_slots, np.int64)
+        self._pin_count = np.zeros(self.dev_slots, np.int32)
         self._tick = 0
         self.faults = self.writebacks = self.hits = 0
+        self.admits = self.bypasses = self.promotes = 0
+        self.last_admit = self.last_bypass = self.last_promote = 0
+        if self._sketch is not None:
+            self._sketch = HotnessSketch()
         state = {
-            "table": jnp.zeros((self.cache_rows, spec.dim), spec.dtype),
-            "slot_ids": jnp.full((self.cache_rows,), -1, jnp.int32),
+            "table": jnp.zeros((self.dev_slots, spec.dim), spec.dtype),
+            "slot_ids": jnp.full((self.dev_slots,), -1, jnp.int32),
         }
         if spec.optimizer == "adagrad":
-            state["acc"] = jnp.zeros((self.cache_rows,), jnp.float32)
+            state["acc"] = jnp.zeros((self.dev_slots,), jnp.float32)
         return state
 
     def prepare(self, state, ids, assume_unique: bool = False, counts=None):
@@ -498,9 +545,31 @@ class HostLRUBackend(EmbeddingBackend):
         ``assume_unique=True`` (the batch-dedup plan path) skips the
         np.unique — the caller already deduped the batch."""
         with self._lock:
-            return self._prepare_locked(state, ids, assume_unique)
+            return self._prepare_locked(state, ids, assume_unique, counts)
 
-    def _prepare_locked(self, state, ids, assume_unique: bool = False):
+    def _split_admission(self, missing: np.ndarray,
+                         hit_slots: np.ndarray) -> tuple[np.ndarray,
+                                                         np.ndarray]:
+        """Partition this step's missing ids into (admitted, bypassed) by
+        sketch hotness. Bypassed faults are capped by the bypass slots
+        actually free this step (unpinned and not holding a row the batch
+        also hits) — the overflow is admitted, deterministically from the
+        front of the bypass list, so a cold burst can still be served."""
+        hot = self._sketch.estimate(missing) >= self.admit_threshold
+        admit, bypass = missing[hot], missing[~hot]
+        if bypass.size:
+            avail = np.ones(self.dev_slots, bool)
+            avail[: self.cache_rows] = False
+            avail[self._pin_count > 0] = False
+            avail[hit_slots] = False
+            room = int(np.count_nonzero(avail))
+            if bypass.size > room:
+                admit = np.concatenate([admit, bypass[room:]])
+                bypass = bypass[:room]
+        return admit, bypass
+
+    def _prepare_locked(self, state, ids, assume_unique: bool = False,
+                        counts=None):
         spec = self.spec
         flat = np.asarray(ids, np.int64).reshape(-1)
         valid = (flat >= 0) & (flat < spec.rows)
@@ -512,20 +581,59 @@ class HostLRUBackend(EmbeddingBackend):
                 "EmbeddingSpec.cache_rows or shrink the batch")
         self._tick += 1
         smap = self._slot_for_id
+        if self._sketch is not None:
+            c = None
+            if counts is not None:
+                c = np.asarray(counts, np.float64).reshape(-1)
+                c = c[valid] if c.size == flat.size else None
+            self._sketch.update(uniq, c)
         uslots = self._slot_arr[uniq].astype(np.int64)
+        self.last_admit = self.last_bypass = self.last_promote = 0
+        if self._sketch is not None:
+            # promote bypass-resident rows that have become hot: write the
+            # device copy (the freshest) back to the host store, free the
+            # bypass slot, and let the normal fault path re-admit them into
+            # the main cache this same step — pinned slots (in-flight
+            # pipelined batches) wait for a later step
+            in_byp = uslots >= self.cache_rows
+            if in_byp.any():
+                hot = self._sketch.estimate(uniq) >= self.admit_threshold
+                safe = np.clip(uslots, 0, self.dev_slots - 1)
+                promo = in_byp & hot & (self._pin_count[safe] == 0)
+                if promo.any():
+                    state = dict(state)
+                    self._evict_slots(uslots[promo], state)
+                    uslots[promo] = -1
+                    self.last_promote = int(promo.sum())
+                    self.promotes += self.last_promote
         hit_slots = uslots[uslots >= 0]
         missing = uniq[uslots < 0]
         self.hits += int(hit_slots.size)
         if missing.size:
             state = dict(state)
-            victims = self._free_slots(hit_slots, missing.size, state)
+            if self._sketch is not None:
+                admit, bypass = self._split_admission(missing, hit_slots)
+                v_main = self._free_slots(hit_slots, admit.size, state,
+                                          hi=self.cache_rows)
+                v_byp = self._free_slots(hit_slots, bypass.size, state,
+                                         lo=self.cache_rows)
+                missing = np.concatenate([admit, bypass])
+                victims = np.concatenate([v_main, v_byp])
+                self.admits += int(admit.size)
+                self.bypasses += int(bypass.size)
+                self.last_admit = int(admit.size)
+                self.last_bypass = int(bypass.size)
+            else:
+                victims = self._free_slots(hit_slots, missing.size, state)
+                self.admits += int(missing.size)
+                self.last_admit = int(missing.size)
             vecs, accs = self.store.read_rows(missing)
             self.faults += missing.size
             # bucket the scatter shape (see _pow2_bucket): pad slots index
             # one past the cache — an out-of-bounds scatter update, which
             # JAX drops — so padding never touches a real row
             m, bucket = missing.size, _pow2_bucket(missing.size)
-            pad_slots = np.full(bucket, self.cache_rows, np.int64)
+            pad_slots = np.full(bucket, self.dev_slots, np.int64)
             pad_slots[:m] = victims
             pad_vecs = np.zeros((bucket, spec.dim), np.float32)
             pad_vecs[:m] = vecs
@@ -557,18 +665,28 @@ class HostLRUBackend(EmbeddingBackend):
                            np.int64), -1)
         return state, jnp.asarray(dev.reshape(np.shape(ids)), jnp.int32)
 
-    def _free_slots(self, protected: np.ndarray, need: int, state):
-        """Pick ``need`` victim slots: empty slots first, then the
-        least-recently-touched occupied slots outside the current batch
-        (never a pinned slot — those hold rows of in-flight pipelined
-        batches); evicted rows (vector + acc) are written back to the
-        host store."""
+    def _free_slots(self, protected: np.ndarray, need: int, state,
+                    lo: int = 0, hi: int | None = None):
+        """Pick ``need`` victim slots inside ``[lo, hi)`` (the full slot
+        pool by default; the admission path carves it into the main cache
+        ``[0, cache_rows)`` and the bypass region ``[cache_rows,
+        dev_slots)``): empty slots first, then the least-recently-touched
+        occupied slots outside the current batch (never a pinned slot —
+        those hold rows of in-flight pipelined batches); evicted rows
+        (vector + acc) are written back to the host store."""
+        if hi is None:
+            hi = self.dev_slots
+        if need <= 0:
+            return np.zeros(0, np.int64)
+        in_region = np.zeros(self.dev_slots, bool)
+        in_region[lo:hi] = True
         pinned = self._pin_count > 0
-        free = np.nonzero((self._id_for_slot < 0) & ~pinned)[0][:need]
+        free = np.nonzero((self._id_for_slot < 0) & ~pinned
+                          & in_region)[0][:need]
         n_evict = need - free.size
         if n_evict <= 0:
             return free
-        cand = np.ones(self.cache_rows, bool)
+        cand = in_region.copy()
         cand[self._id_for_slot < 0] = False
         cand[protected] = False
         cand[pinned] = False
@@ -578,11 +696,19 @@ class HostLRUBackend(EmbeddingBackend):
                 f"fault-in needs {n_evict} eviction victims but only "
                 f"{cand_slots.size} unpinned slots are evictable: the "
                 f"combined working set of in-flight pipelined batches "
-                f"exceeds the device cache ({self.cache_rows} slots, "
-                f"{int(pinned.sum())} pinned) — lower max_inflight or "
-                "raise EmbeddingSpec.cache_rows")
+                f"exceeds the device cache ({hi - lo} slots in "
+                f"[{lo}, {hi}), {int(pinned.sum())} pinned) — lower "
+                "max_inflight or raise EmbeddingSpec.cache_rows")
         order = np.argsort(self._slot_clock[cand_slots], kind="stable")
         evict = cand_slots[order[:n_evict]]
+        self._evict_slots(evict, state)
+        return np.concatenate([free, evict])
+
+    def _evict_slots(self, evict: np.ndarray, state):
+        """Write the given occupied slots' rows (vector + acc — the device
+        copy is the freshest) back to the host store and clear their slot
+        bookkeeping. Callers pick the victims; this does the writeback."""
+        n_evict = int(evict.size)
         ev_ids = self._id_for_slot[evict]
         # bucketed gather (see _pow2_bucket); pad rows are sliced back off
         idx = np.zeros(_pow2_bucket(n_evict), np.int64)
@@ -596,12 +722,11 @@ class HostLRUBackend(EmbeddingBackend):
             vecs_j, accs = _gather_rows(state["table"], eslots), None
         vecs = np.asarray(vecs_j)[:n_evict]
         self.store.write_rows(ev_ids, vecs, accs)
-        self.writebacks += int(evict.size)
+        self.writebacks += n_evict
         for k in ev_ids.tolist():
             del self._slot_for_id[k]
         self._slot_arr[ev_ids] = -1
         self._id_for_slot[evict] = -1
-        return np.concatenate([free, evict])
 
     # -- slot pinning (pipelined callers) ------------------------------------
     #
@@ -614,13 +739,13 @@ class HostLRUBackend(EmbeddingBackend):
 
     def pin_slots(self, dev_ids):
         slots = np.asarray(dev_ids, np.int64).reshape(-1)
-        slots = slots[(slots >= 0) & (slots < self.cache_rows)]
+        slots = slots[(slots >= 0) & (slots < self.dev_slots)]
         with self._lock:
             np.add.at(self._pin_count, slots, 1)
 
     def unpin_slots(self, dev_ids):
         slots = np.asarray(dev_ids, np.int64).reshape(-1)
-        slots = slots[(slots >= 0) & (slots < self.cache_rows)]
+        slots = slots[(slots >= 0) & (slots < self.dev_slots)]
         with self._lock:
             np.subtract.at(self._pin_count, slots, 1)
             np.maximum(self._pin_count, 0, out=self._pin_count)
@@ -654,7 +779,7 @@ class HostLRUBackend(EmbeddingBackend):
         if uniq.size:
             order = np.argsort(slot_of, kind="stable")
             pos = np.clip(np.searchsorted(slot_of, uniq, sorter=order),
-                          0, self.cache_rows - 1)
+                          0, self.dev_slots - 1)
             cand = order[pos]
             hit = slot_of[cand] == uniq
         else:
@@ -718,8 +843,8 @@ class HostLRUBackend(EmbeddingBackend):
     def _lookup_flat(self, state, dev_ids):
         shape = dev_ids.shape
         flat = dev_ids.reshape(-1)
-        valid = (flat >= 0) & (flat < self.cache_rows)
-        safe = jnp.clip(flat, 0, self.cache_rows - 1)
+        valid = (flat >= 0) & (flat < self.dev_slots)
+        safe = jnp.clip(flat, 0, self.dev_slots - 1)
         out = state["table"][safe] * valid[:, None].astype(
             state["table"].dtype)
         return out.reshape(*shape, self.spec.dim), {}
@@ -728,18 +853,18 @@ class HostLRUBackend(EmbeddingBackend):
         spec = self.spec
         flat = dev_ids.reshape(-1)
         grads = grads.reshape(-1, spec.dim)
-        valid = (flat >= 0) & (flat < self.cache_rows)
+        valid = (flat >= 0) & (flat < self.dev_slots)
         g = jnp.where(valid[:, None], grads, 0.0).astype(jnp.float32)
         slot_signed = jnp.where(valid, flat.astype(jnp.int32), -1)
-        cap = D.dedup_cap(int(flat.shape[0]), self.cache_rows)
+        cap = D.dedup_cap(int(flat.shape[0]), self.dev_slots)
         uniq, g_u = C.dedup_put(slot_signed, g, cap)
         return self._put_unique(state, uniq, g_u)
 
     def _put_unique(self, state, slots_u, g_u):
         new = PS._apply_sparse(
             state, self.spec,
-            jnp.where(slots_u >= 0, slots_u, self.cache_rows),
-            g_u.astype(jnp.float32), self.cache_rows)
+            jnp.where(slots_u >= 0, slots_u, self.dev_slots),
+            g_u.astype(jnp.float32), self.dev_slots)
         return new, {}
 
     def _hybrid_flat(self, state, queue, dev_ids, grads):
@@ -749,7 +874,7 @@ class HostLRUBackend(EmbeddingBackend):
         if spec.staleness <= 0 or queue is None:
             st, m = self._put_flat(state, flat, g)
             return st, queue, m
-        valid = (flat >= 0) & (flat < self.cache_rows)
+        valid = (flat >= 0) & (flat < self.dev_slots)
         if not spec.batch_dedup:
             # legacy path: occurrence-width queue slots
             return self._hybrid_flat_legacy(state, queue, flat, g, valid)
@@ -761,13 +886,12 @@ class HostLRUBackend(EmbeddingBackend):
         return self._hybrid_unique(state, queue, slots_u, g_u)
 
     def _hybrid_flat_legacy(self, state, queue, flat, g, valid):
-        spec = self.spec
-        safe = jnp.clip(flat, 0, self.cache_rows - 1)
+        safe = jnp.clip(flat, 0, self.dev_slots - 1)
         logical = jnp.where(valid, state["slot_ids"][safe], -1)
         queue, old_slots, old_ids, old_g = self._queue_push_pop(
             queue, jnp.where(valid, flat.astype(jnp.int32), -1), logical, g)
         # a tau-stale put only lands if its slot still holds the same row
-        old_safe = jnp.clip(old_slots, 0, self.cache_rows - 1)
+        old_safe = jnp.clip(old_slots, 0, self.dev_slots - 1)
         still = (old_slots >= 0) & (old_ids >= 0) & \
             (state["slot_ids"][old_safe] == old_ids)
         st, m = self._put_flat(state, jnp.where(still, old_slots, -1), old_g)
@@ -781,11 +905,11 @@ class HostLRUBackend(EmbeddingBackend):
         cap = int(queue["slots"].shape[1])
         slots_cap = D.pad_axis0(slots_u.astype(jnp.int32), cap, -1)
         g_cap = D.pad_axis0(g_u, cap, 0)
-        safe = jnp.clip(slots_cap, 0, self.cache_rows - 1)
+        safe = jnp.clip(slots_cap, 0, self.dev_slots - 1)
         logical = jnp.where(slots_cap >= 0, state["slot_ids"][safe], -1)
         queue, old_slots, old_ids, old_g = self._queue_push_pop(
             queue, slots_cap, logical, g_cap)
-        old_safe = jnp.clip(old_slots, 0, self.cache_rows - 1)
+        old_safe = jnp.clip(old_slots, 0, self.dev_slots - 1)
         still = (old_slots >= 0) & (old_ids >= 0) & \
             (state["slot_ids"][old_safe] == old_ids)
         st, m = self._put_unique(state, jnp.where(still, old_slots, -1),
@@ -814,20 +938,26 @@ class HostLRUBackend(EmbeddingBackend):
     # -- checkpoint ----------------------------------------------------------
 
     def state_for_checkpoint(self, state):
-        """Snapshot BOTH tiers: the device cache (so queued slot references
-        stay live across restore) and the host store with its recency
-        order, plus the slot map — a restore resumes bit-identically."""
+        """Snapshot ALL tiers: the device cache (so queued slot references
+        stay live across restore) and the host store — plain or tiered,
+        with its recency order — plus the slot map and (when admission is
+        on) the hotness sketch: a restore resumes bit-identically."""
         with self._lock:
+            cm = {
+                "id_for_slot": self._id_for_slot.copy(),
+                "slot_clock": self._slot_clock.copy(),
+                "scalars": np.array([self._tick, self.faults,
+                                     self.writebacks, self.hits,
+                                     self.admits, self.bypasses,
+                                     self.promotes],
+                                    np.int64),
+            }
+            if self._sketch is not None:
+                cm["hotness"] = self._sketch.serialize()
             return {
                 "cache": jax.tree.map(np.asarray, state),
                 "store": self.store.serialize(),
-                "cache_meta": {
-                    "id_for_slot": self._id_for_slot.copy(),
-                    "slot_clock": self._slot_clock.copy(),
-                    "scalars": np.array([self._tick, self.faults,
-                                         self.writebacks, self.hits],
-                                        np.int64),
-                },
+                "cache_meta": cm,
             }
 
     def restore_from_checkpoint(self, blob):
@@ -860,21 +990,45 @@ class HostLRUBackend(EmbeddingBackend):
                 f"spec wants ({spec.rows}, {spec.dim}) — collection changed "
                 "since the save?")
         cache_tbl = blob["cache"]["table"]
-        if cache_tbl.shape[0] != self.cache_rows:
+        if cache_tbl.shape[0] != self.dev_slots:
             raise ValueError(
                 f"checkpoint device cache has {cache_tbl.shape[0]} slots but "
-                f"this table runs cache_rows={self.cache_rows} — rebuild the "
-                "trainer with the cache the checkpoint was trained under")
-        self.store = LRUEmbeddingStore.deserialize(blob["store"])
-        self.store.track_recency = False     # backend-owned: see init
+                f"this table runs {self.dev_slots} "
+                f"(cache_rows={self.cache_rows} + "
+                f"bypass_rows={self.bypass_rows}) — rebuild the trainer "
+                "with the cache geometry the checkpoint was trained under")
+        sblob = blob["store"]
+        if ("disk" in sblob) == self._disk:
+            # matching store format: bit-identical tier restore
+            if self._disk:
+                self.store = TieredHostStore.deserialize(
+                    sblob, path=spec.disk_path)
+            else:
+                self.store = LRUEmbeddingStore.deserialize(sblob)
+                self.store.track_recency = False   # backend-owned: see init
+        else:
+            # cross-format restore (two-tier blob into a +disk backend, or
+            # the reverse): rebuild the configured hierarchy from the
+            # blob's logical rows — row-exact, tier residency starts fresh
+            vec, acc = _store_logical_rows(sblob, spec.rows, spec.dim)
+            self.store = self._make_store()
+            self.store.preload(np.arange(spec.rows), vec, acc)
         cm = blob["cache_meta"]
-        self._pin_count = np.zeros(self.cache_rows, np.int32)
+        self._pin_count = np.zeros(self.dev_slots, np.int32)
         self._id_for_slot = np.asarray(cm["id_for_slot"], np.int64).copy()
         self._slot_clock = np.asarray(cm["slot_clock"], np.int64).copy()
         scalars = [int(x) for x in cm["scalars"]]
         self._tick, self.faults, self.writebacks = scalars[:3]
-        # pre-shard-router checkpoints carry 3 scalars (no hit counter)
+        # pre-shard-router checkpoints carry 3 scalars (no hit counter);
+        # pre-admission ones carry 4 (no admit/bypass/promote counters)
         self.hits = scalars[3] if len(scalars) > 3 else 0
+        self.admits = scalars[4] if len(scalars) > 4 else 0
+        self.bypasses = scalars[5] if len(scalars) > 5 else 0
+        self.promotes = scalars[6] if len(scalars) > 6 else 0
+        self.last_admit = self.last_bypass = self.last_promote = 0
+        if self._sketch is not None:
+            self._sketch = (HotnessSketch.deserialize(cm["hotness"])
+                            if "hotness" in cm else HotnessSketch())
         self._slot_for_id = {
             int(k): int(s)
             for s, k in enumerate(self._id_for_slot.tolist()) if k >= 0}
@@ -889,8 +1043,18 @@ class HostLRUBackend(EmbeddingBackend):
         s = self.store
         if s is None:
             return 0
+        if hasattr(s, "host_bytes"):        # tiered: host-tier arrays only
+            return s.host_bytes()
         return int(s.vectors.nbytes + s.opt_acc.nbytes + s.prev.nbytes
                    + s.next.nbytes + s.keys.nbytes)
+
+    def cache_metrics(self) -> dict:
+        """Per-step admission gauges (empty when the sketch is off)."""
+        if self._sketch is None:
+            return {}
+        return {"admit": float(self.last_admit),
+                "bypass": float(self.last_bypass),
+                "promote": float(self.last_promote)}
 
     def recency_order(self) -> list[int]:
         """Host-store ids most- to least-recently used (checkpointed)."""
@@ -948,6 +1112,32 @@ def _dense_state_from_logical(spec: EmbeddingSpec, n_rows: int, vec, acc):
             a[pos] = np.asarray(acc, np.float32)
         state["acc"] = jnp.asarray(a)
     return state
+
+
+def _store_logical_rows(sblob, rows: int, dim: int):
+    """Host-store checkpoint sub-blob -> dense ``(vec, acc)`` over all
+    ``rows`` logical rows (zeros for never-stored ids). Handles both the
+    plain LRU blob and the tiered host+disk blob — for the latter the
+    disk tier is laid down first, then the host tier overlaid on top (the
+    host copy is the freshest: spills only happen on demotion)."""
+    vec = np.zeros((rows, dim), np.float32)
+    acc = np.zeros((rows,), np.float32)
+
+    def overlay(b):
+        meta = np.asarray(b["meta"], np.int64).reshape(-1)
+        # plain LRU meta is [capacity, dim, head, tail, size, evictions];
+        # the mmap tier's is just [capacity, dim, size]
+        size = int(meta[4]) if meta.size > 4 else int(meta[2])
+        keys = np.asarray(b["keys"], np.int64)[:size]
+        vec[keys] = np.asarray(b["vectors"], np.float32)[:size]
+        acc[keys] = np.asarray(b["opt_acc"], np.float32)[:size]
+
+    if "disk" in sblob:
+        overlay(sblob["disk"])
+        overlay(sblob["host"])
+    else:
+        overlay(sblob)
+    return vec, acc
 
 
 def extract_logical_rows(blob, spec: EmbeddingSpec, base: str):
@@ -1020,12 +1210,7 @@ def extract_logical_rows(blob, spec: EmbeddingSpec, base: str):
             f"checkpoint host store is ({cap}, {dim}) but this table's "
             f"spec wants ({spec.rows}, {spec.dim}) — collection changed "
             "since the save?")
-    size = int(meta[4])
-    vec = np.zeros((spec.rows, spec.dim), np.float32)
-    acc = np.zeros((spec.rows,), np.float32)
-    keys = np.asarray(blob["store"]["keys"], np.int64)[:size]
-    vec[keys] = np.asarray(blob["store"]["vectors"], np.float32)[:size]
-    acc[keys] = np.asarray(blob["store"]["opt_acc"], np.float32)[:size]
+    vec, acc = _store_logical_rows(blob["store"], spec.rows, spec.dim)
     # the device cache holds the freshest copy of every resident row
     # (write-back only happens on eviction): overlay it over the store,
     # exactly as draining the cache would
@@ -1074,7 +1259,7 @@ class ShardedBackend(EmbeddingBackend):
 
     def __init__(self, spec: EmbeddingSpec, n_shards: int | None = None):
         base, _ = parse_backend_name(spec.backend)
-        if base == "host_lru" and spec.cache_rows <= 0:
+        if base.startswith("host_lru") and spec.cache_rows <= 0:
             raise ValueError(
                 "host_lru backend needs EmbeddingSpec.cache_rows > 0 "
                 f"(got {spec.cache_rows})")
@@ -1089,7 +1274,8 @@ class ShardedBackend(EmbeddingBackend):
         """Build shard ``s``'s backend — the hook the remote router
         (repro.net.remote.RemoteShardedBackend) overrides to place each
         shard behind an RPC endpoint instead of in-process."""
-        return (HostLRUBackend(sub_spec) if self._base == "host_lru"
+        return (HostLRUBackend(sub_spec)
+                if self._base.startswith("host_lru")
                 else DenseBackend(sub_spec))
 
     def _configure(self, k: int):
@@ -1102,15 +1288,27 @@ class ShardedBackend(EmbeddingBackend):
         self._routing = _ShardRouting(spec.rows, k)
         sub_rows = self._routing.sub_rows
         kw = {"backend": self._base, "emb_shards": 1, "rows": sub_rows}
-        if self._base == "host_lru":
+        host = self._base.startswith("host_lru")
+        if host:
             # cache_rows stays the table's TOTAL device-cache budget,
-            # split evenly across shards
+            # split evenly across shards — as do the bypass region, the
+            # +disk host tier and (when set) the mmap directory
             kw["cache_rows"] = -(-spec.cache_rows // k)
-        subs = [self._make_sub(s, dataclasses.replace(spec, **kw))
-                for s in range(k)]
+            if spec.bypass_rows:
+                kw["bypass_rows"] = -(-int(spec.bypass_rows) // k)
+            if spec.host_rows:
+                kw["host_rows"] = -(-int(spec.host_rows) // k)
+        subs = []
+        for s in range(k):
+            kws = dict(kw)
+            if host and spec.disk_path is not None:
+                kws["disk_path"] = os.path.join(spec.disk_path, f"s{s}")
+            subs.append(self._make_sub(s, dataclasses.replace(spec, **kws)))
         self.shard_backends = subs
-        self.stride = (subs[0].cache_rows if self._base == "host_lru"
-                       else sub_rows)
+        # device ids are shard-encoded dev = shard*stride + local: for
+        # host_lru the local space is the shard's FULL slot pool
+        # (cache + bypass), not just its main cache
+        self.stride = (subs[0].dev_slots if host else sub_rows)
         self.dev_rows = k * self.stride      # encoded device id space
         self._traffic = np.zeros(k, np.int64)
         if self._pool is not None:
@@ -1159,7 +1357,7 @@ class ShardedBackend(EmbeddingBackend):
         for s, sub in enumerate(self.shard_backends):
             sel = own == s
             gl, ll = ids[sel], loc[sel]
-            if self._base == "host_lru":
+            if self._base.startswith("host_lru"):
                 states[f"s{s}"] = sub._init_with_rows(
                     ll, np.asarray(vec[gl], np.float32),
                     None if acc is None else acc[gl])
@@ -1204,9 +1402,11 @@ class ShardedBackend(EmbeddingBackend):
                           np.asarray(counts, np.int64).reshape(-1)[valid])
 
         def fault_one(s):
+            # counts stay positionally aligned: ids not owned by shard s
+            # are masked to -1, which the shard's own valid-mask filters
             sub_ids = np.where(own == s, loc, -1)
             return self.shard_backends[s].prepare(state[f"s{s}"], sub_ids,
-                                                  assume_unique)
+                                                  assume_unique, counts)
 
         pool = self._ensure_pool()
         futs = [pool.submit(fault_one, s) for s in range(self.n_shards)]
@@ -1418,6 +1618,13 @@ class ShardedBackend(EmbeddingBackend):
         out["imbalance"] = (float(traffic.max()) / mean) if mean > 0 else 1.0
         return out
 
+    def cache_metrics(self) -> dict:
+        out: dict[str, float] = {}
+        for sub in self.shard_backends:
+            for k, v in sub.cache_metrics().items():
+                out[k] = out.get(k, 0.0) + v
+        return out
+
     def device_bytes(self, state) -> int:
         return sum(sub.device_bytes(state[f"s{s}"])
                    for s, sub in enumerate(self.shard_backends))
@@ -1459,7 +1666,7 @@ class CompressedWireBackend(EmbeddingBackend):
         if isinstance(self.inner, ShardedBackend):
             return self.inner.dev_rows
         if isinstance(self.inner, HostLRUBackend):
-            return self.inner.cache_rows
+            return self.inner.dev_slots
         return self.spec.rows
 
     # -- host-level: delegate ------------------------------------------------
@@ -1503,6 +1710,9 @@ class CompressedWireBackend(EmbeddingBackend):
 
     def shard_metrics(self) -> dict:
         return self.inner.shard_metrics()
+
+    def cache_metrics(self) -> dict:
+        return self.inner.cache_metrics()
 
     @property
     def last_restore_resharded(self) -> bool:
@@ -1598,20 +1808,33 @@ class CompressedWireBackend(EmbeddingBackend):
 
 def parse_backend_name(name: str | None) -> tuple[str, bool]:
     """``EmbeddingSpec.backend`` string -> (base, compressed?). Accepted
-    forms: ``dense``, ``host_lru``, plus a ``+compressed`` suffix on either
-    (``compressed`` alone means ``dense+compressed``)."""
+    forms: ``dense``, ``host_lru``, ``host_lru+disk`` (the three-tier
+    hierarchy — ``base`` keeps the ``+disk`` marker), plus a
+    ``+compressed`` suffix on any of them (``compressed`` alone means
+    ``dense+compressed``)."""
     name = (name or "dense").strip().lower()
-    base, sep, suffix = name.partition("+")
-    wrap = bool(sep)
-    if sep and suffix != "compressed":
-        raise ValueError(f"unknown backend decorator {suffix!r} in "
-                         f"{name!r} (only '+compressed' exists)")
+    parts = name.split("+")
+    base, flags = parts[0], parts[1:]
+    wrap = "compressed" in flags
     if base in ("", "compressed"):
-        base, wrap = "dense", True
+        base, wrap, flags = "dense", True, [f for f in flags
+                                            if f != "compressed"]
+    unknown = [f for f in flags if f not in ("compressed", "disk")]
+    if unknown:
+        raise ValueError(
+            f"unknown backend decorator {unknown[0]!r} in {name!r} "
+            "(only '+disk' and '+compressed' exist)")
     if base not in ("dense", "host_lru"):
         raise ValueError(
             f"unknown embedding backend {name!r}: expected 'dense', "
-            "'host_lru', optionally with a '+compressed' suffix")
+            "'host_lru' or 'host_lru+disk', optionally with a "
+            "'+compressed' suffix")
+    if "disk" in flags:
+        if base != "host_lru":
+            raise ValueError(
+                f"the '+disk' tier only stacks under 'host_lru' "
+                f"(got {name!r})")
+        base = "host_lru+disk"
     return base, wrap
 
 
@@ -1705,6 +1928,8 @@ def prepare_all(backends, states, ids):
         spec = b.spec
         if not spec.batch_dedup:
             new_states[n], dev_ids[n] = b.prepare(states[n], ids[n])
+            for k, v in b.cache_metrics().items():
+                metrics[f"cache/{n}/{k}"] = v
             continue
         cap = D.dedup_cap(max(int(np.size(ids[n])), 1), b.dedup_rows())
         u_pad, inv, counts, info = D.make_plan(ids[n], spec.rows, cap)
@@ -1717,6 +1942,8 @@ def prepare_all(backends, states, ids):
         metrics[f"dedup/{n}/unique_rows"] = float(info["n_unique"])
         metrics[f"dedup/{n}/bytes_saved"] = float(
             (info["n_occ"] - info["n_unique"]) * spec.dim * itemsize)
+        for k, v in b.cache_metrics().items():
+            metrics[f"cache/{n}/{k}"] = v
     return new_states, dev_ids, metrics
 
 

@@ -49,14 +49,28 @@ class EmbeddingSpec:
     staleness: int = 0              # tau; 0 = synchronous embedding updates
     dtype: Any = jnp.float32
     # -- storage backend (core/backend.py) ------------------------------------
-    # 'dense' | 'host_lru', optionally with a '+compressed' wire decorator
-    # (e.g. 'host_lru+compressed'). 'dense' is the device-resident PS shard;
-    # 'host_lru' keeps `rows` host-side behind a device hot-cache of
-    # `cache_rows` slots (paper §4.2.2 out-of-core tier).
+    # 'dense' | 'host_lru' | 'host_lru+disk', optionally with a
+    # '+compressed' wire decorator (e.g. 'host_lru+compressed',
+    # 'host_lru+disk+compressed'). 'dense' is the device-resident PS
+    # shard; 'host_lru' keeps `rows` host-side behind a device hot-cache
+    # of `cache_rows` slots (paper §4.2.2 out-of-core tier); '+disk'
+    # stacks a memory-mapped disk tier under a host LRU of `host_rows`,
+    # so logical rows can exceed host RAM (core/mmap_store.py).
     backend: str = "dense"
     cache_rows: int = 0             # host_lru: device-resident hot slots
     wire_block: int = 128           # +compressed: blockscale block size
     wire_kernel: bool = False       # +compressed: Pallas kernel vs jnp ref
+    # -- frequency-aware admission (core/hotness.py) --------------------------
+    # > 0 enables the decayed count-min admission filter on host_lru
+    # caches: a faulting id whose estimated hotness is below the
+    # threshold is served from `bypass_rows` scratch slots instead of
+    # claiming (and possibly evicting) a hot cache row. 0 = recency-only
+    # admission, bit-identical to the pre-admission backend.
+    admit_threshold: float = 0.0
+    bypass_rows: int = 0            # scratch slots (0 = cache_rows // 4)
+    # -- '+disk' tier sizing (core/mmap_store.py) -----------------------------
+    host_rows: int = 0              # host LRU tier rows (0 = rows // 4)
+    disk_path: str | None = None    # mmap backing dir (None = tempdir)
     # -- sharded PS router (core/backend.py ShardedBackend) -------------------
     # number of independent embedding-PS shards this table is hash-partitioned
     # over (paper §4.1: each embedding worker owns a partition of every

@@ -14,6 +14,29 @@ from __future__ import annotations
 import numpy as np
 
 _NIL = -1
+_U64_MASK = (1 << 64) - 1
+
+
+def rng_state_array(rng: np.random.Generator) -> np.ndarray:
+    """PCG64 bit-generator state as 6 uint64 scalars (the two 128-bit
+    ints split lo/hi) so a restored store's miss-path init continues the
+    exact same random stream."""
+    st = rng.bit_generator.state
+    s = st["state"]
+    return np.array([s["state"] & _U64_MASK,
+                     (s["state"] >> 64) & _U64_MASK,
+                     s["inc"] & _U64_MASK, (s["inc"] >> 64) & _U64_MASK,
+                     int(st["has_uint32"]), int(st["uinteger"])],
+                    np.uint64)
+
+
+def set_rng_state(rng: np.random.Generator, arr: np.ndarray) -> None:
+    a = [int(x) for x in np.asarray(arr, np.uint64).reshape(-1)]
+    rng.bit_generator.state = {
+        "bit_generator": "PCG64",
+        "state": {"state": a[0] | (a[1] << 64),
+                  "inc": a[2] | (a[3] << 64)},
+        "has_uint32": a[4], "uinteger": a[5]}
 
 
 class LRUEmbeddingStore:
@@ -45,6 +68,11 @@ class LRUEmbeddingStore:
         self.tail = _NIL                    # least-recently used
         self.size = 0
         self.evictions = 0
+        # optional spill hook: called as on_evict(key, vector, opt_acc)
+        # with the row ABOUT to be overwritten — the tiered host store
+        # (core/mmap_store.py) wires this to its disk tier so an eviction
+        # is a demotion, not a loss. Not serialized; owners rewire it.
+        self.on_evict = None
 
     # -- linked-list ops on array indices ------------------------------------
     def _unlink(self, slot: int):
@@ -81,7 +109,10 @@ class LRUEmbeddingStore:
         else:
             slot = self.tail                 # evict LRU
             self._unlink(slot)
-            del self.index[int(self.keys[slot])]
+            old = int(self.keys[slot])
+            if self.on_evict is not None:
+                self.on_evict(old, self.vectors[slot], self.opt_acc[slot])
+            del self.index[old]
             self.evictions += 1
         self.keys[slot] = key
         self.index[key] = slot
@@ -227,6 +258,12 @@ class LRUEmbeddingStore:
         return out
 
     # -- zero-copy style (de)serialisation ---------------------------------------
+    def _rng_state_array(self) -> np.ndarray:
+        return rng_state_array(self._rng)
+
+    def _set_rng_state(self, arr: np.ndarray):
+        set_rng_state(self._rng, arr)
+
     def serialize(self) -> dict[str, np.ndarray]:
         """Pure-array snapshot — a memory copy, no pointer chasing."""
         return {
@@ -237,12 +274,27 @@ class LRUEmbeddingStore:
             "keys": self.keys[: self.size].copy(),
             "meta": np.array([self.capacity, self.dim, self.head, self.tail,
                               self.size, self.evictions], np.int64),
+            # constructor/derived state the 6-scalar meta never carried:
+            # a restored store that still faults/evicts must continue the
+            # run bit-identically (same init stream, same recency upkeep)
+            "store_cfg": np.array([self._init_scale,
+                                   float(self.track_recency)], np.float64),
+            "rng_state": self._rng_state_array(),
         }
 
     @classmethod
     def deserialize(cls, blob: dict[str, np.ndarray]) -> "LRUEmbeddingStore":
-        cap, dim, head, tail, size, ev = (int(x) for x in blob["meta"])
-        store = cls(cap, dim)
+        cap, dim, head, tail, size, ev = \
+            (int(x) for x in np.asarray(blob["meta"]).reshape(-1)[:6])
+        cfg = blob.get("store_cfg")
+        if cfg is not None:                   # old blobs: 6-scalar meta only
+            cfg = np.asarray(cfg, np.float64).reshape(-1)
+            store = cls(cap, dim, init_scale=float(cfg[0]),
+                        track_recency=bool(cfg[1] != 0.0))
+        else:
+            store = cls(cap, dim)
+        if "rng_state" in blob:
+            store._set_rng_state(blob["rng_state"])
         store.vectors[:size] = blob["vectors"]
         store.opt_acc[:size] = blob["opt_acc"]
         store.prev[:size] = blob["prev"]

@@ -6,11 +6,22 @@ embedding put of different microbatches run concurrently across workers, so
 the memory-bound embedding path hides behind the compute-bound dense path.
 :class:`~repro.core.hybrid.PersiaTrainer` runs ``prepare → lookup → dense →
 put`` strictly serially per batch; this module runs the same four dispatches
-(plus the data loader) as a bounded five-stage pipeline:
+(plus the data loader and an optional prefetch stage) as a bounded pipeline:
 
-    loader ──q──▶ prepare ──q──▶ lookup ──q──▶ dense ──q──▶ put
-    (batches)    (host fault-in) (jitted)      (jitted,     (jitted,
-                                               donated)      donated)
+    loader ──q──▶ prefetch ──q──▶ prepare ──q──▶ lookup ──q──▶ dense ──q──▶ put
+    (batches)    (look-ahead     (host fault-in  (jitted)     (jitted,   (jitted,
+                  fault-in)       or passthrough)              donated)   donated)
+
+With ``prefetch=k > 0`` the host fault-in moves into the prefetch stage,
+which may run up to ``k`` batches AHEAD of the inflight window: step
+``t+k``'s unique rows fault host→device while step ``t`` is still in its
+dense compute, hiding host-store latency (the disk tier's, in particular)
+behind training. Prefetched slots are pinned from the prefetch until the
+batch's applied put, so the deeper horizon can never recycle an in-flight
+row; ``cache_rows`` must cover the combined ``max_inflight + prefetch``
+working set. ``prefetch=0`` (the default) keeps the fault-in inside the
+prepare stage — the prefetch stage is a passthrough and dispatch order is
+unchanged, bit for bit.
 
 Each stage is a thread; bounded queues carry up to ``max_inflight``
 microbatches, so the host ``prepare`` phase (the out-of-core fault-in of the
@@ -80,7 +91,7 @@ from repro.core import backend as BK
 from repro.core.dedup import plan_dev
 from repro.core.hybrid import PersiaTrainer, TrainState
 
-STAGES = ("loader", "prepare", "lookup", "dense", "put")
+STAGES = ("loader", "prefetch", "prepare", "lookup", "dense", "put")
 
 _DONE = object()          # end-of-stream sentinel flowing through the queues
 _TICK = 0.02              # poll period for stop-aware queue/semaphore waits
@@ -132,7 +143,8 @@ class PipelinedTrainer:
     """
 
     def __init__(self, trainer: PersiaTrainer, max_inflight: int = 4,
-                 delay_fn: Optional[Callable[[str, int], float]] = None):
+                 delay_fn: Optional[Callable[[str, int], float]] = None,
+                 prefetch: int = 0):
         if not isinstance(trainer, PersiaTrainer):
             raise TypeError(
                 "PipelinedTrainer wraps a PersiaTrainer (build one first); "
@@ -140,8 +152,21 @@ class PipelinedTrainer:
         if max_inflight < 1:
             raise ValueError(f"max_inflight must be >= 1 "
                              f"(got {max_inflight})")
+        if prefetch < 0:
+            raise ValueError(f"prefetch must be >= 0 (got {prefetch})")
         self.trainer = trainer
         self.max_inflight = int(max_inflight)
+        # prefetch > 0 moves the host fault-in (BK.prepare_all + slot
+        # pinning) into a dedicated stage that may run up to ``prefetch``
+        # batches AHEAD of the inflight window: step t+prefetch's rows
+        # fault host->device while step t is still training. The faulted
+        # slots stay pinned from prefetch until the batch's applied put,
+        # so a deeper horizon can never recycle an in-flight row —
+        # ``cache_rows`` must cover the combined (max_inflight + prefetch)
+        # working set or the fault-in raises. prefetch=0 keeps the
+        # fault-in inside the prepare stage (the pre-prefetch behaviour,
+        # bit for bit).
+        self.prefetch = int(prefetch)
         self.delay_fn = delay_fn
         self._stats: dict[str, _StageStats] = {}
         self._wall_s = 0.0
@@ -245,9 +270,18 @@ class PipelinedTrainer:
         outstanding = {n: 0 for n in names}
         self.max_outstanding = {n: 0 for n in names}
         self.applied_order = []
+        # the prefetch horizon: how many batches may sit between
+        # prefetch-start and put-applied (the global inflight window plus
+        # the look-ahead depth). One semaphore bounds it; with prefetch=0
+        # the prefetch stage is a passthrough and the permit is unused.
+        prefetch_sem = threading.Semaphore(self.max_inflight + self.prefetch)
         self._stats = {s: _StageStats() for s in STAGES}
         qs = {s: queue.Queue(maxsize=self.max_inflight)
-              for s in ("prepare", "lookup", "dense", "put")}
+              for s in ("prefetch", "lookup", "dense", "put")}
+        # the prepare queue buffers the look-ahead: faulted batches wait
+        # here until the inflight window admits them
+        qs["prepare"] = queue.Queue(
+            maxsize=self.max_inflight + self.prefetch)
         results: list[tuple[int, dict]] = []
 
         def fail(stage: str, idx: int, exc: BaseException):
@@ -299,10 +333,10 @@ class PipelinedTrainer:
                     sleep_for("loader", idx)
                     st.busy_s += time.perf_counter() - t0
                     st.items += 1
-                    if not q_put("prepare", (idx, batch)):
+                    if not q_put("prefetch", (idx, batch)):
                         return
                     idx += 1
-                q_put("prepare", _DONE)
+                q_put("prefetch", _DONE)
             except Exception as e:   # noqa: BLE001
                 fail("loader", idx, e)
 
@@ -322,6 +356,59 @@ class PipelinedTrainer:
             # occurrence stream would (dedup never changes ownership)
             return bk.put_shards(plan_dev(dev_ids[n]))
 
+        def fault_in(batch):
+            """The host fault-in: translate ids, fault rows into the
+            device caches, pin this batch's cache slots until its put has
+            been applied — a later batch's fault-in must not recycle rows
+            a pending lookup/put still targets (a plan's unique dev ids
+            ARE the batch's slot set: one pin per distinct slot). The
+            touched shards are decoded here too, while the dev ids are
+            fresh host-built arrays — not between the lookup stage's
+            window acquire and its jitted dispatch."""
+            ids = adapter.emb_ids(batch)
+            with store_lock:
+                emb, dev_ids, prep_m = BK.prepare_all(
+                    backends, store["emb"], ids)
+                store["emb"] = emb
+                for n in dev_ids:
+                    backends[n].pin_slots(plan_dev(dev_ids[n]))
+            touched = {n: touched_shards(n, dev_ids) for n in names}
+            return dev_ids, touched, prep_m
+
+        def prefetch_stage():
+            # prefetch=0: pure passthrough (no permits, no timing) — the
+            # fault-in stays in prepare and dispatch order is unchanged.
+            # prefetch>0: fault step t+k's rows while step t trains, ahead
+            # of the inflight window but bounded by the prefetch horizon.
+            st = self._stats["prefetch"]
+            while True:
+                item = q_get("prefetch")
+                if item is None:
+                    return
+                if item is _DONE:
+                    q_put("prepare", _DONE)
+                    return
+                if self.prefetch <= 0:
+                    if not q_put("prepare", item):
+                        return
+                    st.items += 1
+                    continue
+                idx, batch = item
+                try:
+                    if not acquire(prefetch_sem):
+                        return
+                    t0 = time.perf_counter()
+                    sleep_for("prefetch", idx)
+                    dev_ids, touched, prep_m = fault_in(batch)
+                    st.busy_s += time.perf_counter() - t0
+                    st.items += 1
+                    if not q_put("prepare", (idx, batch, dev_ids, touched,
+                                             prep_m)):
+                        return
+                except Exception as e:   # noqa: BLE001
+                    fail("prefetch", idx, e)
+                    return
+
         def prepare():
             st = self._stats["prepare"]
             while True:
@@ -331,7 +418,7 @@ class PipelinedTrainer:
                 if item is _DONE:
                     q_put("lookup", _DONE)
                     return
-                idx, batch = item
+                idx, batch = item[0], item[1]
                 try:
                     # the global permit: at most max_inflight batches
                     # between prepare-start and put-applied. With one
@@ -340,24 +427,10 @@ class PipelinedTrainer:
                         return
                     t0 = time.perf_counter()
                     sleep_for("prepare", idx)
-                    ids = adapter.emb_ids(batch)
-                    with store_lock:
-                        emb, dev_ids, prep_m = BK.prepare_all(
-                            backends, store["emb"], ids)
-                        store["emb"] = emb
-                        # pin this batch's cache slots until its put has
-                        # been applied: a later batch's fault-in must not
-                        # recycle rows a pending lookup/put still targets
-                        # (a plan's unique dev ids ARE the batch's slot
-                        # set — one pin per distinct slot)
-                        for n in dev_ids:
-                            backends[n].pin_slots(plan_dev(dev_ids[n]))
-                    # decode the touched shards here, in the prepare
-                    # stage, where the dev ids are fresh host-built
-                    # arrays — not between the lookup stage's window
-                    # acquire and its jitted dispatch
-                    touched = {n: touched_shards(n, dev_ids)
-                               for n in names}
+                    if len(item) == 2:
+                        dev_ids, touched, prep_m = fault_in(batch)
+                    else:          # already faulted by the prefetch stage
+                        _, _, dev_ids, touched, prep_m = item
                     st.busy_s += time.perf_counter() - t0
                     st.items += 1
                     if not q_put("lookup", (idx, batch, dev_ids, touched,
@@ -456,6 +529,8 @@ class PipelinedTrainer:
                         for s in touched[n]:
                             windows[(n, s)].release()
                     inflight.release()
+                    if self.prefetch > 0:
+                        prefetch_sem.release()
                     merged = dict(metrics)
                     merged.update(prep_m)
                     merged.update(get_m)
@@ -470,7 +545,9 @@ class PipelinedTrainer:
 
         threads = [
             threading.Thread(target=fn, name=f"pipeline-{name}", daemon=True)
-            for name, fn in (("loader", loader), ("prepare", prepare),
+            for name, fn in (("loader", loader),
+                             ("prefetch", prefetch_stage),
+                             ("prepare", prepare),
                              ("lookup", lookup_stage), ("dense", dense_stage),
                              ("put", put_stage))]
         self._running = True
@@ -518,6 +595,7 @@ class PipelinedTrainer:
             "pipeline/steps": float(self._steps_done),
             "pipeline/steps_per_s": self._steps_done / wall,
             "pipeline/max_inflight": float(self.max_inflight),
+            "pipeline/prefetch": float(self.prefetch),
         }
         for stage, st in self._stats.items():
             out[f"pipeline/{stage}/busy_s"] = st.busy_s

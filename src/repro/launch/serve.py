@@ -99,10 +99,12 @@ def main():
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--emb-backend", default="dense",
-                    choices=["dense", "host_lru", "dense+compressed",
-                             "host_lru+compressed"],
+                    choices=["dense", "host_lru", "host_lru+disk",
+                             "dense+compressed", "host_lru+compressed",
+                             "host_lru+disk+compressed"],
                     help="vocab-table storage backend: host_lru serves the "
-                         "embedding tier out-of-core from host RAM")
+                         "embedding tier out-of-core from host RAM; +disk "
+                         "adds the mmap tier below it")
     ap.add_argument("--cache-rows", type=int, default=0,
                     help="host_lru device-cache slots (0 = vocab/8)")
     ap.add_argument("--emb-shards", default="1",

@@ -290,11 +290,13 @@ def main():
     ap.add_argument("--seq-len", type=int, default=128)
     ap.add_argument("--tau", type=int, default=3)
     ap.add_argument("--emb-backend", default="dense",
-                    choices=["dense", "host_lru", "dense+compressed",
-                             "host_lru+compressed"],
+                    choices=["dense", "host_lru", "host_lru+disk",
+                             "dense+compressed", "host_lru+compressed",
+                             "host_lru+disk+compressed"],
                     help="embedding storage backend (core/backend.py): "
                          "host_lru keeps tables host-side behind a device "
-                         "hot-cache; +compressed adds the §4.2.3 wire")
+                         "hot-cache; +disk stacks the mmap tier under the "
+                         "host store; +compressed adds the §4.2.3 wire")
     ap.add_argument("--cache-rows", type=int, default=0,
                     help="host_lru device-cache slots per table "
                          "(0 = rows_per_field/8, at least 1024)")

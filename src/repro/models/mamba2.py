@@ -65,7 +65,6 @@ def _causal_conv(xbc, w, b):
 
 
 def _gated_out(p, cfg, y, z, x_in_dtype):
-    d_t = y.dtype
     y = y * jax.nn.silu(z.astype(y.dtype))
     # grouped RMSNorm over d_inner
     y32 = y.astype(jnp.float32)
@@ -166,7 +165,6 @@ def mamba2_decode(p, cfg, x, cache):
     """
     B = x.shape[0]
     d_inner, H, P_, N = ssm_dims(cfg)
-    K = cfg.ssm_conv_width
     proj = x @ p["in_proj"]                                          # (B,1,*)
     z, xbc_new, dt_raw = _split_proj(cfg, proj)
     window = jnp.concatenate([cache["conv"], xbc_new], axis=1)       # (B,K,C)

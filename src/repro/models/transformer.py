@@ -240,7 +240,6 @@ def encode(cfg: ModelConfig, params, frames):
     enc = params["encoder"]
     x = frames @ enc["in_proj"]
     x = x + enc["pos_emb"][None, : x.shape[1]].astype(x.dtype)
-    positions = jnp.arange(x.shape[1])[None].repeat(x.shape[0], 0)
 
     def enc_body(x, per_layer):
         for i, blk in enumerate(ecfg.pattern):

@@ -80,14 +80,20 @@ class RemoteBackend(EmbeddingBackend):
             raise ValueError(
                 "RemoteBackend is one PS shard; shard via "
                 "RemoteShardedBackend over multiple endpoints")
-        if base == "host_lru" and spec.cache_rows <= 0:
+        if base.startswith("host_lru") and spec.cache_rows <= 0:
             raise ValueError(
                 "host_lru backend needs EmbeddingSpec.cache_rows > 0 "
                 f"(got {spec.cache_rows})")
         self.spec = spec
         self._base = base
-        self.requires_prepare = base == "host_lru"
+        self.requires_prepare = base.startswith("host_lru")
         self.cache_rows = int(spec.cache_rows)
+        # mirror the PS-side slot-pool size (main cache + admission bypass
+        # region): device ids returned by the remote prepare live in
+        # [0, dev_slots), not [0, cache_rows)
+        bypass = ((int(spec.bypass_rows) or max(1, self.cache_rows // 4))
+                  if spec.admit_threshold > 0 else 0)
+        self.dev_slots = self.cache_rows + bypass
         self._lossy = bool(lossy)
         self._block = int(spec.wire_block)
         self._table = str(table)
@@ -124,7 +130,8 @@ class RemoteBackend(EmbeddingBackend):
         return state
 
     def _dev_rows(self) -> int:
-        return self.cache_rows if self._base == "host_lru" else self.spec.rows
+        return (self.dev_slots if self._base.startswith("host_lru")
+                else self.spec.rows)
 
     # -- host-level ----------------------------------------------------------
 

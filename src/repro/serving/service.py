@@ -78,6 +78,11 @@ class _Pending:
     t_submit: float
 
 
+class ServingStopTimeout(RuntimeError):
+    """``stop()`` could not confirm the flush loop exited: the queue was
+    deliberately NOT drained (the loop may still be flushing it)."""
+
+
 def queue_lag(q, step: int, tau: int) -> int:
     """Staleness-queue lag of one table: how many steps of applied updates
     the queue is still holding back. In-process queues expose ``filled``
@@ -126,6 +131,7 @@ class ServingService:
         self._lat_ms = deque(maxlen=int(self.config.latency_window))
         self._requests = 0
         self._batches = 0
+        self._errors = 0
         self._fill_sum = 0.0
         self._wait_ms_sum = 0.0
         self._t_first = None
@@ -149,10 +155,21 @@ class ServingService:
         with self._cond:
             self._running = False
             self._cond.notify_all()
-        if self._thread is not None:
-            self._thread.join(timeout=self.config.timeout_s)
-            self._thread = None
-        # drain stragglers so no submitted request is ever lost
+        thread, self._thread = self._thread, None
+        if thread is not None:
+            thread.join(timeout=self.config.timeout_s)
+            if thread.is_alive():
+                # the flush loop is stuck mid-flush (a wedged device or a
+                # lock the trainer never released). Draining now would
+                # race it over the same deque and double-flush — surface
+                # the hang instead; queued futures will resolve if the
+                # flush ever completes, or time out client-side.
+                raise ServingStopTimeout(
+                    f"serving flush thread still alive after "
+                    f"{self.config.timeout_s}s; {len(self._queue)} queued "
+                    "requests left un-drained")
+        # the loop is confirmed dead: drain stragglers so no submitted
+        # request is ever lost
         while True:
             with self._cond:
                 take = [self._queue.popleft()
@@ -233,6 +250,21 @@ class ServingService:
         return batch
 
     def _flush(self, take: list[_Pending]):
+        """Flush one micro-batch. Never raises: a failed lookup/predict
+        resolves every waiting future with the exception (a client
+        blocked in ``predict`` would otherwise hang until its timeout)
+        and counts ``serving/errors`` — the aggregator loop stays alive
+        for the next batch."""
+        try:
+            self._flush_inner(take)
+        except Exception as e:   # noqa: BLE001
+            with self._m_lock:
+                self._errors += 1
+            for p in take:
+                if not p.future.done():
+                    p.future.set_exception(e)
+
+    def _flush_inner(self, take: list[_Pending]):
         t_flush = time.monotonic()
         batch = self._pad_batch(take)
         trainer = self.trainer
@@ -281,6 +313,7 @@ class ServingService:
             out = {
                 "serving/requests": float(self._requests),
                 "serving/batches": float(self._batches),
+                "serving/errors": float(self._errors),
                 "serving/p50_ms": float(np.percentile(lat, 50))
                 if lat.size else 0.0,
                 "serving/p99_ms": float(np.percentile(lat, 99))

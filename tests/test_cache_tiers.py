@@ -1,0 +1,332 @@
+"""Frequency-aware multi-tier embedding cache (ROADMAP item 1): the
+decayed count-min admission sketch, the bypass/promotion slot mechanics,
+the ``+disk`` mmap tier's bit-parity with the two-tier backend, checkpoint
+round-trips (same-format, cross-format, and old pre-admission blobs), and
+the pipeline prefetch stage's determinism contract."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core import adapters
+from repro.core.backend import create_backend, parse_backend_name
+from repro.core.embedding_ps import EmbeddingSpec
+from repro.core.hotness import HotnessSketch
+from repro.core.hybrid import PersiaTrainer, TrainMode
+from repro.core.pipeline import PipelinedTrainer
+from repro.data.ctr import CTRDataset
+from repro.optim.optimizers import OptConfig
+
+ROWS, DIM = 512, 8
+CACHE, BYPASS = 32, 8
+
+
+def _backend(backend="host_lru", cache_rows=CACHE, **kw):
+    spec = EmbeddingSpec(rows=ROWS, dim=DIM, backend=backend,
+                         cache_rows=cache_rows, **kw)
+    bk = create_backend(spec)
+    return bk, bk.init(jax.random.PRNGKey(0))
+
+
+def _admission(**kw):
+    return _backend(admit_threshold=1.5, bypass_rows=BYPASS, **kw)
+
+
+# ---------------------------------------------------------------------------
+# the hotness sketch
+# ---------------------------------------------------------------------------
+
+def test_sketch_counts_occurrences_and_decays():
+    sk = HotnessSketch(width=1024, depth=4, decay=0.5, decay_every=10**6)
+    sk.update(np.array([3, 7]), counts=np.array([5.0, 1.0]))
+    est = sk.estimate(np.array([3, 7, 9, -1]))
+    assert est[0] >= 5.0 and est[1] >= 1.0      # count-min: upper bounds
+    assert est[3] == 0.0                        # negatives estimate cold
+    # decay forgets stale hotness: a once-hot id falls below any threshold
+    for _ in range(6):
+        sk.age()
+    assert sk.estimate(np.array([3]))[0] < 0.1
+
+
+def test_sketch_serialize_roundtrip_preserves_estimates():
+    sk = HotnessSketch(width=256, depth=3, decay=0.5, decay_every=4, seed=9)
+    rng = np.random.default_rng(0)
+    for _ in range(7):
+        sk.update(rng.integers(0, 100, 20))
+    back = HotnessSketch.deserialize(sk.serialize())
+    probe = np.arange(120)
+    np.testing.assert_array_equal(back.estimate(probe), sk.estimate(probe))
+    assert back.updates == sk.updates
+    # identical future trajectory (same decay phase, same hashes)
+    sk.update(np.array([5]))
+    back.update(np.array([5]))
+    np.testing.assert_array_equal(back.estimate(probe), sk.estimate(probe))
+
+
+# ---------------------------------------------------------------------------
+# admission: bypass slots, promotion, scan resistance
+# ---------------------------------------------------------------------------
+
+def test_admission_geometry_and_bypass_then_promote():
+    bk, state = _admission()
+    assert bk.dev_slots == CACHE + BYPASS
+    assert np.asarray(state["table"]).shape == (CACHE + BYPASS, DIM)
+    ids = np.arange(4)
+    # first sight: estimate 1 < threshold -> served from the bypass region
+    state, dev = bk.prepare(state, ids)
+    assert np.all(np.asarray(dev) >= CACHE)
+    assert bk.cache_metrics() == {"admit": 0.0, "bypass": 4.0,
+                                  "promote": 0.0}
+    # second sight: estimate 2 >= threshold -> promoted into the main cache
+    state, dev = bk.prepare(state, ids)
+    assert np.all((np.asarray(dev) >= 0) & (np.asarray(dev) < CACHE))
+    assert bk.cache_metrics()["promote"] == 4.0
+    assert bk.promotes == 4
+
+
+def test_once_seen_cold_ids_never_evict_hot_residents():
+    bk, state = _admission()
+    hot = np.arange(16)
+    for _ in range(3):                     # warm: bypassed, then promoted
+        state, _ = bk.prepare(state, hot)
+    hot_slots = bk._slot_arr[hot].copy()
+    assert np.all((hot_slots >= 0) & (hot_slots < CACHE))
+    faults_before = bk.faults
+    for i in range(5):                     # five distinct one-touch scans
+        cold = 100 + BYPASS * i + np.arange(BYPASS)
+        state, dev = bk.prepare(state, cold)
+        assert np.all(np.asarray(dev) >= CACHE)     # all served from bypass
+    np.testing.assert_array_equal(bk._slot_arr[hot], hot_slots)
+    state, _ = bk.prepare(state, hot)      # pure hits: no fault, no move
+    assert bk.faults == faults_before + 5 * BYPASS
+    np.testing.assert_array_equal(bk._slot_arr[hot], hot_slots)
+
+
+def test_cold_burst_overflows_bypass_into_main():
+    """A cold burst wider than the bypass region must still be served —
+    the overflow claims main slots instead of raising or dropping."""
+    bk, state = _admission()
+    burst = 200 + np.arange(BYPASS + 6)
+    state, dev = bk.prepare(state, burst)
+    dev = np.asarray(dev)
+    assert np.all(dev >= 0)
+    assert bk.last_bypass == BYPASS and bk.last_admit == 6
+    # every id got a distinct slot and the translation is consistent
+    assert np.unique(dev).size == burst.size
+
+
+def test_admission_off_keeps_plain_geometry():
+    bk, state = _backend()                 # admit_threshold = 0
+    assert bk.dev_slots == CACHE and bk.bypass_rows == 0
+    assert bk._sketch is None
+    assert np.asarray(state["table"]).shape == (CACHE, DIM)
+    assert bk.cache_metrics() == {}
+
+
+# ---------------------------------------------------------------------------
+# the +disk tier
+# ---------------------------------------------------------------------------
+
+def test_parse_backend_name_disk_grammar():
+    assert parse_backend_name("host_lru+disk") == ("host_lru+disk", False)
+    assert parse_backend_name("host_lru+disk+compressed") == \
+        ("host_lru+disk", True)
+    with pytest.raises(ValueError, match="only stacks under"):
+        parse_backend_name("dense+disk")
+    with pytest.raises(ValueError, match="unknown backend decorator"):
+        parse_backend_name("host_lru+ssd")
+
+
+def test_three_tier_faults_bit_equal_to_two_tier(tmp_path):
+    """The disk tier changes where cold rows live, never what they hold:
+    the same fault stream returns identical slots and identical values,
+    while the tiered store genuinely spills and promotes."""
+    bk2, s2 = _backend("host_lru")
+    bk3, s3 = _backend("host_lru+disk", host_rows=64,
+                       disk_path=str(tmp_path / "tier"))
+    rng = np.random.default_rng(3)
+    for _ in range(12):
+        ids = rng.integers(0, ROWS, (4, 6))
+        s2, d2 = bk2.prepare(s2, ids)
+        s3, d3 = bk3.prepare(s3, ids)
+        np.testing.assert_array_equal(np.asarray(d2), np.asarray(d3))
+        a2, _ = bk2.lookup(s2, d2)
+        a3, _ = bk3.lookup(s3, d3)
+        np.testing.assert_array_equal(np.asarray(a2), np.asarray(a3))
+    assert bk2.faults == bk3.faults
+    assert bk3.store.spills > 0            # host tier really evicted
+    assert bk3.store.promotions > 0        # and disk rows really faulted up
+
+
+@pytest.mark.parametrize("backend,extra", [
+    ("host_lru", {}),
+    ("host_lru+disk", {"host_rows": 64}),
+], ids=["two_tier", "three_tier"])
+def test_checkpoint_roundtrip_resumes_bit_identically(tmp_path, backend,
+                                                      extra):
+    if backend.endswith("disk"):
+        extra = dict(extra, disk_path=str(tmp_path / "a"))
+    bk, state = _admission(backend=backend, **extra)
+    rng = np.random.default_rng(1)
+    for _ in range(6):
+        state, dev = bk.prepare(state, rng.integers(0, ROWS, 12))
+        state = bk.apply_put(
+            state, dev,
+            jnp.asarray(rng.standard_normal((12, DIM)), jnp.float32))[0]
+    blob = bk.state_for_checkpoint(state)
+    assert ("hotness" in blob["cache_meta"])          # sketch rides along
+    assert ("disk" in blob["store"]) == backend.endswith("disk")
+
+    extra2 = dict(extra)
+    if backend.endswith("disk"):
+        extra2["disk_path"] = str(tmp_path / "b")
+    bk2, _ = _admission(backend=backend, **extra2)
+    state2 = bk2.restore_from_checkpoint(blob)
+    for k in state:
+        np.testing.assert_array_equal(np.asarray(state[k]),
+                                      np.asarray(state2[k]))
+    assert (bk2.faults, bk2.admits, bk2.bypasses, bk2.promotes) == \
+        (bk.faults, bk.admits, bk.bypasses, bk.promotes)
+    # the two resume on the same trajectory: same stream -> same slots,
+    # same admission decisions, same values
+    for _ in range(4):
+        ids = rng.integers(0, ROWS, 12)
+        state, d1 = bk.prepare(state, ids)
+        state2, d2 = bk2.prepare(state2, ids)
+        np.testing.assert_array_equal(np.asarray(d1), np.asarray(d2))
+        np.testing.assert_array_equal(np.asarray(state["table"]),
+                                      np.asarray(state2["table"]))
+
+
+def test_old_pre_admission_checkpoint_restores():
+    """A blob written before the admission counters existed carries 4
+    scalars and no hotness sub-blob; it must restore into a plain
+    (admission-off) backend with the new counters zeroed."""
+    bk, state = _backend()
+    rng = np.random.default_rng(2)
+    for _ in range(4):
+        state, _ = bk.prepare(state, rng.integers(0, ROWS, 10))
+    blob = bk.state_for_checkpoint(state)
+    blob["cache_meta"]["scalars"] = blob["cache_meta"]["scalars"][:4]
+    blob["cache_meta"].pop("hotness", None)
+    bk2, _ = _backend()
+    state2 = bk2.restore_from_checkpoint(blob)
+    assert (bk2._tick, bk2.faults, bk2.hits) == \
+        (bk._tick, bk.faults, bk.hits)
+    assert bk2.admits == bk2.bypasses == bk2.promotes == 0
+    state2, dev = bk2.prepare(state2, np.arange(6))
+    assert np.all(np.asarray(dev) >= 0)
+
+
+@pytest.mark.parametrize("src,dst", [
+    ("host_lru", "host_lru+disk"),
+    ("host_lru+disk", "host_lru"),
+], ids=["two_into_three", "three_into_two"])
+def test_cross_format_restore_is_row_exact(tmp_path, src, dst):
+    """Restoring a two-tier blob into a +disk backend (or the reverse)
+    rebuilds the configured hierarchy from the blob's logical rows."""
+    def kw(name, tag):
+        return ({"host_rows": 64, "disk_path": str(tmp_path / tag)}
+                if name.endswith("disk") else {})
+
+    bk, state = _backend(src, **kw(src, "src"))
+    rng = np.random.default_rng(4)
+    for _ in range(6):
+        state, dev = bk.prepare(state, rng.integers(0, ROWS, 12))
+        state = bk.apply_put(
+            state, dev,
+            jnp.asarray(rng.standard_normal((12, DIM)), jnp.float32))[0]
+    blob = bk.state_for_checkpoint(state)
+    bk2, _ = _backend(dst, **kw(dst, "dst"))
+    state2 = bk2.restore_from_checkpoint(blob)
+    # chunked: a full-table read must fit the 64-row host tier per call
+    for lo in range(0, ROWS, 32):
+        ids = np.arange(lo, lo + 32)
+        want, _ = bk.read_rows(state, ids)
+        got, _ = bk2.read_rows(state2, ids)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# pipeline prefetch
+# ---------------------------------------------------------------------------
+
+F, RPF = 3, 128
+CFG = ModelConfig(name="ct", arch_type="recsys", n_id_fields=F,
+                  ids_per_field=3, emb_dim=DIM, emb_rows=F * RPF,
+                  n_dense_features=4, mlp_dims=(16,), n_tasks=1)
+DS = CTRDataset("ct", n_rows=F * RPF, n_fields=F, ids_per_field=3, n_dense=4)
+
+
+def _trainer(backend="host_lru", cache_rows=RPF):
+    coll = adapters.ctr_collection(CFG, lr=5e-2, field_rows=DS.field_rows())
+    coll = coll.with_backend(backend, cache_rows)
+    ad = adapters.recsys_adapter(CFG, field_rows=DS.field_rows(),
+                                 collection=coll)
+    return PersiaTrainer(ad, TrainMode.hybrid(3),
+                         OptConfig(kind="adam", lr=5e-3))
+
+
+def _batches(n, batch=32, seed=0):
+    it = DS.sampler(batch, seed=seed)
+    return [{k: jnp.asarray(v) for k, v in next(it).items()}
+            for _ in range(n)]
+
+
+@pytest.mark.timeout(240)
+def test_prefetch_bit_exact_with_serial_at_inflight_1():
+    """prefetch=2 at max_inflight=1 with an eviction-free cache: the
+    look-ahead fault-in changes WHEN rows fault, not which rows or what
+    the step computes — the run equals the serial trainer bit for bit."""
+    batches = _batches(20)
+    ta = _trainer()
+    sa = ta.init(jax.random.PRNGKey(0), batches[0])
+    sa, ms_a = ta.run(sa, batches)
+    tb = _trainer()
+    engine = PipelinedTrainer(tb, max_inflight=1, prefetch=2)
+    sb, ms_b = engine.run(tb.init(jax.random.PRNGKey(0), batches[0]),
+                          batches)
+    assert [float(m["loss"]) for m in ms_a] == \
+        [float(m["loss"]) for m in ms_b]
+    for n in sa.emb:
+        np.testing.assert_array_equal(np.asarray(sa.emb[n]["table"]),
+                                      np.asarray(sb.emb[n]["table"]))
+        np.testing.assert_array_equal(np.asarray(sa.emb[n]["acc"]),
+                                      np.asarray(sb.emb[n]["acc"]))
+    for a, b in zip(jax.tree.leaves(sa.dense), jax.tree.leaves(sb.dense)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    pm = engine.pipeline_metrics()
+    assert pm["pipeline/prefetch/items"] == 20.0
+    assert pm["pipeline/prepare/busy_s"] <= pm["pipeline/prefetch/busy_s"]
+
+
+@pytest.mark.timeout(240)
+def test_prefetch_deep_pipeline_is_lossless_and_learns(tmp_path):
+    """prefetch over the full three-tier stack at max_inflight > 1: all
+    puts applied in order, pins released, losses finite."""
+    coll = adapters.ctr_collection(CFG, lr=5e-2, field_rows=DS.field_rows())
+    coll = coll.with_backend("host_lru+disk", RPF)
+    # one mmap directory per table: the store writes fixed file names
+    coll = coll.map_specs(lambda n, s: dataclasses.replace(
+        s, host_rows=64, disk_path=str(tmp_path / n)))
+    ad = adapters.recsys_adapter(CFG, field_rows=DS.field_rows(),
+                                 collection=coll)
+    tr = PersiaTrainer(ad, TrainMode.hybrid(3),
+                       OptConfig(kind="adam", lr=5e-3))
+    engine = PipelinedTrainer(tr, max_inflight=3, prefetch=2)
+    batches = _batches(12)
+    state = engine.init(jax.random.PRNGKey(0), batches[0])
+    state, ms = engine.run(state, batches)
+    assert len(ms) == 12
+    assert engine.applied_order == list(range(12))
+    assert all(np.isfinite(float(m["loss"])) for m in ms)
+    for bk in tr.backends.values():
+        assert int(np.asarray(bk._pin_count).sum()) == 0
+
+
+def test_prefetch_rejects_negative():
+    with pytest.raises(ValueError, match="prefetch"):
+        PipelinedTrainer(_trainer(), max_inflight=1, prefetch=-1)

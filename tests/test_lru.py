@@ -171,6 +171,8 @@ def test_eviction_reinitialises():
     store.get(np.array([2, 3]))          # evicts 1
     assert 1 not in store.index
     assert store.evictions == 1
+    back = store.get(np.array([1]))      # re-fault: freshly initialised
+    assert not np.array_equal(back[0], v1[0])
 
 
 def test_put_applies_adagrad():
@@ -258,7 +260,48 @@ def test_serialize_roundtrip():
     assert set(back.index) == set(store.index)
     np.testing.assert_array_equal(back.vectors[: back.size],
                                   store.vectors[: store.size])
-    # behaviourally identical afterwards
+    # behaviourally identical afterwards — rng state round-trips, so even
+    # the freshly-initialised miss rows match bit for bit
     a = store.get(np.array([11, 4]))
     b = back.get(np.array([11, 4]))
+    np.testing.assert_array_equal(a, b)
     assert set(store.index) == set(back.index)
+
+
+def test_deserialize_roundtrips_rng_state():
+    """Regression: deserialize used to rebuild the store with a fresh
+    seed-derived RNG, so the first post-restore miss drew different init
+    vectors than the original store would have."""
+    store = LRUEmbeddingStore(8, dim=4, seed=5)
+    store.get(np.arange(6))                   # advance the init RNG
+    back = LRUEmbeddingStore.deserialize(store.serialize())
+    a = store.get(np.array([100]))            # brand-new id on both sides
+    b = back.get(np.array([100]))
+    np.testing.assert_array_equal(a[0], b[0])
+
+
+def test_deserialize_roundtrips_init_scale_and_recency_flag():
+    store = LRUEmbeddingStore(8, dim=4, seed=2, init_scale=0.5,
+                              track_recency=False)
+    store.get(np.array([1, 2, 3]))
+    back = LRUEmbeddingStore.deserialize(store.serialize())
+    assert back.track_recency is False
+    assert back._init_scale == 0.5
+    a = store.get(np.array([200]))
+    b = back.get(np.array([200]))
+    np.testing.assert_array_equal(a[0], b[0])
+
+
+def test_deserialize_accepts_pre_cfg_blobs():
+    """Blobs written before store_cfg/rng_state existed must still load
+    (defaults apply: fresh RNG, recency tracking on)."""
+    store = LRUEmbeddingStore(8, dim=4, seed=1)
+    store.get(np.arange(10))
+    blob = store.serialize()
+    del blob["store_cfg"]
+    del blob["rng_state"]
+    back = LRUEmbeddingStore.deserialize(blob)
+    assert set(back.index) == set(store.index)
+    assert back.track_recency is True
+    np.testing.assert_array_equal(back.vectors[: back.size],
+                                  store.vectors[: store.size])

@@ -6,6 +6,7 @@ gauge bounds (sync = 0, hybrid <= tau), the Zipf traffic model, the click
 feedback queue, and the closed serve -> train -> serve loop beating a
 frozen-model control on the same traffic."""
 import threading
+import time
 
 import jax
 import jax.numpy as jnp
@@ -19,7 +20,7 @@ from repro.data.ctr import CTRDataset
 from repro.optim.optimizers import OptConfig
 from repro.serving import (ClickModel, FeedbackQueue, ServingConfig,
                            ServingService, StateCell, TrafficModel)
-from repro.serving.service import queue_lag
+from repro.serving.service import ServingStopTimeout, queue_lag
 
 F, RPF, D = 2, 64, 8
 
@@ -426,3 +427,53 @@ def test_feedback_loop_is_deterministic():
     a = _closed_loop_logloss(train=True, steps=8)
     b = _closed_loop_logloss(train=True, steps=8)
     np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# flush-error isolation and stop-timeout (satellite regressions)
+# ---------------------------------------------------------------------------
+
+def test_flush_error_fails_request_but_keeps_loop_alive():
+    """Regression: a malformed request used to kill the aggregator thread,
+    wedging every later future forever. Now the flush resolves its futures
+    with the exception, counts it, and keeps serving."""
+    trainer = _trainer("dense", mode=TrainMode.sync())
+    b = _batches(1)[0]
+    state = trainer.init(jax.random.PRNGKey(0), b)
+    cell = StateCell(state, 0)
+    with ServingService(trainer, cell, ServingConfig(1, 0.0)) as svc:
+        bad = svc.submit({"wrong": np.zeros(3, np.int64)})   # no "ids" key
+        with pytest.raises(KeyError):
+            bad.result(10.0)
+        good = svc.predict(_requests(1)[0], timeout=30.0)    # loop survived
+        m = svc.metrics()
+    assert good.shape == (CFG.n_tasks,)
+    assert m["serving/errors"] == 1.0
+    assert m["serving/requests"] >= 1       # the good request still served
+
+
+def test_stop_raises_instead_of_draining_live_queue():
+    """Regression: stop() used to drain the queue while the aggregator was
+    still wedged inside a flush, racing it for the same requests. Now a
+    failed join raises ServingStopTimeout and leaves the queue alone."""
+    trainer = _trainer("dense", mode=TrainMode.sync())
+    b = _batches(1)[0]
+    state = trainer.init(jax.random.PRNGKey(0), b)
+    cell = StateCell(state, 0)
+    svc = ServingService(trainer, cell,
+                         ServingConfig(max_batch=1, max_wait_ms=0.0,
+                                       timeout_s=0.3))
+    svc.start()
+    try:
+        with cell.lock:                    # wedge the flush mid-snapshot
+            fut = svc.submit(_requests(1)[0])
+            deadline = time.monotonic() + 10.0
+            while svc._queue and time.monotonic() < deadline:
+                time.sleep(0.005)          # loop has taken the batch ...
+            assert not svc._queue          # ... and is blocked on the lock
+            with pytest.raises(ServingStopTimeout):
+                svc.stop()
+        # lock released: the wedged flush completes and resolves the future
+        np.asarray(fut.result(10.0))
+    finally:
+        pass
