@@ -26,10 +26,15 @@ Three measurements, one per tentpole claim:
   the fault latency leaves the critical path without widening the put
   staleness.
 
+* ``store_dtype`` — the same dim-32 hybrid run with fp32 vs blockscale16
+  cold rows (``EmbeddingSpec.store_dtype``, the core/lru.py codec):
+  host-row payload bytes vs the per-step loss drift.
+
     PYTHONPATH=src python benchmarks/cache_tiers.py --steps 120 --check
 
 ``--check`` enforces the PR bar: admission hit-rate strictly above plain
-LRU at equal device slots, AND three-tier losses bit-equal to host_lru.
+LRU at equal device slots, three-tier losses bit-equal to host_lru, AND
+blockscale16 payload >= 1.8x smaller at <= 2e-3 loss delta.
 """
 from __future__ import annotations
 
@@ -97,14 +102,17 @@ def _replay(admission: bool, batches) -> tuple[float, float, "object"]:
     return hit_rate, (len(batches) - 1) / dt, bk
 
 
-def _parity_losses(backend: str, steps: int, cache_rows: int = 512):
+def _parity_losses(backend: str, steps: int, cache_rows: int = 512,
+                   store_dtype: str = "fp32", dim: int = 16):
     ds = CTRDataset("tiers", n_rows=4 * 1024, n_fields=4, ids_per_field=2,
                     n_dense=13)
     cfg = ModelConfig(name="tiers", arch_type="recsys", n_id_fields=4,
-                      ids_per_field=2, emb_dim=16, emb_rows=4 * 1024,
+                      ids_per_field=2, emb_dim=dim, emb_rows=4 * 1024,
                       n_dense_features=13, mlp_dims=(64, 32), n_tasks=1)
     coll = adapters.ctr_collection(cfg, lr=5e-2, field_rows=ds.field_rows())
     coll = coll.with_backend(backend, cache_rows)
+    if store_dtype != "fp32":
+        coll = coll.with_store_dtype(store_dtype)
     adapter = adapters.recsys_adapter(cfg, field_rows=ds.field_rows(),
                                       collection=coll)
     tr = PersiaTrainer(adapter, TrainMode.hybrid(2),
@@ -119,7 +127,8 @@ def _parity_losses(backend: str, steps: int, cache_rows: int = 512):
         st, m = tr.decomposed_step(st, b)
         losses.append(np.float32(m["loss"]))
     jax.block_until_ready(st.emb)
-    return losses, steps / (time.perf_counter() - t0)
+    payload = sum(bk.store.payload_bytes() for bk in tr.backends.values())
+    return losses, steps / (time.perf_counter() - t0), payload
 
 
 def _prefetch_rate(prefetch: int, steps: int, fault_ms: float = 5.0):
@@ -170,13 +179,27 @@ def run(steps: int = 120, results: dict | None = None):
         f"promotes={bk_adm.promotes}")]
 
     par_steps = max(min(steps // 10, 12), 4)
-    disk_l, sps_disk = _parity_losses("host_lru+disk", par_steps)
-    lru_l, sps_base = _parity_losses("host_lru", par_steps)
+    disk_l, sps_disk, _ = _parity_losses("host_lru+disk", par_steps)
+    lru_l, sps_base, _ = _parity_losses("host_lru", par_steps)
     bitequal = disk_l == lru_l
     rows.append((
         "cache_tiers/three_tier", 1e6 / sps_disk,
         f"losses_bitequal={bitequal} over {par_steps} hybrid steps "
         f"({sps_disk:.1f} vs host_lru {sps_base:.1f} steps/s)"))
+
+    # store_dtype capacity row (ISSUE 9 prong B): the SAME dim-32 hybrid
+    # run with fp32 vs blockscale16 cold rows — payload must shrink
+    # >= 1.8x while the training trajectory barely moves
+    bs_l, sps_bs, pay_bs = _parity_losses(
+        "host_lru", par_steps, store_dtype="blockscale16", dim=DIM)
+    f32_l, _, pay_f32 = _parity_losses("host_lru", par_steps, dim=DIM)
+    pay_ratio = pay_f32 / pay_bs
+    loss_delta = max(abs(a - b) for a, b in zip(bs_l, f32_l))
+    rows.append((
+        "cache_tiers/store_dtype", 1e6 / sps_bs,
+        f"payload={pay_bs} vs fp32 {pay_f32} ({pay_ratio:.2f}x) "
+        f"loss_delta={loss_delta:.2e} over {par_steps} hybrid steps "
+        f"dim={DIM}"))
 
     pf_steps = max(min(steps // 6, 16), 4)
     # discarded warm-up: the backend's fault-apply jits are module-level
@@ -192,7 +215,8 @@ def run(steps: int = 120, results: dict | None = None):
 
     if results is not None:
         results.update(hit_admission=hr_adm, hit_plain=hr_lru,
-                       bitequal=bitequal)
+                       bitequal=bitequal, pay_ratio=pay_ratio,
+                       loss_delta=float(loss_delta))
     return rows
 
 
@@ -220,10 +244,21 @@ def main():
             print("FAIL: three-tier losses diverge from host_lru",
                   file=sys.stderr)
             ok = False
+        if results["pay_ratio"] < 1.8:
+            print(f"FAIL: blockscale16 payload ratio "
+                  f"{results['pay_ratio']:.2f}x < 1.8x at dim {DIM}",
+                  file=sys.stderr)
+            ok = False
+        if results["loss_delta"] > 2e-3:
+            print(f"FAIL: blockscale16 loss delta "
+                  f"{results['loss_delta']:.2e} > 2e-3", file=sys.stderr)
+            ok = False
         if not ok:
             raise SystemExit(1)
         print(f"OK: admission hit-rate {results['hit_admission']:.3f} > "
-              f"plain {results['hit_plain']:.3f}; three-tier bit-equal")
+              f"plain {results['hit_plain']:.3f}; three-tier bit-equal; "
+              f"blockscale16 payload {results['pay_ratio']:.2f}x at "
+              f"loss delta {results['loss_delta']:.2e}")
 
 
 if __name__ == "__main__":

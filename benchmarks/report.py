@@ -15,6 +15,32 @@ def load(name):
     return json.load(open(path)) if os.path.exists(path) else []
 
 
+def _scalar(v):
+    import numpy as np
+    if isinstance(v, (bool, np.bool_)):
+        return bool(v)
+    if isinstance(v, (int, np.integer)):
+        return int(v)
+    if isinstance(v, (float, np.floating)):
+        return float(v)
+    return str(v)
+
+
+def save_bench(name, rows, results=None):
+    """Persist one benchmark's CSV rows (+ its --check inputs) to
+    ``results/BENCH_<name>.json`` — the perf-trajectory file set the CI
+    smoke accumulates run over run."""
+    os.makedirs(HERE, exist_ok=True)
+    blob = {"rows": [{"name": n, "us": float(us), "derived": d}
+                     for n, us, d in rows]}
+    if results:
+        blob["results"] = {k: _scalar(v) for k, v in results.items()}
+    path = os.path.join(HERE, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(blob, f, indent=1)
+    return path
+
+
 def fmt_bytes(b):
     return f"{b/2**30:.2f}"
 

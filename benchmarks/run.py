@@ -25,7 +25,7 @@ import traceback
 
 SUITES = ["compression", "scalability", "capacity", "convergence",
           "staleness", "end_to_end", "pipeline", "shard_scaling", "dedup",
-          "remote_ps", "serving_latency", "cache_tiers"]
+          "remote_ps", "serving_latency", "cache_tiers", "emb_backward"]
 
 
 def main() -> None:
@@ -52,6 +52,8 @@ def main() -> None:
             if args.fast and name == "dedup":
                 kwargs["steps"] = 5
             if args.fast and name == "remote_ps":
+                kwargs["steps"] = 5
+            if args.fast and name == "emb_backward":
                 kwargs["steps"] = 5
             if args.fast and name == "serving_latency":
                 kwargs["requests"] = 64

@@ -70,7 +70,7 @@ from repro.core import embedding_ps as PS
 from repro.core.dedup import DedupPlan
 from repro.core.embedding_ps import EmbeddingSpec
 from repro.core.hotness import HotnessSketch
-from repro.core.lru import LRUEmbeddingStore
+from repro.core.lru import LRUEmbeddingStore, STORE_DTYPES
 from repro.core.mmap_store import TieredHostStore
 from repro.utils import round_up
 
@@ -246,17 +246,27 @@ class EmbeddingBackend:
 
     def apply_put(self, state, dev_ids, grads):
         if D.is_plan(dev_ids):
-            g_u = D.plan_segment_sum(dev_ids.inv, grads,
-                                     int(dev_ids.dev.shape[0]))
-            return self._put_unique(state, dev_ids.dev, g_u)
+            return self._put_plan(state, dev_ids, grads)
         return self._put_flat(state, dev_ids, grads)
 
     def hybrid_update(self, state, queue, dev_ids, grads):
         if D.is_plan(dev_ids):
-            g_u = D.plan_segment_sum(dev_ids.inv, grads,
-                                     int(dev_ids.dev.shape[0]))
-            return self._hybrid_unique(state, queue, dev_ids.dev, g_u)
+            return self._hybrid_plan(state, queue, dev_ids, grads)
         return self._hybrid_flat(state, queue, dev_ids, grads)
+
+    def _put_plan(self, state, plan, grads):
+        """Plan-driven put. Default: decompose into the plan's segment-sum
+        then the unique-width put. Dense/HostLRU override with the fused
+        backward (segment-sum + optimizer apply + queue payload in one
+        pass, kernels/fused_backward.py); the shard router keeps the
+        decomposition (one segment-sum reused across every shard) and the
+        compressed wire bypasses this dispatch entirely."""
+        g_u = D.plan_segment_sum(plan.inv, grads, int(plan.dev.shape[0]))
+        return self._put_unique(state, plan.dev, g_u)
+
+    def _hybrid_plan(self, state, queue, plan, grads):
+        g_u = D.plan_segment_sum(plan.inv, grads, int(plan.dev.shape[0]))
+        return self._hybrid_unique(state, queue, plan.dev, g_u)
 
     def _lookup_flat(self, state, dev_ids):
         raise NotImplementedError
@@ -289,6 +299,40 @@ class EmbeddingBackend:
         return 0
 
 
+def _fused_backward(spec, state, inv, grads, apply_idx, apply_g, *,
+                    apply_self=False):
+    """One-pass plan-driven put: segment-sum the occurrence grads via the
+    dedup-plan inverse, apply the optimizer row-wise at ``apply_idx``
+    (-1 = no-op), return ``(new_state, g_push)`` with ``g_push`` the
+    queue-ready unique-width payload.
+
+    ``spec.backward_kernel`` selects the Pallas kernel (adagrad only — the
+    accumulator update is built into the pass); the default jnp oracle is
+    bit-identical to ``plan_segment_sum`` + ``PS._apply_sparse``, so
+    flipping the flag off is a no-op numerically.
+    """
+    if apply_g is None:
+        apply_g = jnp.zeros((int(apply_idx.shape[0]), spec.dim),
+                            jnp.float32)
+    acc = state.get("acc") if spec.optimizer == "adagrad" else None
+    if spec.backward_kernel and acc is not None:
+        from repro.kernels import ops as K
+        table, acc, g_push = K.fused_backward(
+            state["table"], acc, inv, grads, apply_idx, apply_g,
+            lr=spec.lr, eps=spec.eps, apply_self=apply_self)
+    else:
+        from repro.kernels import ref as KR
+        table, acc, g_push = KR.fused_backward_ref(
+            state["table"], acc, inv, grads, apply_idx, apply_g,
+            cap=int(apply_idx.shape[0]), lr=spec.lr, eps=spec.eps,
+            apply_self=apply_self)
+    new = dict(state)
+    new["table"] = table
+    if acc is not None:
+        new["acc"] = acc
+    return new, g_push
+
+
 # ===========================================================================
 # DenseBackend — today's device-sharded PS behind the protocol
 # ===========================================================================
@@ -300,6 +344,11 @@ class DenseBackend(EmbeddingBackend):
     requires_prepare = False
 
     def __init__(self, spec: EmbeddingSpec):
+        if spec.store_dtype != "fp32":
+            raise ValueError(
+                f"store_dtype={spec.store_dtype!r} compresses cold HOST "
+                "rows — the dense backend is fully device-resident; use a "
+                "host_lru backend (or drop store_dtype)")
         self.spec = spec
 
     def init(self, key, shards: int = 1, scale: float = 0.02):
@@ -323,6 +372,57 @@ class DenseBackend(EmbeddingBackend):
     def _put_unique(self, state, dev_u, g_u):
         return PS.apply_put(state, self.spec, dev_u, g_u,
                             assume_unique=True), {}
+
+    def _logical_to_pos(self, ids):
+        """Logical id (-1 = no-op) -> physical shuffled row, -1 preserved —
+        the assume_unique translation inside PS.apply_put, hoisted so the
+        fused pass can scatter rows directly."""
+        spec = self.spec
+        valid = (ids >= 0) & (ids < spec.rows)
+        pos = PS.shuffle_pos(jnp.where(valid, ids, 0), spec.padded_rows(1))
+        return jnp.where(valid, pos.astype(jnp.int32), -1)
+
+    def _fusable(self) -> bool:
+        # the fused pass is the single-PS-shard sparse apply; mesh-sharded
+        # tables keep the decomposed shard_map path
+        return PS._n_shards(PS._axes_for(self.spec.mode)[0]) == 1
+
+    def _put_plan(self, state, plan, grads):
+        if not self._fusable():
+            return super()._put_plan(state, plan, grads)
+        new, _ = _fused_backward(self.spec, state, plan.inv, grads,
+                                 self._logical_to_pos(plan.dev), None,
+                                 apply_self=True)
+        return new, {}
+
+    def _hybrid_plan(self, state, queue, plan, grads):
+        spec = self.spec
+        if spec.staleness <= 0 or queue is None:
+            st, m = self._put_plan(state, plan, grads)
+            return st, queue, m
+        if not self._fusable():
+            return super()._hybrid_plan(state, queue, plan, grads)
+        # pop the tau-stale put first (it reads the pre-push queue), fuse
+        # its apply with this step's segment-sum, then push the fresh
+        # payload into the popped slot — the queue_push_pop ordering
+        cap = int(queue["ids"].shape[1])
+        ptr = queue["ptr"]
+        old_ids = jnp.take(queue["ids"], ptr, axis=0)
+        old_g = jnp.take(queue["grads"], ptr, axis=0)
+        new, g_push = _fused_backward(spec, state, plan.inv, grads,
+                                      self._logical_to_pos(old_ids), old_g)
+        tau = queue["ids"].shape[0]
+        new_q = {
+            "ids": jax.lax.dynamic_update_index_in_dim(
+                queue["ids"],
+                D.pad_axis0(plan.dev.astype(jnp.int32), cap, -1), ptr, 0),
+            "grads": jax.lax.dynamic_update_index_in_dim(
+                queue["grads"], g_push.astype(queue["grads"].dtype),
+                ptr, 0),
+            "ptr": (ptr + 1) % tau,
+            "filled": jnp.minimum(queue["filled"] + 1, tau),
+        }
+        return new, new_q, {}
 
     def _hybrid_flat(self, state, queue, dev_ids, grads):
         spec = self.spec
@@ -421,6 +521,10 @@ class HostLRUBackend(EmbeddingBackend):
                 f"(got {spec.cache_rows})")
         if spec.optimizer not in ("adagrad", "sgd"):
             raise ValueError(spec.optimizer)
+        if spec.store_dtype not in STORE_DTYPES:
+            raise ValueError(
+                f"unknown store_dtype {spec.store_dtype!r}: one of "
+                f"{STORE_DTYPES}")
         self.spec = spec
         self.cache_rows = int(spec.cache_rows)
         # three-tier variant: the host store becomes a TieredHostStore
@@ -509,8 +613,10 @@ class HostLRUBackend(EmbeddingBackend):
             host_rows = int(spec.host_rows) or max(1024, spec.rows // 4)
             return TieredHostStore(spec.rows, spec.dim,
                                    host_rows=host_rows,
-                                   path=spec.disk_path)
-        return LRUEmbeddingStore(spec.rows, spec.dim, track_recency=False)
+                                   path=spec.disk_path,
+                                   store_dtype=spec.store_dtype)
+        return LRUEmbeddingStore(spec.rows, spec.dim, track_recency=False,
+                                 store_dtype=spec.store_dtype)
 
     def _init_with_rows_locked(self, ids, vecs, accs=None):
         spec = self.spec
@@ -897,6 +1003,50 @@ class HostLRUBackend(EmbeddingBackend):
         st, m = self._put_flat(state, jnp.where(still, old_slots, -1), old_g)
         return st, queue, m
 
+    def _put_plan(self, state, plan, grads):
+        # plan.dev already IS the (-1-signed) cache-slot vector: fuse the
+        # segment-sum with the slot-sparse optimizer apply directly
+        new, _ = _fused_backward(self.spec, state, plan.inv, grads,
+                                 plan.dev.astype(jnp.int32), None,
+                                 apply_self=True)
+        return new, {}
+
+    def _hybrid_plan(self, state, queue, plan, grads):
+        spec = self.spec
+        if spec.staleness <= 0 or queue is None:
+            st, m = self._put_plan(state, plan, grads)
+            return st, queue, m
+        # pop the tau-stale (slot, id, grads) first, drop it if its slot
+        # was recycled since the push, fuse its apply with this step's
+        # segment-sum, then push the fresh payload at the popped position
+        cap = int(queue["slots"].shape[1])
+        slots_cap = D.pad_axis0(plan.dev.astype(jnp.int32), cap, -1)
+        safe = jnp.clip(slots_cap, 0, self.dev_slots - 1)
+        logical = jnp.where(slots_cap >= 0, state["slot_ids"][safe], -1)
+        ptr = queue["ptr"]
+        old_slots = jnp.take(queue["slots"], ptr, axis=0)
+        old_ids = jnp.take(queue["ids"], ptr, axis=0)
+        old_g = jnp.take(queue["grads"], ptr, axis=0)
+        old_safe = jnp.clip(old_slots, 0, self.dev_slots - 1)
+        still = (old_slots >= 0) & (old_ids >= 0) & \
+            (state["slot_ids"][old_safe] == old_ids)
+        new, g_push = _fused_backward(spec, state, plan.inv, grads,
+                                      jnp.where(still, old_slots, -1),
+                                      old_g)
+        tau = queue["slots"].shape[0]
+        new_q = {
+            "slots": jax.lax.dynamic_update_index_in_dim(
+                queue["slots"], slots_cap, ptr, 0),
+            "ids": jax.lax.dynamic_update_index_in_dim(
+                queue["ids"], logical.astype(jnp.int32), ptr, 0),
+            "grads": jax.lax.dynamic_update_index_in_dim(
+                queue["grads"], g_push.astype(queue["grads"].dtype),
+                ptr, 0),
+            "ptr": (ptr + 1) % tau,
+            "filled": jnp.minimum(queue["filled"] + 1, tau),
+        }
+        return new, new_q, {}
+
     def _hybrid_unique(self, state, queue, slots_u, g_u):
         spec = self.spec
         if spec.staleness <= 0 or queue is None:
@@ -999,12 +1149,16 @@ class HostLRUBackend(EmbeddingBackend):
                 "with the cache geometry the checkpoint was trained under")
         sblob = blob["store"]
         if ("disk" in sblob) == self._disk:
-            # matching store format: bit-identical tier restore
+            # matching store format: bit-identical tier restore when the
+            # blob's store_dtype matches the spec's; a dtype mismatch
+            # re-encodes the blob's fp32 logical rows (both directions)
             if self._disk:
                 self.store = TieredHostStore.deserialize(
-                    sblob, path=spec.disk_path)
+                    sblob, path=spec.disk_path,
+                    store_dtype=spec.store_dtype)
             else:
-                self.store = LRUEmbeddingStore.deserialize(sblob)
+                self.store = LRUEmbeddingStore.deserialize(
+                    sblob, store_dtype=spec.store_dtype)
                 self.store.track_recency = False   # backend-owned: see init
         else:
             # cross-format restore (two-tier blob into a +disk backend, or
@@ -1045,7 +1199,7 @@ class HostLRUBackend(EmbeddingBackend):
             return 0
         if hasattr(s, "host_bytes"):        # tiered: host-tier arrays only
             return s.host_bytes()
-        return int(s.vectors.nbytes + s.opt_acc.nbytes + s.prev.nbytes
+        return int(s.payload_bytes() + s.opt_acc.nbytes + s.prev.nbytes
                    + s.next.nbytes + s.keys.nbytes)
 
     def cache_metrics(self) -> dict:

@@ -126,6 +126,18 @@ class EmbeddingCollection:
             return dataclasses.replace(s, **kw)
         return self.map_specs(fn)
 
+    def with_store_dtype(self, store_dtype: str) -> "EmbeddingCollection":
+        """Set every table's host-store row format (``"fp32"`` or the
+        blockscale-compressed ``"blockscale16"``, core/lru.py)."""
+        return self.map_specs(
+            lambda _, s: dataclasses.replace(s, store_dtype=store_dtype))
+
+    def with_backward_kernel(self, on: bool = True) -> "EmbeddingCollection":
+        """Toggle the fused Pallas embedding backward on every table
+        (kernels/fused_backward.py; off = the jitted jnp oracle)."""
+        return self.map_specs(
+            lambda _, s: dataclasses.replace(s, backward_kernel=bool(on)))
+
     def with_shards(self, shards: "int | Mapping[str, int]"
                     ) -> "EmbeddingCollection":
         """Set per-table embedding-PS shard counts (the ShardedBackend

@@ -60,6 +60,22 @@ class EmbeddingSpec:
     cache_rows: int = 0             # host_lru: device-resident hot slots
     wire_block: int = 128           # +compressed: blockscale block size
     wire_kernel: bool = False       # +compressed: Pallas kernel vs jnp ref
+    # -- fused backward (kernels/fused_backward.py) ---------------------------
+    # True routes the plan-driven put through the Pallas fused-backward
+    # kernel (segment-sum + adagrad apply + queue payload in one pass);
+    # False (default) keeps the jnp oracle on the same fused code path —
+    # bit-identical to the decomposed plan_segment_sum + _apply_sparse.
+    # Kernel path needs optimizer='adagrad' (falls back to the oracle
+    # otherwise) and applies to the single-shard dense / host_lru puts.
+    backward_kernel: bool = False
+    # -- host-store row format (core/lru.py, core/mmap_store.py) --------------
+    # 'fp32' (default) keeps cold host/disk rows at full precision;
+    # 'blockscale16' stores them blockscale-compressed (fp16 payload +
+    # one fp32 scale per <=128-wide block — the wire codec applied at
+    # rest), roughly halving host bytes per row. Rows are decompressed on
+    # fault-in and recompressed on write-back, so the device cache and
+    # the optimizer math stay fp32. host_lru backends only.
+    store_dtype: str = "fp32"
     # -- frequency-aware admission (core/hotness.py) --------------------------
     # > 0 enables the decayed count-min admission filter on host_lru
     # caches: a faulting id whose estimated hotness is below the

@@ -16,6 +16,43 @@ import numpy as np
 _NIL = -1
 _U64_MASK = (1 << 64) - 1
 
+# blockscale16 row codec — the wire format (kernels/ref.py) applied at
+# rest: fp16 payload + one fp32 scale per <=128-wide block of the row
+BS_KAPPA = 32_768.0
+BS_BLOCK = 128
+STORE_DTYPES = ("fp32", "blockscale16")
+
+
+def bs_blocks(dim: int) -> int:
+    return -(-int(dim) // BS_BLOCK)
+
+
+def bs_compress_rows(rows: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """(n, dim) fp32 -> ((n, dim) fp16 payload, (n, ceil(dim/128)) fp32
+    scales). Per-row blocks; the trailing partial block is padded with
+    zeros for the linf only (payload keeps the true width)."""
+    rows = np.asarray(rows, np.float32)
+    n, dim = rows.shape
+    nb = bs_blocks(dim)
+    pad = nb * BS_BLOCK - dim
+    buf = np.pad(rows, ((0, 0), (0, pad))) if pad else rows
+    blk = buf.reshape(n, nb, BS_BLOCK)
+    linf = np.max(np.abs(blk), axis=-1)
+    scale = (BS_KAPPA / np.maximum(linf, 1e-30)).astype(np.float32)
+    comp = (blk * scale[:, :, None]).astype(np.float16)
+    return comp.reshape(n, nb * BS_BLOCK)[:, :dim], scale
+
+
+def bs_decompress_rows(comp: np.ndarray, scale: np.ndarray) -> np.ndarray:
+    n, dim = comp.shape
+    nb = scale.shape[1]
+    pad = nb * BS_BLOCK - dim
+    buf = comp.astype(np.float32)
+    if pad:
+        buf = np.pad(buf, ((0, 0), (0, pad)))
+    blk = buf.reshape(n, nb, BS_BLOCK) / scale[:, :, None]
+    return blk.reshape(n, nb * BS_BLOCK)[:, :dim]
+
 
 def rng_state_array(rng: np.random.Generator) -> np.ndarray:
     """PCG64 bit-generator state as 6 uint64 scalars (the two 128-bit
@@ -43,7 +80,8 @@ class LRUEmbeddingStore:
     """Fixed-capacity LRU keyed by int64 id -> (vector, optimizer slot)."""
 
     def __init__(self, capacity: int, dim: int, seed: int = 0,
-                 init_scale: float = 0.02, track_recency: bool = True):
+                 init_scale: float = 0.02, track_recency: bool = True,
+                 store_dtype: str = "fp32"):
         assert capacity > 0
         self.capacity = capacity
         self.dim = dim
@@ -57,8 +95,21 @@ class LRUEmbeddingStore:
         # serializing cost that kept concurrent per-shard fault-ins from
         # scaling. Stores that actually evict must keep the default.
         self.track_recency = track_recency
-        # array-list: vectors, optimizer state, prev/next indices, keys
-        self.vectors = np.zeros((capacity, dim), np.float32)
+        if store_dtype not in STORE_DTYPES:
+            raise ValueError(
+                f"unknown store_dtype {store_dtype!r}: one of {STORE_DTYPES}")
+        self.store_dtype = store_dtype
+        # array-list: vectors, optimizer state, prev/next indices, keys.
+        # 'blockscale16' keeps the vector payload fp16 with one fp32 scale
+        # per <=128-wide block; every read decompresses, every write
+        # recompresses (cold rows cost ~half the bytes, the optimizer math
+        # upstream stays fp32).
+        if store_dtype == "blockscale16":
+            self.vectors = np.zeros((capacity, dim), np.float16)
+            self.vec_scale = np.zeros((capacity, bs_blocks(dim)), np.float32)
+        else:
+            self.vectors = np.zeros((capacity, dim), np.float32)
+            self.vec_scale = None
         self.opt_acc = np.zeros((capacity,), np.float32)
         self.prev = np.full(capacity, _NIL, np.int64)
         self.next = np.full(capacity, _NIL, np.int64)
@@ -102,6 +153,29 @@ class LRUEmbeddingStore:
         self._unlink(slot)
         self._push_front(slot)
 
+    # -- store_dtype-aware payload access ------------------------------------
+    def _get_rows(self, slots) -> np.ndarray:
+        """Decompressed fp32 vector rows for array-indexable ``slots``."""
+        if self.vec_scale is None:
+            return np.asarray(self.vectors[slots], np.float32)
+        return bs_decompress_rows(self.vectors[slots], self.vec_scale[slots])
+
+    def _set_rows(self, slots, vals):
+        vals = np.asarray(vals, np.float32).reshape(-1, self.dim)
+        if self.vec_scale is None:
+            self.vectors[slots] = vals
+        else:
+            comp, scale = bs_compress_rows(vals)
+            self.vectors[slots] = comp
+            self.vec_scale[slots] = scale
+
+    def payload_bytes(self) -> int:
+        """Bytes held by the vector payload (the store_dtype-scaled part)."""
+        n = self.vectors.nbytes
+        if self.vec_scale is not None:
+            n += self.vec_scale.nbytes
+        return int(n)
+
     def _alloc(self, key: int) -> int:
         if self.size < self.capacity:
             slot = self.size
@@ -111,7 +185,8 @@ class LRUEmbeddingStore:
             self._unlink(slot)
             old = int(self.keys[slot])
             if self.on_evict is not None:
-                self.on_evict(old, self.vectors[slot], self.opt_acc[slot])
+                self.on_evict(old, self._get_rows(np.array([slot]))[0],
+                              self.opt_acc[slot])
             del self.index[old]
             self.evictions += 1
         self.keys[slot] = key
@@ -158,19 +233,22 @@ class LRUEmbeddingStore:
         if slots.size and (slots >= 0).all():
             if self.track_recency:
                 self._touch_many(slots.tolist())
-            return self.vectors[slots].copy(), self.opt_acc[slots].copy()
+            return self._get_rows(slots), self.opt_acc[slots].copy()
         out_v = np.empty((len(ids), self.dim), np.float32)
         out_a = np.empty(len(ids), np.float32)
         for i, key in enumerate(ids.tolist()):
             slot = self.index.get(key)
             if slot is None:
                 slot = self._alloc(key)
-                self.vectors[slot] = (self._rng.standard_normal(self.dim)
-                                      * self._init_scale)
+                # write-then-read so a fresh row's first touch returns the
+                # same (store_dtype round-tripped) value as later reads
+                self._set_rows(np.array([slot]),
+                               (self._rng.standard_normal(self.dim)
+                                * self._init_scale)[None])
                 self.opt_acc[slot] = 0.0
             elif self.track_recency:
                 self._touch(slot)
-            out_v[i] = self.vectors[slot]
+            out_v[i] = self._get_rows(np.array([slot]))[0]
             out_a[i] = self.opt_acc[slot]
         return out_v, out_a
 
@@ -189,12 +267,15 @@ class LRUEmbeddingStore:
         if len(np.unique(l_slots)) == len(l_slots):
             acc = self.opt_acc[l_slots] + np.mean(l_g * l_g, axis=-1)
             self.opt_acc[l_slots] = acc
-            self.vectors[l_slots] -= lr * l_g / np.sqrt(acc + eps)[:, None]
+            self._set_rows(l_slots, self._get_rows(l_slots)
+                           - lr * l_g / np.sqrt(acc + eps)[:, None])
             return
         for slot, g in zip(l_slots.tolist(), l_g):
             acc = self.opt_acc[slot] + float(np.mean(g * g))
             self.opt_acc[slot] = acc
-            self.vectors[slot] -= lr * g / np.sqrt(acc + eps)
+            sl = np.array([slot])
+            self._set_rows(sl, self._get_rows(sl)[0]
+                           - lr * g / np.sqrt(acc + eps))
 
     def write_rows(self, ids: np.ndarray, vectors: np.ndarray,
                    opt_acc: np.ndarray | None = None):
@@ -206,7 +287,7 @@ class LRUEmbeddingStore:
         acc = None if opt_acc is None \
             else np.asarray(opt_acc, np.float32).reshape(-1)
         if slots.size and (slots >= 0).all():    # all-hit: fully batched
-            self.vectors[slots] = vectors
+            self._set_rows(slots, vectors)
             if acc is not None:
                 self.opt_acc[slots] = acc
             if self.track_recency:
@@ -218,7 +299,7 @@ class LRUEmbeddingStore:
                 slot = self._alloc(key)
             elif self.track_recency:
                 self._touch(slot)
-            self.vectors[slot] = vectors[i]
+            self._set_rows(np.array([slot]), vectors[i][None])
             if acc is not None:
                 self.opt_acc[slot] = acc[i]
 
@@ -236,8 +317,8 @@ class LRUEmbeddingStore:
         if n > self.capacity:
             raise ValueError(f"preload of {n} rows exceeds capacity "
                              f"{self.capacity}")
-        self.vectors[:n] = np.asarray(vectors, np.float32) \
-            .reshape(n, self.dim)
+        self._set_rows(np.arange(n), np.asarray(vectors, np.float32)
+                       .reshape(n, self.dim))
         if opt_acc is not None:
             self.opt_acc[:n] = np.asarray(opt_acc, np.float32).reshape(-1)
         self.keys[:n] = ids
@@ -265,9 +346,16 @@ class LRUEmbeddingStore:
         set_rng_state(self._rng, arr)
 
     def serialize(self) -> dict[str, np.ndarray]:
-        """Pure-array snapshot — a memory copy, no pointer chasing."""
-        return {
-            "vectors": self.vectors[: self.size].copy(),
+        """Pure-array snapshot — a memory copy, no pointer chasing.
+
+        ``vectors`` is ALWAYS the decompressed fp32 rows (the portable
+        logical payload any store_dtype — and any cross-format reader —
+        can restore from); a blockscale16 store additionally snapshots its
+        raw fp16 payload + scales so a matching-dtype restore is
+        bit-exact (re-compressing a decompressed row can differ by one
+        fp16 ulp when the block max re-rounds)."""
+        blob = {
+            "vectors": self._get_rows(np.arange(self.size)),
             "opt_acc": self.opt_acc[: self.size].copy(),
             "prev": self.prev[: self.size].copy(),
             "next": self.next[: self.size].copy(),
@@ -276,26 +364,46 @@ class LRUEmbeddingStore:
                               self.size, self.evictions], np.int64),
             # constructor/derived state the 6-scalar meta never carried:
             # a restored store that still faults/evicts must continue the
-            # run bit-identically (same init stream, same recency upkeep)
+            # run bit-identically (same init stream, same recency upkeep);
+            # the third slot records the store_dtype (absent = fp32)
             "store_cfg": np.array([self._init_scale,
-                                   float(self.track_recency)], np.float64),
+                                   float(self.track_recency),
+                                   float(self.vec_scale is not None)],
+                                  np.float64),
             "rng_state": self._rng_state_array(),
         }
+        if self.vec_scale is not None:
+            blob["vec16"] = self.vectors[: self.size].copy()
+            blob["vec16_scale"] = self.vec_scale[: self.size].copy()
+        return blob
 
     @classmethod
-    def deserialize(cls, blob: dict[str, np.ndarray]) -> "LRUEmbeddingStore":
+    def deserialize(cls, blob: dict[str, np.ndarray],
+                    store_dtype: str | None = None) -> "LRUEmbeddingStore":
+        """``store_dtype=None`` rebuilds in the blob's recorded format;
+        passing 'fp32' / 'blockscale16' restores into that format instead
+        (cross-format: the decompressed fp32 ``vectors`` are re-encoded)."""
         cap, dim, head, tail, size, ev = \
             (int(x) for x in np.asarray(blob["meta"]).reshape(-1)[:6])
         cfg = blob.get("store_cfg")
+        blob_bs = False
         if cfg is not None:                   # old blobs: 6-scalar meta only
             cfg = np.asarray(cfg, np.float64).reshape(-1)
+            blob_bs = cfg.size > 2 and cfg[2] != 0.0
+            target = store_dtype or ("blockscale16" if blob_bs else "fp32")
             store = cls(cap, dim, init_scale=float(cfg[0]),
-                        track_recency=bool(cfg[1] != 0.0))
+                        track_recency=bool(cfg[1] != 0.0),
+                        store_dtype=target)
         else:
-            store = cls(cap, dim)
+            store = cls(cap, dim, store_dtype=store_dtype or "fp32")
         if "rng_state" in blob:
             store._set_rng_state(blob["rng_state"])
-        store.vectors[:size] = blob["vectors"]
+        if store.vec_scale is not None and blob_bs and "vec16" in blob:
+            store.vectors[:size] = blob["vec16"]        # bit-exact payload
+            store.vec_scale[:size] = blob["vec16_scale"]
+        else:
+            store._set_rows(np.arange(size),
+                            np.asarray(blob["vectors"], np.float32))
         store.opt_acc[:size] = blob["opt_acc"]
         store.prev[:size] = blob["prev"]
         store.next[:size] = blob["next"]

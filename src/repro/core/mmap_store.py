@@ -30,19 +30,26 @@ import tempfile
 
 import numpy as np
 
-from repro.core.lru import LRUEmbeddingStore, rng_state_array, set_rng_state
+from repro.core.lru import (LRUEmbeddingStore, STORE_DTYPES, bs_blocks,
+                            bs_compress_rows, bs_decompress_rows,
+                            rng_state_array, set_rng_state)
 
 
 class MmapEmbeddingStore:
     """All ``rows`` logical rows of one table, memory-mapped on disk."""
 
     def __init__(self, rows: int, dim: int, seed: int = 0,
-                 init_scale: float = 0.02, path: str | None = None):
+                 init_scale: float = 0.02, path: str | None = None,
+                 store_dtype: str = "fp32"):
         assert rows > 0
         self.capacity = int(rows)
         self.dim = int(dim)
         self._rng = np.random.default_rng(seed)
         self._init_scale = float(init_scale)
+        if store_dtype not in STORE_DTYPES:
+            raise ValueError(
+                f"unknown store_dtype {store_dtype!r}: one of {STORE_DTYPES}")
+        self.store_dtype = store_dtype
         if path is None:
             self._tmp = tempfile.TemporaryDirectory(prefix="mmap_emb_")
             path = self._tmp.name
@@ -51,8 +58,20 @@ class MmapEmbeddingStore:
             os.makedirs(path, exist_ok=True)
         self.path = path
         mm = np.lib.format.open_memmap
-        self.vectors = mm(os.path.join(path, "vectors.npy"), mode="w+",
-                          dtype=np.float32, shape=(self.capacity, self.dim))
+        # 'blockscale16' maps the vector payload as fp16 + one fp32 scale
+        # per <=128-wide block — cold on-disk rows at ~half the bytes
+        if store_dtype == "blockscale16":
+            self.vectors = mm(os.path.join(path, "vectors.npy"), mode="w+",
+                              dtype=np.float16,
+                              shape=(self.capacity, self.dim))
+            self.vec_scale = mm(os.path.join(path, "vec_scale.npy"),
+                                mode="w+", dtype=np.float32,
+                                shape=(self.capacity, bs_blocks(self.dim)))
+        else:
+            self.vectors = mm(os.path.join(path, "vectors.npy"), mode="w+",
+                              dtype=np.float32,
+                              shape=(self.capacity, self.dim))
+            self.vec_scale = None
         self.opt_acc = mm(os.path.join(path, "opt_acc.npy"), mode="w+",
                           dtype=np.float32, shape=(self.capacity,))
         self.live = mm(os.path.join(path, "live.npy"), mode="w+",
@@ -73,6 +92,29 @@ class MmapEmbeddingStore:
             self.live[fresh] = 1
             self.size += int(np.unique(fresh).size)
 
+    # -- store_dtype-aware payload access -----------------------------------
+
+    def _get_rows(self, ids) -> np.ndarray:
+        if self.vec_scale is None:
+            return np.asarray(self.vectors[ids], np.float32)
+        return bs_decompress_rows(np.asarray(self.vectors[ids]),
+                                  np.asarray(self.vec_scale[ids]))
+
+    def _set_rows(self, ids, vals):
+        vals = np.asarray(vals, np.float32).reshape(-1, self.dim)
+        if self.vec_scale is None:
+            self.vectors[ids] = vals
+        else:
+            comp, scale = bs_compress_rows(vals)
+            self.vectors[ids] = comp
+            self.vec_scale[ids] = scale
+
+    def payload_bytes(self) -> int:
+        n = self.vectors.nbytes
+        if self.vec_scale is not None:
+            n += self.vec_scale.nbytes
+        return int(n)
+
     # -- bulk API (LRUEmbeddingStore-compatible) ----------------------------
 
     def read_rows(self, ids) -> tuple[np.ndarray, np.ndarray]:
@@ -84,17 +126,18 @@ class MmapEmbeddingStore:
         if miss.size:
             _, first = np.unique(miss, return_index=True)
             for k in miss[np.sort(first)].tolist():
-                self.vectors[k] = (self._rng.standard_normal(self.dim)
-                                   * self._init_scale)
+                self._set_rows(np.array([k]),
+                               (self._rng.standard_normal(self.dim)
+                                * self._init_scale)[None])
                 self.opt_acc[k] = 0.0
             self._mark_live(miss)
-        return (np.asarray(self.vectors[ids], np.float32),
+        return (self._get_rows(ids),
                 np.asarray(self.opt_acc[ids], np.float32))
 
     def write_rows(self, ids, vectors, opt_acc=None):
         ids = self._check_ids(ids)
-        self.vectors[ids] = np.asarray(vectors, np.float32) \
-            .reshape(len(ids), self.dim)
+        self._set_rows(ids, np.asarray(vectors, np.float32)
+                       .reshape(len(ids), self.dim))
         if opt_acc is not None:
             self.opt_acc[ids] = np.asarray(opt_acc, np.float32).reshape(-1)
         self._mark_live(ids)
@@ -106,35 +149,55 @@ class MmapEmbeddingStore:
         self.write_rows(ids, vectors, opt_acc)
 
     def disk_bytes(self) -> int:
-        return int(self.vectors.nbytes + self.opt_acc.nbytes
+        return int(self.payload_bytes() + self.opt_acc.nbytes
                    + self.live.nbytes)
 
     # -- (de)serialisation --------------------------------------------------
 
     def serialize(self) -> dict[str, np.ndarray]:
+        """``vectors`` is always decompressed fp32 (portable across
+        store_dtypes); a blockscale16 store adds its raw payload so a
+        matching-dtype restore is bit-exact (see LRUEmbeddingStore)."""
         keys = np.nonzero(np.asarray(self.live))[0].astype(np.int64)
-        return {
+        blob = {
             "keys": keys,
-            "vectors": np.asarray(self.vectors[keys], np.float32),
+            "vectors": self._get_rows(keys),
             "opt_acc": np.asarray(self.opt_acc[keys], np.float32),
             "meta": np.array([self.capacity, self.dim, self.size],
                              np.int64),
-            "store_cfg": np.array([self._init_scale], np.float64),
+            # second slot records the store_dtype (absent/0 = fp32)
+            "store_cfg": np.array([self._init_scale,
+                                   float(self.vec_scale is not None)],
+                                  np.float64),
             "rng_state": rng_state_array(self._rng),
         }
+        if self.vec_scale is not None:
+            blob["vec16"] = np.asarray(self.vectors[keys])
+            blob["vec16_scale"] = np.asarray(self.vec_scale[keys])
+        return blob
 
     @classmethod
-    def deserialize(cls, blob, path: str | None = None
+    def deserialize(cls, blob, path: str | None = None,
+                    store_dtype: str | None = None
                     ) -> "MmapEmbeddingStore":
         rows, dim, _ = (int(x) for x in
                         np.asarray(blob["meta"]).reshape(-1)[:3])
         cfg = np.asarray(blob["store_cfg"], np.float64).reshape(-1)
-        store = cls(rows, dim, init_scale=float(cfg[0]), path=path)
+        blob_bs = cfg.size > 1 and cfg[1] != 0.0
+        target = store_dtype or ("blockscale16" if blob_bs else "fp32")
+        store = cls(rows, dim, init_scale=float(cfg[0]), path=path,
+                    store_dtype=target)
         set_rng_state(store._rng, blob["rng_state"])
         keys = np.asarray(blob["keys"], np.int64)
-        store.write_rows(keys,
-                         np.asarray(blob["vectors"], np.float32),
-                         np.asarray(blob["opt_acc"], np.float32))
+        if store.vec_scale is not None and blob_bs and "vec16" in blob:
+            store.vectors[keys] = np.asarray(blob["vec16"])  # bit-exact
+            store.vec_scale[keys] = np.asarray(blob["vec16_scale"])
+            store.opt_acc[keys] = np.asarray(blob["opt_acc"], np.float32)
+            store._mark_live(keys)
+        else:
+            store.write_rows(keys,
+                             np.asarray(blob["vectors"], np.float32),
+                             np.asarray(blob["opt_acc"], np.float32))
         return store
 
 
@@ -151,18 +214,21 @@ class TieredHostStore:
 
     def __init__(self, rows: int, dim: int, host_rows: int,
                  seed: int = 0, init_scale: float = 0.02,
-                 path: str | None = None):
+                 path: str | None = None, store_dtype: str = "fp32"):
         if host_rows < 1:
             raise ValueError(f"host_rows must be >= 1 (got {host_rows})")
         self.capacity = int(rows)            # logical rows (disk tier)
         self.dim = int(dim)
+        self.store_dtype = store_dtype
         # the host tier genuinely evicts, so it MUST track recency —
         # unlike the backend's plain all-rows store, which never does
         self.host = LRUEmbeddingStore(min(int(host_rows), int(rows)), dim,
                                       seed=seed, init_scale=init_scale,
-                                      track_recency=True)
+                                      track_recency=True,
+                                      store_dtype=store_dtype)
         self.disk = MmapEmbeddingStore(rows, dim, seed=seed,
-                                       init_scale=init_scale, path=path)
+                                       init_scale=init_scale, path=path,
+                                       store_dtype=store_dtype)
         self.host.on_evict = self._spill
         self.promotions = 0                  # rows moved disk -> host
         self.spills = 0                      # rows demoted host -> disk
@@ -234,8 +300,12 @@ class TieredHostStore:
 
     def host_bytes(self) -> int:
         h = self.host
-        return int(h.vectors.nbytes + h.opt_acc.nbytes + h.prev.nbytes
+        return int(h.payload_bytes() + h.opt_acc.nbytes + h.prev.nbytes
                    + h.next.nbytes + h.keys.nbytes)
+
+    def payload_bytes(self) -> int:
+        """Vector payload bytes across both resident tiers."""
+        return int(self.host.payload_bytes() + self.disk.payload_bytes())
 
     def disk_bytes(self) -> int:
         return self.disk.disk_bytes()
@@ -257,14 +327,18 @@ class TieredHostStore:
         }
 
     @classmethod
-    def deserialize(cls, blob, path: str | None = None
-                    ) -> "TieredHostStore":
+    def deserialize(cls, blob, path: str | None = None,
+                    store_dtype: str | None = None) -> "TieredHostStore":
         rows, dim = (int(x) for x in
                      np.asarray(blob["meta"]).reshape(-1)[:2])
         tm = [int(x) for x in np.asarray(blob["tier_meta"]).reshape(-1)]
-        store = cls(rows, dim, host_rows=tm[0], path=path)
-        store.host = LRUEmbeddingStore.deserialize(blob["host"])
+        store = cls(rows, dim, host_rows=tm[0], path=path,
+                    store_dtype=store_dtype or "fp32")
+        store.host = LRUEmbeddingStore.deserialize(blob["host"],
+                                                   store_dtype=store_dtype)
         store.host.on_evict = store._spill
-        store.disk = MmapEmbeddingStore.deserialize(blob["disk"], path=path)
+        store.disk = MmapEmbeddingStore.deserialize(blob["disk"], path=path,
+                                                    store_dtype=store_dtype)
+        store.store_dtype = store.host.store_dtype
         store.promotions, store.spills = tm[1], tm[2]
         return store

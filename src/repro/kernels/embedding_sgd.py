@@ -4,11 +4,13 @@ the owning table row is DMA'd to VMEM (driven by scalar-prefetched ids),
 updated with row-wise adagrad, and written back in place
 (input_output_aliasing) — no dense (V, D) gradient is ever built.
 
-Rows must be pre-aggregated (core.compression.dedup_put) when ids repeat
-within a put: Pallas output-revisit semantics require each output block to
-be owned by consecutive grid steps, so duplicate ids in one put would
-last-write-win, matching the paper's lock-free overwrite semantics anyway —
-dedup keeps it exact instead.
+Rows must be pre-aggregated (core.compression.dedup_put or a DedupPlan)
+when ids repeat within a put: the kernel reads each table row through an
+aliased INPUT block, which does not observe earlier grid steps' output
+writes, so duplicate ids in one put would last-write-win and silently
+drop gradients. Since PR 5 the unique data path guarantees pre-aggregated
+rows — ``check_unique`` turns an occurrence-width call into a loud error
+instead (``ops.embedding_sgd`` runs it unless ``assume_unique`` vouches).
 """
 from __future__ import annotations
 
@@ -16,8 +18,29 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+
+def check_unique(ids) -> None:
+    """Raise ValueError when concrete ``ids`` contain duplicates among the
+    valid (>= 0) entries — the occurrence-width misuse this kernel cannot
+    honor. Traced ids (inside jit) are skipped: the check needs host
+    values, and the jitted callers are the vetted unique-width paths."""
+    if isinstance(ids, jax.core.Tracer):
+        return
+    host = np.asarray(ids).reshape(-1)
+    valid = host[host >= 0]
+    if valid.size != np.unique(valid).size:
+        uniq, counts = np.unique(valid, return_counts=True)
+        dups = uniq[counts > 1][:8]
+        raise ValueError(
+            "embedding_sgd requires pre-aggregated unique ids (duplicate "
+            f"ids last-write-win and drop gradients); got duplicates "
+            f"{dups.tolist()} among {valid.size} valid ids. Segment-sum "
+            "via a DedupPlan / compression.dedup_put first, or pass "
+            "assume_unique=True if the rows are already aggregated.")
 
 
 def _sgd_kernel(ids_ref, grad_ref, row_ref, out_ref, *, lr: float):

@@ -1,0 +1,147 @@
+"""Pallas TPU kernel: fused embedding backward (paper Alg. 1 PS-side put).
+
+One scalar-prefetch-driven pass over ``n_occ + cap`` grid steps:
+
+* phase A (steps ``0 .. n_occ``) — segment-sum the occurrence-width grads
+  into a VMEM accumulator at unique width, driven by the dedup-plan
+  inverse (``core.dedup.DedupPlan.inv``); -1 inverse entries (padding)
+  are skipped;
+* phase B (steps ``n_occ .. n_occ + cap``) — per unique row: emit the
+  queue-ready payload row from the VMEM accumulator, and apply the
+  row-wise adagrad update to the owning table row in place
+  (``input_output_aliases``), reading table/acc THROUGH the output refs
+  so repeated physical rows (clipped -1 sentinels) observe each other's
+  writes exactly.
+
+No full-width ``(U, D)`` gradient intermediate is ever materialized in
+HBM: the decomposed path's segment-sum output and its padded queue copy
+both collapse into the single ``(cap, D)`` payload output.
+
+The jnp oracle is ``kernels.ref.fused_backward_ref``; the oracle (the
+default wired path — ``EmbeddingSpec.backward_kernel`` opts into this
+kernel) is bit-identical to ``core.embedding_ps._apply_sparse`` +
+``core.dedup.plan_segment_sum``. The kernel itself matches the oracle to
+the fp32 regroup class (~1e-7 relative): XLA tiles the oracle's
+``(cap, D)`` row-mean reduction differently from the kernel's per-row
+``(1, D)`` reduction, so the adagrad ``mean(g^2)`` sums in a different
+order — the payload and table/acc scatter structure are exact.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(idx_ref, inv_ref, grads_ref, applyg_ref, table_in, acc_in,
+            table_out, acc_out, push_out, gsum, *, n_occ: int, cap: int,
+            n_rows: int, lr: float, eps: float, apply_self: bool):
+    del table_in, acc_in                     # aliased: read via the out refs
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        gsum[...] = jnp.zeros_like(gsum)
+
+    u = inv_ref[jnp.minimum(i, n_occ - 1)]
+
+    @pl.when((i < n_occ) & (u >= 0))
+    def _accumulate():
+        j = jnp.maximum(u, 0)
+        gsum[pl.ds(j, 1), :] += grads_ref[...].astype(jnp.float32)
+
+    @pl.when(i >= n_occ)
+    def _apply():
+        j = jnp.clip(i - n_occ, 0, cap - 1)
+        g_row = gsum[pl.ds(j, 1), :]
+        push_out[...] = g_row
+        row = idx_ref[j]
+        live = (row >= 0) & (row < n_rows)
+        g_src = g_row if apply_self else applyg_ref[...].astype(jnp.float32)
+        g = jnp.where(live, g_src, 0.0)
+        inc = jnp.where(live, jnp.mean(jnp.square(g)), 0.0)
+        new_acc = acc_out[...] + inc         # out-ref read: fresh on revisit
+        acc_out[...] = new_acc
+        step = g * jax.lax.rsqrt(new_acc + eps)
+        upd = (-lr * step).astype(table_out.dtype)
+        # the self-equality select blocks XLA/LLVM from contracting the
+        # -lr multiply into an fma with the row add: the decomposed
+        # path's scatter-add rounds the product first, and bit-exactness
+        # vs that path is the contract (optimization_barrier does not
+        # survive interpret-mode lowering)
+        upd = jnp.where(upd == upd, upd, jnp.zeros_like(upd))
+        table_out[...] = table_out[...] + upd
+
+
+def fused_backward(table: jax.Array, acc: jax.Array, inv: jax.Array,
+                   grads: jax.Array, apply_idx: jax.Array,
+                   apply_g: jax.Array, *, lr: float, eps: float,
+                   apply_self: bool = False,
+                   interpret: bool = False):
+    """table: (R, D); acc: (R,) adagrad accumulator; inv: occurrence ->
+    unique position (-1 pad, any leading shape); grads: occurrence grads;
+    apply_idx: (cap,) physical rows to update (-1 = no-op); apply_g:
+    (cap, D) grads applied at apply_idx unless ``apply_self`` routes the
+    freshly summed payload into the update (sync / staleness-0).
+
+    Returns (table, acc, g_push) with table/acc aliased in place on TPU
+    and g_push: (cap, D) fp32 the queue-ready payload.
+    """
+    flat = inv.reshape(-1)
+    n_occ = int(flat.shape[0])
+    g_occ = grads.reshape(n_occ, -1)
+    D = int(g_occ.shape[1])
+    R = int(table.shape[0])
+    cap = int(apply_idx.shape[0])
+    acc2 = acc.reshape(R, 1)
+
+    def _row(i, idx_pref, inv_pref):
+        j = jnp.clip(i - n_occ, 0, cap - 1)
+        return jnp.clip(idx_pref[j], 0, R - 1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_occ + cap,),
+        in_specs=[
+            pl.BlockSpec((1, D),
+                         lambda i, idx_pref, inv_pref:
+                         (jnp.minimum(i, n_occ - 1), 0)),          # grads
+            pl.BlockSpec((1, D),
+                         lambda i, idx_pref, inv_pref:
+                         (jnp.clip(i - n_occ, 0, cap - 1), 0)),    # apply_g
+            pl.BlockSpec((1, D),
+                         lambda i, idx_pref, inv_pref:
+                         (_row(i, idx_pref, inv_pref), 0)),        # table
+            pl.BlockSpec((1, 1),
+                         lambda i, idx_pref, inv_pref:
+                         (_row(i, idx_pref, inv_pref), 0)),        # acc
+        ],
+        out_specs=[
+            pl.BlockSpec((1, D),
+                         lambda i, idx_pref, inv_pref:
+                         (_row(i, idx_pref, inv_pref), 0)),        # table
+            pl.BlockSpec((1, 1),
+                         lambda i, idx_pref, inv_pref:
+                         (_row(i, idx_pref, inv_pref), 0)),        # acc
+            pl.BlockSpec((1, D),
+                         lambda i, idx_pref, inv_pref:
+                         (jnp.clip(i - n_occ, 0, cap - 1), 0)),    # push
+        ],
+        scratch_shapes=[pltpu.VMEM((cap, D), jnp.float32)],
+    )
+    new_table, new_acc, g_push = pl.pallas_call(
+        functools.partial(_kernel, n_occ=n_occ, cap=cap, n_rows=R,
+                          lr=lr, eps=eps, apply_self=apply_self),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((R, D), table.dtype),
+            jax.ShapeDtypeStruct((R, 1), acc.dtype),
+            jax.ShapeDtypeStruct((cap, D), jnp.float32),
+        ],
+        input_output_aliases={4: 0, 5: 1},   # arg idx incl. prefetch args
+        interpret=interpret,
+    )(apply_idx, flat, g_occ, apply_g, table, acc2)
+    return new_table, new_acc.reshape(R), g_push

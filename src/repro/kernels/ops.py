@@ -59,9 +59,33 @@ def unique_bag(table, dev, inv):
     return _ub.unique_bag(table, dev, inv, interpret=INTERPRET)
 
 
+def embedding_sgd(table, ids, grads, lr: float = 1e-2,
+                  assume_unique: bool = False):
+    """Row-wise SGD scatter-apply. The kernel last-write-wins on duplicate
+    ids, so callers must pass pre-aggregated unique rows; unless
+    ``assume_unique`` vouches for that, concrete (non-traced) ids are
+    checked and duplicates raise instead of silently dropping grads."""
+    if not assume_unique:
+        _sgd.check_unique(ids)
+    return _embedding_sgd_jit(table, ids, grads, lr)
+
+
 @functools.partial(jax.jit, static_argnames=("lr",))
-def embedding_sgd(table, ids, grads, lr: float = 1e-2):
+def _embedding_sgd_jit(table, ids, grads, lr: float):
     return _sgd.embedding_sgd(table, ids, grads, lr=lr, interpret=INTERPRET)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("lr", "eps", "apply_self"))
+def fused_backward(table, acc, inv, grads, apply_idx, apply_g, *,
+                   lr: float, eps: float, apply_self: bool = False):
+    """Fused embedding backward: dedup segment-sum + adagrad apply + queue
+    payload in one pass -> (table, acc, g_push). Oracle:
+    ``ref.fused_backward_ref``."""
+    from repro.kernels import fused_backward as _fb
+    return _fb.fused_backward(table, acc, inv, grads, apply_idx, apply_g,
+                              lr=lr, eps=eps, apply_self=apply_self,
+                              interpret=INTERPRET)
 
 
 @functools.partial(jax.jit, static_argnames=("scale", "causal", "window",

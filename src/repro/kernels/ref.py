@@ -1,6 +1,7 @@
 """Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract)."""
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 KAPPA = 32_768.0
@@ -44,3 +45,43 @@ def embedding_sgd_ref(table, ids, grads, *, lr):
     safe = jnp.where(valid, ids, 0)
     upd = jnp.where(valid[:, None], -lr * grads, 0.0).astype(table.dtype)
     return table.at[safe].add(upd)
+
+
+def fused_backward_ref(table, acc, inv, grads, apply_idx, apply_g, *,
+                       cap, lr, eps, apply_self=False):
+    """One-pass embedding backward: segment-sum occurrence grads to unique
+    width via the dedup-plan inverse, apply the row-wise adagrad (or sgd)
+    update, and emit the queue-ready unique-width grad payload.
+
+    table: (R, D); acc: (R,) adagrad accumulator or None for sgd;
+    inv: occurrence -> unique position (-1 pad, any leading shape);
+    grads: occurrence grads (matching leading shape, trailing D);
+    apply_idx: (cap,) table rows to update this step (-1 = no-op) —
+    the staleness queue's popped ids translated to physical rows;
+    apply_g: (cap, D) grads to apply at apply_idx, ignored when
+    ``apply_self`` routes the freshly summed payload straight into the
+    update (the sync / staleness-0 path).
+
+    Returns (table, acc, g_push) with g_push: (cap, D) fp32 — the
+    segment-summed payload, bit-identical to
+    ``plan_segment_sum(inv, grads, cap)``; the apply is bit-identical to
+    ``embedding_ps._apply_sparse``.
+    """
+    flat = inv.reshape(-1)
+    g = grads.reshape(flat.shape[0], -1).astype(jnp.float32)
+    safe_u = jnp.where(flat >= 0, flat, cap)
+    g_push = jnp.zeros((cap + 1, g.shape[1]), jnp.float32).at[safe_u].add(
+        g)[:cap]
+    n_rows = table.shape[0]
+    g_a = g_push if apply_self else apply_g
+    live = (apply_idx >= 0) & (apply_idx < n_rows)
+    safe = jnp.clip(apply_idx, 0, n_rows - 1)
+    ga = jnp.where(live[:, None], g_a.astype(jnp.float32), 0.0)
+    if acc is not None:
+        inc = jnp.where(live, jnp.mean(jnp.square(ga), axis=-1), 0.0)
+        acc = acc.at[safe].add(inc)
+        step = ga * jax.lax.rsqrt(acc[safe] + eps)[:, None]
+    else:
+        step = ga
+    table = table.at[safe].add((-lr * step).astype(table.dtype))
+    return table, acc, g_push

@@ -103,6 +103,16 @@ def _ctr_collection_for(cfg, ds, args):
     shards = parse_emb_shards(args.emb_shards)
     if shards != 1:
         coll = coll.with_shards(shards)
+    return _apply_emb_tuning(coll, args)
+
+
+def _apply_emb_tuning(coll, args):
+    """--store-dtype / --backward-kernel spec overrides (both paper-hot-path
+    knobs from kernels/fused_backward.py and the core/lru.py codec)."""
+    if args.store_dtype != "fp32":
+        coll = coll.with_store_dtype(args.store_dtype)
+    if args.backward_kernel:
+        coll = coll.with_backward_kernel(True)
     return coll
 
 
@@ -214,6 +224,7 @@ def train_lm(args):
     shards = parse_emb_shards(args.emb_shards)
     if shards != 1:
         coll = coll.with_shards(shards)
+    coll = _apply_emb_tuning(coll, args)
     if coll is not adapter.collection:
         adapter = dataclasses.replace(adapter, collection=coll)
     mode = mode_from_name(args.mode, args.tau)
@@ -300,6 +311,21 @@ def main():
     ap.add_argument("--cache-rows", type=int, default=0,
                     help="host_lru device-cache slots per table "
                          "(0 = rows_per_field/8, at least 1024)")
+    ap.add_argument("--store-dtype", default="fp32",
+                    choices=["fp32", "blockscale16"],
+                    help="host/disk cold-row format (core/lru.py): "
+                         "blockscale16 halves host bytes via the §4.2.3 "
+                         "blockscale fp16 codec (decompress on fault-in, "
+                         "compress on write-back)")
+    ap.add_argument("--backward-kernel", action="store_true",
+                    help="use the fused Pallas embedding backward "
+                         "(kernels/fused_backward.py) instead of the "
+                         "jitted jnp oracle — one pass for segment-sum + "
+                         "adagrad + queue payload")
+    ap.add_argument("--tuned-host", action="store_true",
+                    help="apply the tuned host profile (launch/hostenv.py): "
+                         "tcmalloc LD_PRELOAD (re-execs once; graceful "
+                         "no-op when absent) + XLA/TF host env tuning")
     ap.add_argument("--no-batch-dedup", action="store_true",
                     help="disable worker-side batch dedup (core/dedup.py): "
                          "run the pre-dedup occurrence-width lookup/queue/"
@@ -321,6 +347,12 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
+    if args.tuned_host:
+        from repro.launch.hostenv import apply_tuned_host
+        status = apply_tuned_host()      # re-execs once when tcmalloc found
+        if status == "no-tcmalloc":
+            print("--tuned-host: libtcmalloc not installed; "
+                  "applying env-only profile")
     if args.task == "ctr":
         train_ctr(args)
     else:

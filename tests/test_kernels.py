@@ -250,3 +250,123 @@ def test_embedding_sgd_untouched_rows_preserved():
     assert jnp.all(out[6:] == table[6:])
     assert jnp.all(out[:5] == table[:5])
     np.testing.assert_allclose(out[5], table[5] - 1.0)
+
+
+# ---------------------------------------------------------------------------
+# fused_backward (one-pass dedup segment-sum + adagrad apply + queue payload)
+# ---------------------------------------------------------------------------
+
+def _fused_backward_case(R, Dm, U, n_occ, seed, apply_self=False):
+    """Kernel vs jnp oracle. The queue payload (pure segment-sum) is
+    bit-exact; table/acc sit in the documented ~1e-7 reduction-order
+    class, hence allclose."""
+    rng = np.random.default_rng(seed)
+    table = jnp.asarray(rng.standard_normal((R, Dm)).astype(np.float32))
+    acc = jnp.asarray(rng.random(R).astype(np.float32))
+    inv = jnp.asarray(rng.integers(-1, U, n_occ), jnp.int32)
+    grads = jnp.asarray(rng.standard_normal((n_occ, Dm)).astype(np.float32))
+    n_live = max(U // 2, 1)                      # half the plan is padding
+    apply_idx = np.full(U, -1, np.int32)
+    apply_idx[:n_live] = rng.permutation(R)[:n_live]
+    apply_idx = jnp.asarray(apply_idx)
+    apply_g = jnp.zeros((U, Dm)) if apply_self else jnp.asarray(
+        rng.standard_normal((U, Dm)).astype(np.float32))
+    want = ref.fused_backward_ref(table, acc, inv, grads, apply_idx,
+                                  apply_g, cap=U, lr=5e-2, eps=1e-8,
+                                  apply_self=apply_self)
+    got = ops.fused_backward(table, acc, inv, grads, apply_idx, apply_g,
+                             lr=5e-2, eps=1e-8, apply_self=apply_self)
+    np.testing.assert_array_equal(np.asarray(got[2]), np.asarray(want[2]))
+    for g, w in zip(got[:2], want[:2]):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=2e-6, atol=2e-6)
+
+
+@pytest.mark.parametrize("R,Dm,U,n_occ,apply_self",
+                         [(64, 16, 8, 24, False), (128, 32, 16, 96, False),
+                          (257, 64, 32, 128, True), (32, 8, 4, 4, True)])
+def test_fused_backward_sweep(R, Dm, U, n_occ, apply_self):
+    _fused_backward_case(R, Dm, U, n_occ, R + n_occ, apply_self)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(deadline=None, max_examples=20)
+    @given(st.integers(8, 80), st.sampled_from([8, 16, 32, 64]),
+           st.sampled_from([4, 8, 16, 32]), st.integers(1, 128),
+           st.booleans())
+    def test_fused_backward_property(R, Dm, U, n_occ, apply_self):
+        _fused_backward_case(R, Dm, U, n_occ, R * 7 + n_occ, apply_self)
+else:
+    @pytest.mark.parametrize("R,Dm,U,n_occ,apply_self",
+                             [(8, 8, 4, 1, False), (80, 64, 32, 128, True),
+                              (33, 16, 8, 50, False)])
+    def test_fused_backward_property(R, Dm, U, n_occ, apply_self):
+        _fused_backward_case(R, Dm, U, n_occ, R * 7 + n_occ, apply_self)
+
+
+def test_fused_backward_all_padding():
+    """inv=-1 (padding occurrences) and apply_idx=-1 (plan padding) leave
+    the table/acc untouched and push exact zeros."""
+    table = jnp.ones((16, 8))
+    acc = jnp.ones((16,))
+    got = ops.fused_backward(
+        table, acc, jnp.full((6,), -1, jnp.int32), jnp.ones((6, 8)),
+        jnp.full((4,), -1, jnp.int32), jnp.ones((4, 8)),
+        lr=0.1, eps=1e-8)
+    assert jnp.all(got[0] == table) and jnp.all(got[1] == acc)
+    assert jnp.all(got[2] == 0)
+
+
+def test_fused_backward_ref_sgd():
+    """acc=None selects plain SGD: applied rows move by exactly
+    -lr * summed grad, untouched rows are preserved bit-exact."""
+    rng = np.random.default_rng(0)
+    table = jnp.asarray(rng.standard_normal((32, 8)).astype(np.float32))
+    inv = jnp.asarray([0, 0, 1, -1], jnp.int32)
+    grads = jnp.asarray(rng.standard_normal((4, 8)).astype(np.float32))
+    apply_idx = jnp.asarray([5, 9, -1], jnp.int32)
+    new_t, new_acc, push = ref.fused_backward_ref(
+        table, None, inv, grads, apply_idx, None, cap=3, lr=0.5, eps=1e-8,
+        apply_self=True)
+    assert new_acc is None
+    np.testing.assert_array_equal(np.asarray(push[0]),
+                                  np.asarray(grads[0] + grads[1]))
+    np.testing.assert_array_equal(np.asarray(push[1]), np.asarray(grads[2]))
+    np.testing.assert_array_equal(np.asarray(new_t[5]),
+                                  np.asarray(table[5] - 0.5 * push[0]))
+    np.testing.assert_array_equal(np.asarray(new_t[9]),
+                                  np.asarray(table[9] - 0.5 * push[1]))
+    untouched = np.setdiff1d(np.arange(32), [5, 9])
+    np.testing.assert_array_equal(np.asarray(new_t[untouched]),
+                                  np.asarray(table[untouched]))
+
+
+# ---------------------------------------------------------------------------
+# embedding_sgd duplicate-id contract (ISSUE 9 satellite)
+# ---------------------------------------------------------------------------
+
+def test_embedding_sgd_duplicate_ids_raise():
+    """Since the PR-5 unique path, puts are pre-aggregated: occurrence-width
+    ids must fail loudly instead of silently last-write-winning."""
+    table = jnp.ones((16, 8))
+    ids = jnp.asarray([3, 3, 7], jnp.int32)
+    grads = jnp.ones((3, 8))
+    with pytest.raises(ValueError, match="unique"):
+        ops.embedding_sgd(table, ids, grads, lr=0.1)
+
+
+def test_embedding_sgd_assume_unique_skips_guard():
+    table = jnp.ones((16, 8))
+    ids = jnp.asarray([3, 3, 7], jnp.int32)
+    grads = jnp.ones((3, 8))
+    out = ops.embedding_sgd(table, ids, grads, lr=0.1, assume_unique=True)
+    assert out.shape == table.shape
+
+
+def test_embedding_sgd_padding_duplicates_allowed():
+    """-1 padding repeats freely — only valid ids are checked."""
+    table = jnp.ones((16, 8))
+    ids = jnp.asarray([-1, -1, 5], jnp.int32)
+    grads = jnp.zeros((3, 8))
+    out = ops.embedding_sgd(table, ids, grads, lr=0.1)
+    assert jnp.all(out == table)

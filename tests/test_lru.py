@@ -305,3 +305,94 @@ def test_deserialize_accepts_pre_cfg_blobs():
     assert back.track_recency is True
     np.testing.assert_array_equal(back.vectors[: back.size],
                                   store.vectors[: store.size])
+
+
+# ---------------------------------------------------------------------------
+# blockscale16 storage dtype (ISSUE 9: cold rows compressed at rest)
+# ---------------------------------------------------------------------------
+
+def _bs_roundtrip_case(n, dim, logscale, seed=0):
+    """Property: the storage codec's per-element error is bounded by the
+    row-block L_inf times fp16 quantisation (same bound as the wire
+    codec — it IS the same mapping, one scale per 128-wide block)."""
+    from repro.core.lru import bs_compress_rows, bs_decompress_rows
+    rng = np.random.default_rng(seed)
+    v = (rng.standard_normal((n, dim)) * np.exp(logscale)).astype(np.float32)
+    comp, scale = bs_compress_rows(v)
+    assert comp.shape == v.shape and comp.dtype == np.float16
+    assert scale.shape == (n, -(-dim // 128))
+    out = bs_decompress_rows(comp, scale)
+    linf = np.abs(v).max(axis=1, keepdims=True) if v.size else 0.0
+    assert np.all(np.abs(out - v) <= linf * 2 ** -10 + 1e-12)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(deadline=None, max_examples=25)
+    @given(st.integers(1, 40), st.integers(1, 300), st.floats(-8, 8))
+    def test_blockscale_storage_roundtrip_bound(n, dim, logscale):
+        _bs_roundtrip_case(n, dim, logscale, seed=n * 1000 + dim)
+else:
+    @pytest.mark.parametrize("n,dim,logscale",
+                             [(1, 1, 0.0), (7, 37, -8.0), (40, 300, 8.0),
+                              (3, 128, 3.5), (5, 129, 0.0)])
+    def test_blockscale_storage_roundtrip_bound(n, dim, logscale):
+        _bs_roundtrip_case(n, dim, logscale, seed=n * 1000 + dim)
+
+
+@pytest.mark.parametrize("dim", [4, 32, 100, 128, 130, 256])
+def test_blockscale_store_read_your_writes(dim):
+    """First touch (miss-path init) and every later read must agree —
+    the store decompresses exactly what it compressed."""
+    store = LRUEmbeddingStore(64, dim, store_dtype="blockscale16")
+    ids = np.arange(20, dtype=np.int64)
+    vecs = np.random.default_rng(dim).standard_normal(
+        (20, dim)).astype(np.float32)
+    store.preload(ids, vecs)
+    v1, _ = store.read_rows(ids)
+    v2, _ = store.read_rows(ids)
+    np.testing.assert_array_equal(v1, v2)
+    # lossy but bounded
+    assert np.max(np.abs(v1 - vecs)) <= np.abs(vecs).max() * 2 ** -10
+
+
+def test_blockscale_store_payload_halves():
+    """dim 32: fp32 payload 128 B/row vs blockscale16 64+4 — the capacity
+    claim the cache_tiers benchmark pins at >= 1.8x."""
+    f32 = LRUEmbeddingStore(64, 32)
+    b16 = LRUEmbeddingStore(64, 32, store_dtype="blockscale16")
+    assert f32.payload_bytes() == 64 * 32 * 4
+    assert b16.payload_bytes() == 64 * (32 * 2 + 4)
+    assert f32.payload_bytes() / b16.payload_bytes() > 1.8
+
+
+def test_blockscale_store_serialize_cross_format():
+    """Checkpoints carry portable fp32 vectors + the raw fp16 payload:
+    matching-dtype restore is bit-exact, cross-format restores re-encode
+    (both directions load)."""
+    rng = np.random.default_rng(3)
+    ids = np.arange(16, dtype=np.int64)
+    vecs = rng.standard_normal((16, 24)).astype(np.float32)
+    b16 = LRUEmbeddingStore(32, 24, store_dtype="blockscale16")
+    b16.preload(ids, vecs)
+    blob = b16.serialize()
+    assert blob["vectors"].dtype == np.float32
+    same = LRUEmbeddingStore.deserialize(blob)
+    assert same.store_dtype == "blockscale16"
+    np.testing.assert_array_equal(same.read_rows(ids)[0],
+                                  b16.read_rows(ids)[0])
+    # blockscale blob -> fp32 store: loads the decompressed fp32 rows
+    as_f32 = LRUEmbeddingStore.deserialize(blob, store_dtype="fp32")
+    np.testing.assert_array_equal(as_f32.read_rows(ids)[0],
+                                  b16.read_rows(ids)[0])
+    # fp32 blob -> blockscale16 store: re-encodes on load
+    f32 = LRUEmbeddingStore(32, 24)
+    f32.preload(ids, vecs)
+    as_b16 = LRUEmbeddingStore.deserialize(f32.serialize(),
+                                           store_dtype="blockscale16")
+    np.testing.assert_array_equal(as_b16.read_rows(ids)[0],
+                                  b16.read_rows(ids)[0])
+
+
+def test_store_dtype_validated():
+    with pytest.raises(ValueError, match="store_dtype"):
+        LRUEmbeddingStore(8, 4, store_dtype="fp8")
