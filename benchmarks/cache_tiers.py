@@ -233,6 +233,12 @@ def main():
     print("name,us_per_call,derived")
     for n, us, derived in rows:
         print(f"{n},{us:.1f},{derived}")
+    # repo root on the path so this also works as `python benchmarks/...`
+    import os
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    from benchmarks.report import save_bench
+    save_bench("cache_tiers", rows, results)
     if args.check:
         ok = True
         if results["hit_admission"] <= results["hit_plain"]:

@@ -162,6 +162,14 @@ def main():
     print("name,us_per_call,derived")
     for n, us, derived in rows:
         print(f"{n},{us:.1f},{derived}")
+    # repo root on the path so this also works as `python benchmarks/...`
+    import os
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    from benchmarks.report import save_bench
+    save_bench("dedup", rows,
+               {f"dup{k}": f"speedup={v[0]:.3f}x qratio={v[1]:.3f}x"
+                for k, v in results.items()})
     if args.check:
         speedup, qratio = results[16]
         if speedup < 1.3 and qratio < 2.0:

@@ -1,49 +1,62 @@
-"""Multi-process PS honesty benchmark: what the RPC hop actually costs.
+"""Remote-PS transport benchmark: what the pipelined wire path buys, and
+what the RPC hop honestly costs.
 
-Runs the same small CTR model three ways —
+Real PS subprocesses (spawned through ``repro.launch.cluster.spawn_ps``,
+the same path the launcher uses) host the same small CTR model five ways:
 
-* ``inprocess``      — backends in the trainer process (the upper bound);
-* ``multiproc_raw``  — 2 PS subprocesses, raw fp32 wire payloads;
-* ``multiproc_lossy``— 2 PS subprocesses, blockscale-fp16 wire payloads
+* ``inprocess``        — backends in the trainer process (the upper bound);
+* ``blocking @rtt``    — ``pipelined=False``: the pre-pipelining wire, one
+  synchronous round-trip per (table x shard x phase) op, under a
+  server-injected per-op reply delay (a synthetic network RTT);
+* ``pipelined @rtt``   — the coalesced windowed transport under the same
+  injected RTT: puts and prepares ride one ``step_ops`` frame per
+  endpoint and ack asynchronously inside the tau-bounded window, so only
+  the lookups (whose activations the step must consume) still pay the RTT;
+* ``remote_raw/lossy`` — no injected RTT, dense/sync (payload-dominated
+  traffic, as in the blocking era), raw fp32 vs blockscale-fp16 payloads,
+  for the wire-envelope honesty bar.
 
-— and reports steps/s plus total bytes-on-wire (every client's
-``bytes_sent + bytes_recv``, so framing, ids and acks are all counted,
-not just tensor payloads).
+Round-trips are *measured, not modeled*: every client counts frames at
+the transport (``frames_sent``), deduped by connection (tables sharing an
+endpoint share one pooled connection), so the coalescing claim is a
+counted drop in frames/step.
 
-``--check`` pins the wire codec's honesty bar: compression must recover
->= 2x the *RPC envelope* — the bytes the RPC hop adds beyond the tensor
-payload (ids, message keys, framing, acks). The envelope is solved from
-the two measured totals under the codec's structural model (fp16 +
-per-block fp32 scales halve the compressible payload):
+Bit-exactness bars (``--check``):
 
-    W_raw = E + P,  W_lossy = E + P/2   =>   E = 2*W_lossy - W_raw
+* sync and hybrid(tau) training over the pipelined wire reproduce the
+  in-process losses bit for bit (no injected RTT — latency never changes
+  the numbers, only when they move);
+* a kill-a-shard drill in sync mode stays bit-exact THROUGH the elastic
+  reshard: the window is drained (every put acked, and every acked put
+  spooled before its ack) before the kill lands, so recovery loses
+  nothing — the drill pins "no acked put is ever lost";
+* the same drill in hybrid mode reshards with puts still in flight; the
+  dead shard's bounded-staleness queue (<= tau pending updates) is the
+  paper's tolerated in-flight loss, so the bar there is zero lost ACKED
+  rows and finite continued training, with the loss delta reported.
 
-and the bar is ``W_raw - W_lossy >= 2 * E`` — i.e. turning compression
-on saves at least twice what the RPC envelope costs.
-
-    PYTHONPATH=src python benchmarks/remote_ps.py --steps 20 --check
+    PYTHONPATH=src python benchmarks/remote_ps.py --steps 8 --check
 """
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import tempfile
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.launch.cluster import small_ctr_trainer, spawn_ps
 from repro.net.elastic import ElasticPSCluster
+from repro.net.remote import connect_remote_backends
 
 N_PS = 2
 DIM = 32          # payload-dominated traffic: 32 fp32 per row vs 4B of id
 WARMUP = 2
-
-
-def _model(seed: int = 0):
-    return small_ctr_trainer(mode="sync", backend="dense", dim=DIM,
-                             seed=seed)
+RTT = 0.02        # injected per-op reply delay for the transport bars
 
 
 def _batches(ds, n: int, batch: int = 16, seed: int = 0):
@@ -52,98 +65,253 @@ def _batches(ds, n: int, batch: int = 16, seed: int = 0):
             for _ in range(n)]
 
 
-def _wire_bytes(trainer) -> int:
-    total = 0
+def _clients(trainer):
+    """Distinct RpcClients (tables sharing an endpoint share ONE pooled
+    connection, so counters must be deduped by identity)."""
+    seen = {}
     for bk in trainer.backends.values():
-        for sub in bk.shard_backends:
-            total += sub._client.bytes_sent + sub._client.bytes_recv
-    return total
+        for sub in getattr(bk, "shard_backends", None) or [bk]:
+            seen[id(sub._client)] = sub._client
+    return list(seen.values())
 
 
-def _inprocess(steps: int) -> float:
-    trainer, ds = _model()
+def _frames(trainer) -> int:
+    return sum(c.frames_sent for c in _clients(trainer))
+
+
+def _wire_bytes(trainer) -> int:
+    return sum(c.bytes_sent + c.bytes_recv for c in _clients(trainer))
+
+
+def _spawn(n: int, reply_delay: float = 0.0):
+    """n real PS shard processes in a fresh workdir (port-file handshake,
+    per-shard spools — exactly the launcher's path)."""
+    workdir = tempfile.mkdtemp(prefix="remote_ps_bench_")
+    return [spawn_ps(workdir, i, reply_delay=reply_delay) for i in range(n)]
+
+
+def _reap(members):
+    for m in members:
+        if m.proc is not None and m.proc.poll() is None:
+            m.proc.kill()
+            m.proc.wait()
+
+
+def _drain(trainer, state):
+    for n, st in state.emb.items():
+        trainer.backends[n].sync(st)
+
+
+def _inprocess(steps: int, mode: str = "hybrid",
+               backend: str = "host_lru"):
+    """-> (steps/s, final loss) of the in-process reference."""
+    trainer, ds = small_ctr_trainer(mode=mode, backend=backend, dim=DIM)
     bs = _batches(ds, steps + WARMUP)
     state = trainer.init(jax.random.PRNGKey(0), bs[0])
+    m = {}
     for b in bs[:WARMUP]:
-        state, _ = trainer.decomposed_step(state, b)
+        state, m = trainer.decomposed_step(state, b)
     jax.block_until_ready(state.dense)
     t0 = time.perf_counter()
     for b in bs[WARMUP:]:
-        state, _ = trainer.decomposed_step(state, b)
+        state, m = trainer.decomposed_step(state, b)
     jax.block_until_ready(state.dense)
-    return steps / (time.perf_counter() - t0)
+    return steps / (time.perf_counter() - t0), float(np.float32(m["loss"]))
 
 
-def _multiproc(steps: int, lossy: bool):
-    """-> (steps/s, wire bytes over the timed steps)."""
-    trainer, ds = _model()
-    workdir = tempfile.mkdtemp(prefix="remote_ps_bench_")
-    members, cluster = [], None
+def _remote(steps: int, mode: str = "hybrid", backend: str = "host_lru",
+            pipelined: bool = True, reply_delay: float = 0.0,
+            lossy: bool = False):
+    """-> (steps/s, final loss, frames/step, wire bytes) over PS
+    subprocesses, timed past warmup with the transport counters deltaed."""
+    members = _spawn(N_PS, reply_delay=reply_delay)
+    trainer, ds = small_ctr_trainer(mode=mode, backend=backend, dim=DIM)
     try:
-        members = [spawn_ps(workdir, i) for i in range(N_PS)]
-        cluster = ElasticPSCluster(trainer, members)
-        cluster.connect(lossy=lossy)
+        connect_remote_backends(trainer, [m.endpoint for m in members],
+                                lossy=lossy, pipelined=pipelined)
         bs = _batches(ds, steps + WARMUP)
         state = trainer.init(jax.random.PRNGKey(0), bs[0])
+        m = {}
         for b in bs[:WARMUP]:
-            state, _ = cluster.step(state, b)
-        b0 = _wire_bytes(trainer)
+            state, m = trainer.decomposed_step(state, b)
+        _drain(trainer, state)
+        f0, b0 = _frames(trainer), _wire_bytes(trainer)
         t0 = time.perf_counter()
         for b in bs[WARMUP:]:
-            state, _ = cluster.step(state, b)
+            state, m = trainer.decomposed_step(state, b)
+        _drain(trainer, state)
         dt = time.perf_counter() - t0
-        return steps / dt, _wire_bytes(trainer) - b0
+        return (steps / dt, float(np.float32(m["loss"])),
+                (_frames(trainer) - f0) / steps, _wire_bytes(trainer) - b0)
+    finally:
+        for bk in trainer.backends.values():
+            bk.close()
+        _reap(members)
+
+
+def _kill_drill(steps: int, mode: str, drain_before_kill: bool):
+    """Train over 3 spooling PS shard processes, SIGKILL shard 1 mid-run,
+    recover by elastic reshard, finish. -> (final loss, lost acked rows)."""
+    members = _spawn(3)
+    trainer, ds = small_ctr_trainer(mode=mode, backend="host_lru", dim=DIM)
+    cluster = None
+    try:
+        cluster = ElasticPSCluster(trainer, members, max_recoveries=2,
+                                   ping_timeout=0.5)
+        cluster.connect(timeout=2.0, retries=1, backoff=0.05)
+        bs = _batches(ds, steps)
+        state = trainer.init(jax.random.PRNGKey(0), bs[0])
+        m = {}
+        kill_at = max(2, steps // 2)
+        for t, b in enumerate(bs):
+            if t == kill_at:
+                if drain_before_kill:
+                    # close the window: every put acked, and every acked
+                    # put spooled before its ack — the sync drill's
+                    # bit-exactness hinges on the kill losing nothing
+                    # that was acknowledged
+                    _drain(trainer, state)
+                proc = cluster.members[1].proc
+                proc.kill()
+                proc.wait()
+            state, m = cluster.step(state, b)
+        lost = sum(sum(e["lost_rows"].values()) for e in cluster.events
+                   if e["kind"] == "reshard")
+        return float(np.float32(m["loss"])), lost
     finally:
         if cluster is not None:
             cluster.close()
-        for m in members:
-            if m.proc is not None and m.proc.poll() is None:
-                m.proc.kill()
-                m.proc.wait()
+        _reap(members)
 
 
-def run(steps: int = 20, results: dict | None = None):
+def run(steps: int = 8, results: dict | None = None):
     """benchmarks/run.py entry — CSV rows (name, us, derived)."""
-    sps_in = _inprocess(steps)
-    sps_raw, w_raw = _multiproc(steps, lossy=False)
-    sps_lossy, w_lossy = _multiproc(steps, lossy=True)
+    res = results if results is not None else {}
+
+    # -- throughput under injected RTT: blocking vs pipelined ---------------
+    sps_in, loss_in_hyb = _inprocess(steps)
+    sps_blk, loss_blk, fps_blk, _ = _remote(steps, pipelined=False,
+                                            reply_delay=RTT)
+    sps_pip, loss_pip, fps_pip, _ = _remote(steps, pipelined=True,
+                                            reply_delay=RTT)
+    res["speedup"] = sps_pip / sps_blk
+    res["frames_per_step_blocking"] = fps_blk
+    res["frames_per_step_pipelined"] = fps_pip
+    res["bitexact_transport"] = bool(np.float32(loss_blk)
+                                     == np.float32(loss_pip))
+
+    # -- bit-exactness vs in-process, sync and hybrid(tau) ------------------
+    _, loss_rem_hyb, _, _ = _remote(steps)
+    _, loss_in_sync = _inprocess(steps, mode="sync")
+    _, loss_rem_sync, _, _ = _remote(steps, mode="sync")
+    res["bitexact_hybrid"] = bool(np.float32(loss_rem_hyb)
+                                  == np.float32(loss_in_hyb))
+    res["bitexact_sync"] = bool(np.float32(loss_rem_sync)
+                                == np.float32(loss_in_sync))
+
+    # -- kill-a-shard drills ------------------------------------------------
+    # the in-process reference consumes steps+2+WARMUP batches end to end;
+    # the drill (which has no warmup split) must see the exact same stream
+    _, loss_in_sync_k = _inprocess(steps + 2, mode="sync")
+    loss_kill_sync, lost_sync = _kill_drill(steps + 2 + WARMUP, "sync",
+                                            drain_before_kill=True)
+    loss_kill_hyb, lost_hyb = _kill_drill(steps + 2 + WARMUP, "hybrid",
+                                          drain_before_kill=False)
+    res["bitexact_sync_through_kill"] = bool(
+        np.float32(loss_kill_sync) == np.float32(loss_in_sync_k))
+    res["lost_acked_rows"] = lost_sync + lost_hyb
+    res["hybrid_kill_finite"] = bool(np.isfinite(loss_kill_hyb))
+    hyb_delta = abs(loss_kill_hyb - loss_in_sync_k)
+
+    # -- wire-envelope honesty bar (raw vs lossy payloads, no RTT) ----------
+    # dense/sync, as in the blocking era: put+get payloads dominate, with
+    # no fault-in id traffic (pure envelope) diluting the codec's savings
+    _, _, _, w_raw = _remote(steps, mode="sync", backend="dense")
+    _, _, _, w_lossy = _remote(steps, mode="sync", backend="dense",
+                               lossy=True)
     saved = w_raw - w_lossy
     envelope = max(2 * w_lossy - w_raw, 1)
-    if results is not None:
-        results["saved"], results["envelope"] = saved, envelope
+    res["saved"], res["envelope"] = saved, envelope
+
     return [
         ("remote_ps/inprocess", 1e6 / sps_in, f"{sps_in:.1f}steps/s"),
-        ("remote_ps/multiproc_raw", 1e6 / sps_raw,
-         f"{sps_raw:.1f}steps/s wire_bytes={w_raw} "
-         f"({w_raw // steps}B/step) slowdown="
-         f"{sps_in / sps_raw:.1f}x vs inprocess"),
-        ("remote_ps/multiproc_lossy", 1e6 / sps_lossy,
-         f"{sps_lossy:.1f}steps/s wire_bytes={w_lossy} "
-         f"({w_lossy // steps}B/step) saved={saved} "
+        ("remote_ps/blocking_rtt", 1e6 / sps_blk,
+         f"{sps_blk:.2f}steps/s rtt={RTT*1e3:.0f}ms "
+         f"frames/step={fps_blk:.1f}"),
+        ("remote_ps/pipelined_rtt", 1e6 / sps_pip,
+         f"{sps_pip:.2f}steps/s rtt={RTT*1e3:.0f}ms "
+         f"frames/step={fps_pip:.1f} speedup={res['speedup']:.2f}x "
+         f"bitexact_vs_blocking={res['bitexact_transport']}"),
+        ("remote_ps/bitexact", 0.0,
+         f"sync={res['bitexact_sync']} hybrid={res['bitexact_hybrid']}"),
+        ("remote_ps/kill_drill", 0.0,
+         f"sync_bitexact_through_reshard={res['bitexact_sync_through_kill']}"
+         f" lost_acked_rows={res['lost_acked_rows']} "
+         f"hybrid_recovered={res['hybrid_kill_finite']} "
+         f"hybrid_loss_delta={hyb_delta:.2e} (tau-bounded tolerated loss)"),
+        ("remote_ps/wire_raw", 0.0,
+         f"wire_bytes={w_raw} ({w_raw // steps}B/step)"),
+        ("remote_ps/wire_lossy", 0.0,
+         f"wire_bytes={w_lossy} ({w_lossy // steps}B/step) saved={saved} "
          f"envelope~{envelope} recovery={saved / envelope:.1f}x"),
     ]
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--steps", type=int, default=8)
     ap.add_argument("--check", action="store_true",
-                    help="exit nonzero unless compression saves >= 2x the "
-                         "RPC envelope bytes")
+                    help="exit nonzero unless pipelined >= 1.5x blocking "
+                         "steps/s under injected RTT with fewer frames/"
+                         "step, sync+hybrid remote losses are bit-exact "
+                         "with in-process (sync also through a kill-a-"
+                         "shard reshard, zero acked rows lost), and "
+                         "compression saves >= 2x the RPC envelope")
     args = ap.parse_args()
     results: dict = {}
     rows = run(args.steps, results)
     print("name,us_per_call,derived")
     for n, us, derived in rows:
         print(f"{n},{us:.1f},{derived}")
+    # repo root on the path so this also works as `python benchmarks/...`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    from benchmarks.report import save_bench
+    save_bench("remote_ps", rows, results)
     if args.check:
-        saved, envelope = results["saved"], results["envelope"]
-        if saved < 2 * envelope:
-            print(f"FAIL: compression saved {saved}B, < 2x the RPC "
-                  f"envelope (~{envelope}B)", file=sys.stderr)
+        ok = True
+        if results["speedup"] < 1.5:
+            print(f"FAIL: pipelined only {results['speedup']:.2f}x the "
+                  "blocking transport (< 1.5x)", file=sys.stderr)
+            ok = False
+        if results["frames_per_step_pipelined"] >= \
+                results["frames_per_step_blocking"]:
+            print("FAIL: coalescing did not reduce frames/step "
+                  f"({results['frames_per_step_pipelined']:.1f} vs "
+                  f"{results['frames_per_step_blocking']:.1f})",
+                  file=sys.stderr)
+            ok = False
+        for key in ("bitexact_transport", "bitexact_sync", "bitexact_hybrid",
+                    "bitexact_sync_through_kill", "hybrid_kill_finite"):
+            if not results[key]:
+                print(f"FAIL: {key} does not hold", file=sys.stderr)
+                ok = False
+        if results["lost_acked_rows"] != 0:
+            print(f"FAIL: {results['lost_acked_rows']} acked rows lost "
+                  "across the kill drills", file=sys.stderr)
+            ok = False
+        if results["saved"] < 2 * results["envelope"]:
+            print(f"FAIL: compression saved {results['saved']}B, < 2x the "
+                  f"RPC envelope (~{results['envelope']}B)", file=sys.stderr)
+            ok = False
+        if not ok:
             raise SystemExit(1)
-        print(f"OK: compression saved {saved}B, "
-              f"{saved / envelope:.1f}x the RPC envelope (~{envelope}B)")
+        print(f"OK: pipelined {results['speedup']:.2f}x blocking "
+              f"({results['frames_per_step_pipelined']:.1f} vs "
+              f"{results['frames_per_step_blocking']:.1f} frames/step), "
+              "bit-exact sync/hybrid (sync through kill-reshard, 0 acked "
+              f"rows lost), compression {results['saved']}B saved "
+              f"({results['saved'] / results['envelope']:.1f}x envelope)")
 
 
 if __name__ == "__main__":

@@ -144,6 +144,18 @@ def main():
     print("name,us_per_call,derived")
     for n, us, derived in rows:
         print(f"{n},{us:.1f},{derived}")
+    # repo root on the path so this also works as `python benchmarks/...`
+    import os
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    from benchmarks.report import save_bench
+    flat = {}
+    for k, v in results.items():
+        if isinstance(v, dict):
+            flat.update({f"{k}/{kk}": vv for kk, vv in v.items()})
+        else:
+            flat[k] = v
+    save_bench("serving_latency", rows, flat)
     if args.check:
         single = results["single"]["serving/qps"]
         best = results[results["best"]]

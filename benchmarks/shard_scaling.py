@@ -165,6 +165,13 @@ def main():
     print("name,us_per_call,derived")
     for n, us, derived in rows:
         print(f"{n},{us:.1f},{derived}")
+    # repo root on the path so this also works as `python benchmarks/...`
+    import os
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    from benchmarks.report import save_bench
+    save_bench("shard_scaling", rows,
+               {f"shards{k}": v for k, v in results.items()})
     if args.check:
         speedup = results[1] / results[4]
         if speedup < 1.5:

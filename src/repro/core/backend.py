@@ -148,6 +148,16 @@ class EmbeddingBackend:
         the per-unique occurrence counts for traffic accounting."""
         return state, ids
 
+    def prepare_submit(self, state, ids, assume_unique: bool = False,
+                       counts=None):
+        """Two-phase prepare: submit now, collect later. Returns a thunk
+        producing ``(state, device_ids)``. The split exists so a caller
+        preparing several tables can submit them all before collecting any
+        — remote backends buffer the submit into one coalesced RPC frame
+        per endpoint and only the collect waits. The in-process default
+        just defers the blocking :meth:`prepare`."""
+        return lambda: self.prepare(state, ids, assume_unique, counts)
+
     def read_rows(self, state, ids):
         """Serve-path read: LOGICAL ids -> ``(rows, info)`` where ``rows``
         is fp32 of shape ``ids.shape + (dim,)`` and ``info`` carries the
@@ -1530,11 +1540,18 @@ class ShardedBackend(EmbeddingBackend):
         return min(self.spec.rows, self.dev_rows)
 
     def prepare(self, state, ids, assume_unique: bool = False, counts=None):
-        """Concurrent per-shard fault-in: the batch is split by the routing
-        and every shard's ``prepare`` runs on the router's thread pool —
-        each under its own shard lock, so host fault-in latency scales down
-        with the shard count instead of serializing behind one global
-        lock. Returns shard-encoded device ids.
+        return self.prepare_submit(state, ids, assume_unique, counts)()
+
+    def prepare_submit(self, state, ids, assume_unique: bool = False,
+                       counts=None):
+        """Concurrent per-shard fault-in, two-phase: the batch is split by
+        the routing and every shard's prepare is *submitted* (remote
+        shards buffer one coalesced RPC into their endpoint's frame;
+        in-process shards defer the work); the returned thunk runs the
+        per-shard collects on the router's thread pool — each under its
+        own shard lock, so host fault-in latency scales down with the
+        shard count instead of serializing behind one global lock, and
+        shard RPCs wait concurrently. Returns shard-encoded device ids.
 
         On the batch-dedup path ``ids`` is the plan's unique set (routed
         subsets stay unique, so shards skip their own np.unique) and
@@ -1555,26 +1572,30 @@ class ShardedBackend(EmbeddingBackend):
                 np.add.at(self._traffic, own[valid],
                           np.asarray(counts, np.int64).reshape(-1)[valid])
 
-        def fault_one(s):
-            # counts stay positionally aligned: ids not owned by shard s
-            # are masked to -1, which the shard's own valid-mask filters
-            sub_ids = np.where(own == s, loc, -1)
-            return self.shard_backends[s].prepare(state[f"s{s}"], sub_ids,
-                                                  assume_unique, counts)
+        # counts stay positionally aligned: ids not owned by shard s are
+        # masked to -1, which the shard's own valid-mask filters
+        thunks = [
+            self.shard_backends[s].prepare_submit(
+                state[f"s{s}"], np.where(own == s, loc, -1),
+                assume_unique, counts)
+            for s in range(self.n_shards)
+        ]
 
-        pool = self._ensure_pool()
-        futs = [pool.submit(fault_one, s) for s in range(self.n_shards)]
-        new_state = dict(state)
-        devs = np.empty((self.n_shards, flat.size), np.int64)
-        for s, f in enumerate(futs):
-            st_s, dev_s = f.result()
-            new_state[f"s{s}"] = st_s
-            devs[s] = np.asarray(dev_s, np.int64).reshape(-1)
-        pick = np.where(own >= 0, own, 0)
-        local_dev = devs[pick, np.arange(flat.size)]
-        out = np.where((own >= 0) & (local_dev >= 0),
-                       own * self.stride + local_dev, -1)
-        return new_state, jnp.asarray(out.reshape(shape), jnp.int32)
+        def collect():
+            pool = self._ensure_pool()
+            futs = [pool.submit(t) for t in thunks]
+            new_state = dict(state)
+            devs = np.empty((self.n_shards, flat.size), np.int64)
+            for s, f in enumerate(futs):
+                st_s, dev_s = f.result()
+                new_state[f"s{s}"] = st_s
+                devs[s] = np.asarray(dev_s, np.int64).reshape(-1)
+            pick = np.where(own >= 0, own, 0)
+            local_dev = devs[pick, np.arange(flat.size)]
+            out = np.where((own >= 0) & (local_dev >= 0),
+                           own * self.stride + local_dev, -1)
+            return new_state, jnp.asarray(out.reshape(shape), jnp.int32)
+        return collect
 
     def read_rows(self, state, ids):
         """Serve-path read through the routing: every shard reads its own
@@ -2073,22 +2094,40 @@ def prepare_all(backends, states, ids):
 
     Returns ``(new_states, dev_ids, metrics)`` where metrics carries the
     per-table ``dedup/<table>/{dup_factor,unique_rows,bytes_saved}``
-    host gauges."""
+    host gauges.
+
+    Runs in two phases over the tables: every table's prepare is
+    *submitted* first (``prepare_submit``), then collected — remote
+    backends buffer all the submits into one coalesced frame per endpoint
+    and the collects' RPC waits overlap, so a k-table trainer pays one
+    round-trip per endpoint instead of k."""
     new_states = dict(states)
     dev_ids = {}
     metrics = {}
+    submitted = []
     for n in ids:
         b = backends[n]
         spec = b.spec
         if not spec.batch_dedup:
-            new_states[n], dev_ids[n] = b.prepare(states[n], ids[n])
-            for k, v in b.cache_metrics().items():
-                metrics[f"cache/{n}/{k}"] = v
+            submitted.append((n, None,
+                              b.prepare_submit(states[n], ids[n])))
             continue
         cap = D.dedup_cap(max(int(np.size(ids[n])), 1), b.dedup_rows())
         u_pad, inv, counts, info = D.make_plan(ids[n], spec.rows, cap)
-        new_states[n], dev_u = b.prepare(states[n], u_pad,
-                                         assume_unique=True, counts=counts)
+        submitted.append((n, (inv, info),
+                          b.prepare_submit(states[n], u_pad,
+                                           assume_unique=True,
+                                           counts=counts)))
+    for n, plan, collect in submitted:
+        b = backends[n]
+        spec = b.spec
+        if plan is None:
+            new_states[n], dev_ids[n] = collect()
+            for k, v in b.cache_metrics().items():
+                metrics[f"cache/{n}/{k}"] = v
+            continue
+        inv, info = plan
+        new_states[n], dev_u = collect()
         dev_ids[n] = DedupPlan(dev=jnp.asarray(dev_u, jnp.int32),
                                inv=jnp.asarray(inv, jnp.int32))
         itemsize = jnp.dtype(spec.dtype).itemsize

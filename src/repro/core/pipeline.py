@@ -23,6 +23,14 @@ working set. ``prefetch=0`` (the default) keeps the fault-in inside the
 prepare stage — the prefetch stage is a passthrough and dispatch order is
 unchanged, bit for bit.
 
+The same overlap extends to *remote* tables (``repro.net.remote``): there
+``prepare_all`` submits every table's fault-in as one coalesced
+``step_ops`` frame per PS endpoint and collects the replies together, so a
+prefetching pipeline holds up to ``k`` remote fault-ins in flight per
+endpoint — the PS round-trip hides behind the dense compute exactly like
+the disk tier's latency does, and the put path's outstanding-ack window
+(bounded by tau) keeps the paper's staleness contract while doing it.
+
 Each stage is a thread; bounded queues carry up to ``max_inflight``
 microbatches, so the host ``prepare`` phase (the out-of-core fault-in of the
 ``host_lru`` backend — the memory-bound leg) of step *t+1* overlaps the

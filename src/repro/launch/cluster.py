@@ -60,9 +60,12 @@ def wait_for_port_file(port_file: str, proc: subprocess.Popen,
 
 
 def spawn_ps(workdir: str, idx: int, host: str = "127.0.0.1",
-             spool_every: int = 1, timeout: float = 30.0) -> PSMember:
+             spool_every: int = 1, timeout: float = 30.0,
+             reply_delay: float = 0.0) -> PSMember:
     """Launch one PS shard process; returns its member record (endpoint +
-    spool dir + process handle)."""
+    spool dir + process handle). ``reply_delay`` injects a per-op reply
+    latency server-side (benchmarks: a synthetic network RTT the
+    pipelined transport should overlap, the blocking one pays per op)."""
     port_file = os.path.join(workdir, f"ps{idx}.port")
     spool_dir = os.path.join(workdir, f"ps{idx}.spool")
     log_path = os.path.join(workdir, f"ps{idx}.log")
@@ -74,6 +77,8 @@ def spawn_ps(workdir: str, idx: int, host: str = "127.0.0.1",
     cmd = [sys.executable, "-m", "repro.net.ps_server",
            "--host", host, "--port", "0", "--port-file", port_file,
            "--spool-dir", spool_dir, "--spool-every", str(spool_every)]
+    if reply_delay > 0:
+        cmd += ["--reply-delay", str(reply_delay)]
     log = open(log_path, "w")
     proc = subprocess.Popen(cmd, env=env, stdout=log,
                             stderr=subprocess.STDOUT)
@@ -108,18 +113,25 @@ def run_cluster(steps: int = 20, n_ps: int = 2, mode: str = "hybrid",
                 kill_shard: int | None = None, kill_at: int | None = None,
                 lossy: bool | None = None, spool_every: int = 1,
                 workdir: str | None = None, seed: int = 0,
-                heartbeats: bool = True) -> dict:
+                heartbeats: bool = True, pipelined: bool = True,
+                put_window: int | None = None,
+                reply_delay: float = 0.0) -> dict:
     """Spawn the cluster, train ``steps`` steps, optionally SIGKILL one
     shard mid-run, and return a summary (steps/s, loss, membership
-    events, lost rows)."""
+    events, lost rows). ``pipelined=False`` selects the blocking
+    per-op-round-trip wire baseline; ``put_window`` overrides the
+    outstanding-ack window (default: 1 for sync, min(tau, 8) for
+    hybrid); ``reply_delay`` injects per-op reply latency PS-side."""
     workdir = workdir or tempfile.mkdtemp(prefix="ps_cluster_")
     trainer, ds = small_ctr_trainer(mode=mode, backend=backend, seed=seed)
     members, cluster = [], None
     try:
-        members = [spawn_ps(workdir, i, spool_every=spool_every)
+        members = [spawn_ps(workdir, i, spool_every=spool_every,
+                            reply_delay=reply_delay)
                    for i in range(n_ps)]
         cluster = ElasticPSCluster(trainer, members)
-        cluster.connect(lossy=lossy)
+        cluster.connect(lossy=lossy, pipelined=pipelined,
+                        put_window=put_window)
         if heartbeats:
             cluster.start_heartbeats(interval=0.3, miss_threshold=2)
         it = ds.sampler(batch, seed=seed)
@@ -179,12 +191,25 @@ def main(argv=None):
                     help="blockscale-fp16 wire payloads")
     ap.add_argument("--spool-every", type=int, default=1)
     ap.add_argument("--workdir", default=None)
+    ap.add_argument("--transport", default="pipelined",
+                    choices=["pipelined", "blocking"],
+                    help="wire path: coalesced async (default) or the "
+                         "per-op synchronous-round-trip baseline")
+    ap.add_argument("--put-window", type=int, default=None,
+                    help="outstanding-ack window per table-shard "
+                         "(default: 1 sync, min(tau, 8) hybrid)")
+    ap.add_argument("--reply-delay", type=float, default=0.0,
+                    help="server-side per-op reply latency in seconds "
+                         "(synthetic network RTT)")
     args = ap.parse_args(argv)
     res = run_cluster(steps=args.steps, n_ps=args.ps, mode=args.mode,
                       backend=args.backend, batch=args.batch,
                       kill_shard=args.kill_shard, kill_at=args.kill_at,
                       lossy=args.lossy, spool_every=args.spool_every,
-                      workdir=args.workdir)
+                      workdir=args.workdir,
+                      pipelined=args.transport == "pipelined",
+                      put_window=args.put_window,
+                      reply_delay=args.reply_delay)
     print(f"cluster: {res['steps']} steps @ {res['steps_per_s']:.2f} "
           f"steps/s, final loss {res['loss']:.4f}, "
           f"{res['members']} PS members at exit")

@@ -85,7 +85,6 @@ def run_online(steps: int = 50, mode: str = "hybrid",
 
         train_log = {"losses": [], "feedback_batches": 0,
                      "fallback_batches": 0}
-        stop_serving = threading.Event()
 
         def trainer_loop():
             s = state
@@ -101,7 +100,6 @@ def run_online(steps: int = 50, mode: str = "hybrid",
                     s, m = trainer.step(s, b)
                     cell.publish(s, t + 1)
                 train_log["losses"].append(float(m.get("loss", np.nan)))
-            stop_serving.set()
 
         served = []                       # (impression idx, pred, label)
         served_lock = threading.Lock()
@@ -118,11 +116,13 @@ def run_online(steps: int = 50, mode: str = "hybrid",
                 gen = TrafficGenerator(traffic, qps=qps / max(n_clients, 1),
                                        seed=seed + cid)
                 gen.replay(requests_per_client, serve_one)
-            else:                          # closed loop: as fast as served
+            else:
+                # closed loop: serve the full quota as fast as replies
+                # come back — the quota, not the trainer's finish line,
+                # bounds the run, so `served` counts are deterministic
+                # however fast the training side moves
                 for _, req in traffic.requests(requests_per_client,
                                                seed=seed + cid):
-                    if stop_serving.is_set():
-                        break
                     serve_one(req)
 
         svc.start()

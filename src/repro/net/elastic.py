@@ -276,6 +276,9 @@ class ElasticPSCluster:
         only the client-side pytree was lost to donation)."""
         emb, eq = {}, {}
         for name, bk in self.trainer.backends.items():
+            # outstanding window acks reference the failed dispatch; drop
+            # them so the retry doesn't re-raise a stale transport error
+            bk.discard_pending()
             emb[name] = {f"s{s}": sub._fresh_state()
                          for s, sub in enumerate(bk.shard_backends)}
             eq[name] = (bk._queue_init_width(bk._queue_width_cfg)
@@ -296,6 +299,12 @@ class ElasticPSCluster:
                 f"all {len(self.members)} PS members are dead")
         emb, eq, lost = {}, {}, {}
         for name, bk in self.trainer.backends.items():
+            # discard the table's outstanding-ack window before resharding:
+            # unacked in-flight puts were addressed to the old geometry
+            # (possibly the dead shard) — the paper's tolerated loss, not
+            # an error to surface mid-recovery. Acked puts were spooled
+            # server-side before their ack, so nothing acked is lost.
+            bk.discard_pending()
             blobs = {}
             for i in dead:
                 sd = self.members[i].spool_dir
@@ -323,6 +332,14 @@ class ElasticPSCluster:
         new_members = self.members + [m]
         emb, eq = {}, {}
         for name, bk in self.trainer.backends.items():
+            # planned membership change, every member alive: DRAIN the
+            # outstanding-ack window (don't discard) so no buffered put is
+            # lost to the export — falling back to discard only if a member
+            # died under us (then recover() owns the cleanup anyway)
+            try:
+                bk.sync(state.emb[name])
+            except Exception:                          # noqa: BLE001
+                bk.discard_pending()
             emb[name], eq[name] = bk.reshard_live(
                 [mm.endpoint for mm in new_members], None)
         self.members = new_members

@@ -55,7 +55,8 @@ class PSServer:
     """One PS shard process (or in-process thread, for tests)."""
 
     def __init__(self, host: str = "127.0.0.1", port: int = 0,
-                 spool_dir: str | None = None, spool_every: int = 1):
+                 spool_dir: str | None = None, spool_every: int = 1,
+                 reply_delay: float = 0.0):
         self.spool_dir = spool_dir
         self.spool_every = int(spool_every)
         self._tables: dict[str, dict] = {}
@@ -82,7 +83,8 @@ class PSServer:
             "shutdown": self._op_shutdown,
             "die": self._op_die,
         }
-        self.rpc = RpcServer(handlers, host, port, mutating_ops=MUTATING_OPS)
+        self.rpc = RpcServer(handlers, host, port, mutating_ops=MUTATING_OPS,
+                             reply_delay=reply_delay)
 
     @property
     def port(self) -> int:
@@ -357,9 +359,13 @@ def main(argv=None):
                     help="spool applied state here before acking puts")
     ap.add_argument("--spool-every", type=int, default=1,
                     help="spool every N applied puts (0 = off)")
+    ap.add_argument("--reply-delay", type=float, default=0.0,
+                    help="delay every reply by this many seconds "
+                         "(injected RTT for pipelining benchmarks)")
     args = ap.parse_args(argv)
     server = PSServer(args.host, args.port, spool_dir=args.spool_dir,
-                      spool_every=args.spool_every).start()
+                      spool_every=args.spool_every,
+                      reply_delay=args.reply_delay).start()
     if args.port_file:
         tmp = args.port_file + ".tmp"
         with open(tmp, "w") as f:

@@ -12,7 +12,25 @@ every lookup consumes the version, so the data dependency forces
 put-before-lookup ordering across JAX's async dispatch — the same
 happens-before edge the in-process backends get from threading the table
 arrays themselves. ``prepare``/checkpoint paths block on the version
-(``np.asarray``) before their own RPC, which drains every ACKed put.
+(``np.asarray``) before their own RPC.
+
+The wire path is **pipelined** (see :mod:`repro.net.rpc`): a put does not
+wait for its ack — it is buffered into the connection's coalescing buffer
+and acknowledged asynchronously, bounded by a per-table **outstanding-ack
+window** (sync tables window 1; hybrid windows capped at the staleness
+bound tau, so the at-risk in-flight updates never exceed what the paper's
+bounded-staleness protocol already tolerates). Ordering no longer comes
+from draining: the server executes every op on a connection serially in
+arrival order, and the version-scalar barrier guarantees the put was
+*buffered* before the next prepare/lookup is, so puts always apply first
+— bit-exactness without a single blocking round-trip on the step path.
+``sync(state)`` drains the table's window (flush + wait every outstanding
+ack); ``prepare`` only takes the version barrier and rides the same
+coalesced frame as the buffered puts (put for step t + prepare for step
+t+1 arrive as ONE ``step_ops`` frame per endpoint). Endpoint connections
+are shared through a refcounted client pool, so a k-table trainer
+coalesces cross-table ops into O(shards) frames per step instead of
+O(tables x shards x phases).
 
 Numerics
 --------
@@ -45,6 +63,9 @@ are dropped on save, the same tolerated in-flight loss as a reshard.
 from __future__ import annotations
 
 import dataclasses
+import threading
+from collections import deque
+from concurrent.futures import Future
 
 import jax
 import jax.numpy as jnp
@@ -63,6 +84,46 @@ _SCALAR_F32 = jax.ShapeDtypeStruct((), jnp.float32)
 _SCALAR_I32 = jax.ShapeDtypeStruct((), jnp.int32)
 _PUT_OUT = (_SCALAR_I32, _SCALAR_F32, _SCALAR_F32)
 
+DEFAULT_MAX_PUT_WINDOW = 8     # hybrid ack-window cap (min'd with tau)
+_AUX_WINDOW = 64               # outstanding pin/unpin acks before reaping
+
+# ---------------------------------------------------------------------------
+# Shared per-endpoint clients: every table/shard talking to the same PS
+# process multiplexes ONE pipelined connection, so coalesced ops from all
+# of a trainer's tables ride the same step_ops frame. Refcounted so a
+# reshard (which closes and rebuilds sub-backends) tears the connection
+# down only when its last user is gone.
+# ---------------------------------------------------------------------------
+
+_POOL_LOCK = threading.Lock()
+_CLIENT_POOL: dict[tuple, list] = {}     # endpoint -> [client, refcount]
+
+
+def _acquire_client(endpoint, timeout: float, retries: int,
+                    backoff: float) -> RpcClient:
+    ep = (str(endpoint[0]), int(endpoint[1]))
+    with _POOL_LOCK:
+        ent = _CLIENT_POOL.get(ep)
+        if ent is None or ent[0]._closing:
+            ent = [RpcClient(ep[0], ep[1], timeout=timeout,
+                             retries=retries, backoff=backoff), 0]
+            _CLIENT_POOL[ep] = ent
+        ent[1] += 1
+        return ent[0]
+
+
+def _release_client(client: RpcClient):
+    with _POOL_LOCK:
+        ep = (client.host, client.port)
+        ent = _CLIENT_POOL.get(ep)
+        if ent is None or ent[0] is not client:
+            client.close()
+            return
+        ent[1] -= 1
+        if ent[1] <= 0:
+            del _CLIENT_POOL[ep]
+            client.close()
+
 
 class RemoteBackend(EmbeddingBackend):
     """One table (or one shard of a table) behind a PS process."""
@@ -70,7 +131,8 @@ class RemoteBackend(EmbeddingBackend):
     def __init__(self, spec: EmbeddingSpec, endpoint, table: str = "t",
                  lossy: bool = False, client: RpcClient | None = None,
                  timeout: float = 30.0, retries: int = 3,
-                 backoff: float = 0.2, configure: bool = True):
+                 backoff: float = 0.2, configure: bool = True,
+                 put_window: int | None = None, pipelined: bool = True):
         base, wrap = BK.parse_backend_name(spec.backend)
         if wrap:
             raise ValueError(
@@ -97,9 +159,25 @@ class RemoteBackend(EmbeddingBackend):
         self._lossy = bool(lossy)
         self._block = int(spec.wire_block)
         self._table = str(table)
-        self._client = client if client is not None else RpcClient(
-            endpoint[0], endpoint[1], timeout=timeout, retries=retries,
-            backoff=backoff)
+        if client is not None:
+            self._client, self._owns_client = client, True
+        else:
+            self._client = _acquire_client(endpoint, timeout, retries,
+                                           backoff)
+            self._owns_client = False
+        # outstanding-ack window: sync tables 1 (one unacked put at most);
+        # hybrid tables up to tau (in-flight loss stays within the paper's
+        # bounded-staleness tolerance), capped at DEFAULT_MAX_PUT_WINDOW
+        self._pipelined = bool(pipelined)
+        if put_window is None:
+            tau = int(spec.staleness)
+            put_window = 1 if tau <= 0 else max(
+                1, min(tau, DEFAULT_MAX_PUT_WINDOW))
+        if not self._pipelined:
+            put_window = 1      # blocking baseline: one synchronous RTT/op
+        self.put_window = max(1, int(put_window))
+        self._acks: deque = deque()       # outstanding put-ack futures
+        self._aux: deque = deque()        # outstanding pin/unpin acks
         self.faults = 0           # host_lru fault/hit mirrors (shard gauges)
         self.hits = 0
         self._queue_width_cfg = 0
@@ -117,16 +195,69 @@ class RemoteBackend(EmbeddingBackend):
         return self._client.call(op, _mutating=_mutating, table=self._table,
                                  **kw)
 
+    def _coal(self, op: str, _mutating: bool = False, **kw):
+        if not self._pipelined:
+            # blocking-baseline preset (the benchmark's comparison bar):
+            # every op is its own synchronous round-trip, no coalescing —
+            # the pre-pipelining wire path, behind the same interface
+            fut: Future = Future()
+            try:
+                fut.set_result(self._call(op, _mutating=_mutating, **kw))
+            except Exception as e:              # noqa: BLE001
+                fut.set_exception(e)
+            return fut
+        return self._client.coalesce(op, _mutating=_mutating,
+                                     table=self._table, **kw)
+
     def close(self):
-        self._client.close()
+        self.discard_pending()
+        if self._owns_client:
+            self._client.close()
+        else:
+            _release_client(self._client)
+
+    def discard_pending(self):
+        """Drop outstanding ack futures without raising — the membership
+        -change path: unacked in-flight puts on a dead shard are the
+        paper's tolerated loss, not an error to surface."""
+        self._acks.clear()
+        self._aux.clear()
 
     def _fresh_state(self):
         return {"version": jnp.zeros((), jnp.int32)}
 
-    def sync(self, state):
-        """Block until every put dispatched against ``state`` has been
-        ACKed by the PS (the version scalar is the last put's output)."""
+    def _barrier(self, state):
+        """Wait until every put dispatched against ``state`` has executed
+        its io_callback, i.e. is *buffered on this connection* (the
+        version scalar is the last put's output). Anything sent after this
+        is applied after those puts — the server runs a connection
+        serially in arrival order — so ordering needs no ack drain."""
         np.asarray(state["version"])
+
+    def _reap(self, q: deque, limit: int):
+        """Pop completed futures (raising their errors) and block the
+        window down to ``limit`` outstanding."""
+        while q and q[0].done():
+            err = q.popleft().exception()
+            if err is not None:
+                raise err
+        while len(q) > limit:
+            self._client.flush()            # oldest may still be buffered
+            err = None
+            try:
+                self._client.result(q[0])
+            except Exception as e:          # noqa: BLE001
+                err = e
+            q.popleft()
+            if err is not None:
+                raise err
+
+    def sync(self, state):
+        """Drain this table's window: block until every put dispatched
+        against ``state`` has been ACKed by the PS."""
+        self._barrier(state)
+        self._reap(self._acks, 0)
+        self._reap(self._aux, 0)
         return state
 
     def _dev_rows(self) -> int:
@@ -154,20 +285,36 @@ class RemoteBackend(EmbeddingBackend):
         return self._fresh_state()
 
     def prepare(self, state, ids, assume_unique: bool = False, counts=None):
+        return self.prepare_submit(state, ids, assume_unique, counts)()
+
+    def prepare_submit(self, state, ids, assume_unique: bool = False,
+                       counts=None):
+        """Buffer the prepare into the connection's coalescing buffer (it
+        rides the same ``step_ops`` frame as the buffered puts) and return
+        a thunk that collects ``(state, dev_ids)``. No drain: the version
+        barrier plus the server's serial per-connection execution order the
+        fault-in after every put dispatched against ``state``."""
         if not self.requires_prepare:
-            return state, ids             # dense: ids ARE device ids
-        self.sync(state)                  # puts must land before fault-in
-        rep = self._call("prepare", ids=np.asarray(ids, np.int64),
+            return lambda: (state, ids)   # dense: ids ARE device ids
+        self._barrier(state)              # puts buffered before prepare is
+        self._reap(self._acks, self.put_window)   # surface deferred errors
+        fut = self._coal("prepare", ids=np.asarray(ids, np.int64),
                          assume_unique=bool(assume_unique))
-        self.faults, self.hits = int(rep["faults"]), int(rep["hits"])
-        return state, jnp.asarray(rep["dev"], jnp.int32)
+
+        def collect():
+            self._client.flush()
+            rep = self._client.result(fut)
+            self.faults, self.hits = int(rep["faults"]), int(rep["hits"])
+            return state, jnp.asarray(rep["dev"], jnp.int32)
+        return collect
 
     def read_rows(self, state, ids):
         """Serve-path read as ONE RPC, executed atomically under the
         server's lock — no prepare/lookup pair for a concurrent trainer
-        fault-in to interleave with. Blocks on the version scalar first so
-        the read sees every put dispatched against ``state``."""
-        self.sync(state)
+        fault-in to interleave with. Takes the version barrier first (the
+        direct call flushes the coalescing buffer), so the serial server
+        applies every put dispatched against ``state`` before the read."""
+        self._barrier(state)
         arr = np.asarray(ids, np.int64)
         rep = self._call("read_rows", ids=arr)
         acts = wire.lossy_unpack(rep["acts"]).astype(np.float32, copy=False)
@@ -203,17 +350,22 @@ class RemoteBackend(EmbeddingBackend):
 
     def pin_slots(self, dev_ids):
         if self.requires_prepare:
-            self._call("pin", _mutating=True,
-                       slots=np.asarray(dev_ids, np.int64).reshape(-1))
+            self._reap(self._aux, _AUX_WINDOW)
+            self._aux.append(self._coal(
+                "pin", _mutating=True,
+                slots=np.asarray(dev_ids, np.int64).reshape(-1)))
 
     def unpin_slots(self, dev_ids):
         if self.requires_prepare:
-            self._call("unpin", _mutating=True,
-                       slots=np.asarray(dev_ids, np.int64).reshape(-1))
+            self._reap(self._aux, _AUX_WINDOW)
+            self._aux.append(self._coal(
+                "unpin", _mutating=True,
+                slots=np.asarray(dev_ids, np.int64).reshape(-1)))
 
     def reset_pins(self):
         if self.requires_prepare:
-            self._call("reset_pins", _mutating=True)
+            self._reap(self._aux, _AUX_WINDOW)
+            self._aux.append(self._coal("reset_pins", _mutating=True))
 
     # -- checkpoint / reshard --------------------------------------------------
 
@@ -267,10 +419,16 @@ class RemoteBackend(EmbeddingBackend):
         return g
 
     def _put_host(self, op: str, unique: bool, version, dev, g):
+        """Windowed async put: buffer the op (coalesced into the next
+        ``step_ops`` frame) and return immediately — the ack resolves in
+        the io thread. At most ``put_window`` acks stay outstanding; a
+        full window blocks on (and re-raises errors from) the oldest."""
         dev = np.asarray(dev, np.int32)
         g = np.asarray(g, np.float32)
         payload = self._grads_payload(g)
-        self._call(op, _mutating=True, dev=dev, grads=payload, unique=unique)
+        self._reap(self._acks, self.put_window - 1)
+        self._acks.append(self._coal(op, _mutating=True, dev=dev,
+                                     grads=payload, unique=unique))
         wire_b = dev.nbytes + wire.payload_nbytes(payload)
         return (np.int32(np.asarray(version) + 1), np.float32(wire_b),
                 np.float32(dev.nbytes + g.nbytes))
@@ -328,14 +486,16 @@ class RemoteShardedBackend(ShardedBackend):
 
     def __init__(self, spec: EmbeddingSpec, endpoints, lossy: bool = False,
                  table: str = "t", timeout: float = 30.0, retries: int = 3,
-                 backoff: float = 0.2):
+                 backoff: float = 0.2, put_window: int | None = None,
+                 pipelined: bool = True):
         self._endpoints = [tuple(e) for e in endpoints]
         if not self._endpoints:
             raise ValueError("RemoteShardedBackend needs >= 1 endpoint")
         self._lossy = bool(lossy)
         self._table = str(table)
         self._rpc_opts = {"timeout": timeout, "retries": retries,
-                          "backoff": backoff}
+                          "backoff": backoff, "put_window": put_window,
+                          "pipelined": pipelined}
         self._queue_width_cfg = 0
         self.last_reshard_lost_rows = 0
         super().__init__(dataclasses.replace(
@@ -363,9 +523,19 @@ class RemoteShardedBackend(ShardedBackend):
             self._pool = None
 
     def sync(self, state):
+        # flush every shard's buffer first so the ack waits overlap across
+        # shards instead of paying one serial round-trip each
+        for sub in self.shard_backends:
+            sub._client.flush()
         for s, sub in enumerate(self.shard_backends):
             sub.sync(state[f"s{s}"])
         return state
+
+    def discard_pending(self):
+        """Drop every shard's outstanding ack futures (membership change:
+        in-flight unacked puts are the tolerated loss, not an error)."""
+        for sub in self.shard_backends:
+            sub.discard_pending()
 
     # -- seeding / queues over RPC ---------------------------------------------
 
@@ -448,7 +618,9 @@ class RemoteShardedBackend(ShardedBackend):
 
 def connect_remote_backends(trainer, endpoints, lossy: bool | None = None,
                             timeout: float = 30.0, retries: int = 3,
-                            backoff: float = 0.2) -> dict:
+                            backoff: float = 0.2,
+                            put_window: int | None = None,
+                            pipelined: bool = True) -> dict:
     """Point every table of a built ``PersiaTrainer`` at remote PS members.
 
     Call AFTER constructing the trainer and BEFORE ``init``/``restore``.
@@ -475,11 +647,13 @@ def connect_remote_backends(trainer, endpoints, lossy: bool | None = None,
         if len(endpoints) == 1:
             trainer.backends[name] = RemoteBackend(
                 sub, endpoints[0], table=name, lossy=use_lossy,
-                timeout=timeout, retries=retries, backoff=backoff)
+                timeout=timeout, retries=retries, backoff=backoff,
+                put_window=put_window, pipelined=pipelined)
         else:
             trainer.backends[name] = RemoteShardedBackend(
                 sub, endpoints, lossy=use_lossy, table=name,
-                timeout=timeout, retries=retries, backoff=backoff)
+                timeout=timeout, retries=retries, backoff=backoff,
+                put_window=put_window, pipelined=pipelined)
     trainer._needs_prepare = BK.any_requires_prepare(trainer.backends)
     reset_trainer_jit(trainer)
     return trainer.backends

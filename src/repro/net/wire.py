@@ -26,6 +26,8 @@ import numpy as np
 
 MAGIC = b"PSR1"
 _HEADER = struct.Struct("<4sQ")       # magic + payload length
+MAGIC2 = b"PSR2"                      # rid-tagged frames (pipelined RPC)
+_HEADER2 = struct.Struct("<4sQQ")     # magic + rid + payload length
 MAX_FRAME = 1 << 33                   # 8 GiB sanity bound on one message
 
 KAPPA = 32_768.0                      # keep in sync with core/compression.py
@@ -67,10 +69,85 @@ def recv_frame(sock: socket.socket) -> bytes:
 
 
 # ---------------------------------------------------------------------------
+# Tagged framing (the pipelined transport): rid in the frame header so the
+# receiver demuxes replies without decoding payloads, scatter-gather send
+# over the codec's buffer list (no intermediate join), and a reusable
+# receive buffer so steady-state traffic allocates nothing per frame.
+# ---------------------------------------------------------------------------
+
+def send_frame_parts(sock: socket.socket, rid: int, parts) -> int:
+    """Send one rid-tagged frame from a list of buffers via ``sendmsg``
+    (scatter-gather — the payload is never joined into one bytes)."""
+    views = [memoryview(p).cast("B") for p in parts]
+    length = sum(len(v) for v in views)
+    if length > MAX_FRAME:
+        raise WireError(f"frame length {length} exceeds MAX_FRAME")
+    views.insert(0, memoryview(_HEADER2.pack(MAGIC2, rid, length)))
+    total = length + _HEADER2.size
+    sent = 0
+    while sent < total:
+        n = sock.sendmsg(views)
+        if n <= 0:
+            raise WireError("sendmsg made no progress")
+        sent += n
+        if sent >= total:
+            break
+        # drop fully-sent buffers, slice the partially-sent one
+        while n > 0:
+            if n >= len(views[0]):
+                n -= len(views[0])
+                views.pop(0)
+            else:
+                views[0] = views[0][n:]
+                n = 0
+    return total
+
+
+class RecvBuffer:
+    """A growable receive buffer one connection reuses across frames —
+    ``recv_frame_tagged`` reads payloads into it with ``recv_into`` (no
+    per-frame allocation once warm). ``decode`` copies arrays out, so the
+    returned view only has to live until the next recv."""
+
+    def __init__(self, initial: int = 1 << 16):
+        self._buf = bytearray(initial)
+
+    def view(self, n: int) -> memoryview:
+        if len(self._buf) < n:
+            self._buf = bytearray(max(n, 2 * len(self._buf)))
+        return memoryview(self._buf)[:n]
+
+
+def recv_into_exact(sock: socket.socket, view: memoryview):
+    got = 0
+    n = len(view)
+    while got < n:
+        r = sock.recv_into(view[got:])
+        if not r:
+            raise WireError(f"peer closed mid-frame ({got}/{n} bytes)")
+        got += r
+
+
+def recv_frame_tagged(sock: socket.socket,
+                      buf: RecvBuffer) -> tuple[int, memoryview]:
+    """Read one rid-tagged frame into ``buf``; returns ``(rid, payload)``.
+    The payload view aliases the reusable buffer — decode (which copies
+    arrays out) before the next read."""
+    magic, rid, length = _HEADER2.unpack(recv_exact(sock, _HEADER2.size))
+    if magic != MAGIC2:
+        raise WireError(f"bad frame magic {magic!r}")
+    if length > MAX_FRAME:
+        raise WireError(f"frame length {length} exceeds MAX_FRAME")
+    view = buf.view(int(length))
+    recv_into_exact(sock, view)
+    return int(rid), view
+
+
+# ---------------------------------------------------------------------------
 # Array-tree codec
 # ---------------------------------------------------------------------------
 
-def _enc_node(node, bufs: list[bytes]):
+def _enc_node(node, bufs: list):
     if node is None or isinstance(node, (bool, int, float, str)):
         return node if not isinstance(node, bool) else {"t": "b", "v": node}
     if isinstance(node, dict):
@@ -82,7 +159,11 @@ def _enc_node(node, bufs: list[bytes]):
     a = np.asarray(node)
     if a.dtype == object:
         raise WireError(f"cannot encode object array {node!r}")
-    raw = np.ascontiguousarray(a).tobytes()
+    # memoryview over the array's own buffer — no tobytes() copy; the view
+    # keeps the (contiguous) array alive for as long as the parts list does
+    # (cast rejects zero-size shapes, so empty arrays ship an empty buffer)
+    raw = (memoryview(np.ascontiguousarray(a)).cast("B") if a.size
+           else memoryview(b""))
     bufs.append(raw)
     return {"t": "a", "d": str(a.dtype), "s": list(a.shape), "n": len(raw)}
 
@@ -106,19 +187,29 @@ def _dec_node(node, bufs: list[memoryview], pos: list[int]):
     raise WireError(f"unknown wire node tag {t!r}")
 
 
-def encode(tree) -> bytes:
-    """Tree of dicts/lists/scalars/arrays -> one bytes payload."""
-    bufs: list[bytes] = []
+def encode_parts(tree) -> list:
+    """Tree -> list of payload buffers (header + raw array views, never
+    joined). Feed to :func:`send_frame_parts` for a scatter-gather send,
+    or ``b"".join(...)`` for the legacy one-bytes payload."""
+    bufs: list = []
     header = json.dumps(_enc_node(tree, bufs),
                         separators=(",", ":")).encode()
     parts = [struct.pack("<I", len(header)), header]
     parts.extend(bufs)
-    return b"".join(parts)
+    return parts
 
 
-def decode(payload: bytes):
+def encode(tree) -> bytes:
+    """Tree of dicts/lists/scalars/arrays -> one bytes payload."""
+    return b"".join(encode_parts(tree))
+
+
+def decode(payload):
+    """Inverse of :func:`encode`; accepts bytes or a memoryview (the
+    tagged-frame receive path decodes straight out of the reusable
+    receive buffer — arrays are copied out, so the view may be reused)."""
     (hlen,) = struct.unpack_from("<I", payload, 0)
-    header = json.loads(payload[4: 4 + hlen].decode())
+    header = json.loads(bytes(payload[4: 4 + hlen]))
     view = memoryview(payload)
     bufs: list[memoryview] = []
     off = 4 + hlen

@@ -1,7 +1,9 @@
 """The PS wire + RPC layer (repro/net/wire.py, rpc.py): framing over real
-sockets, array-tree codec roundtrips, numpy-vs-jnp blockscale bit parity,
-request timeout/retry/unavailable semantics, remote-error propagation, and
-at-most-once replay suppression for mutating ops."""
+sockets (legacy + rid-tagged zero-copy), array-tree codec roundtrips,
+numpy-vs-jnp blockscale bit parity, request timeout/retry/unavailable
+semantics, remote-error propagation, pipelined out-of-order completion,
+op coalescing, and at-most-once replay suppression for mutating ops
+(including retried in-flight seqs after a dropped reply)."""
 import socket
 import threading
 import time
@@ -44,6 +46,32 @@ def test_frame_bad_magic_and_short_read():
         with pytest.raises(wire.WireError, match="mid-frame"):
             wire.recv_frame(b)
     finally:
+        b.close()
+
+
+def test_tagged_frame_scatter_gather_roundtrip():
+    # the pipelined transport's framing: rid in the header, payload sent
+    # as a buffer list via sendmsg, received into a reusable buffer
+    a, b = socket.socketpair()
+    buf = wire.RecvBuffer(initial=16)        # force growth
+    tree = {"x": np.arange(1000, dtype=np.float32), "tag": "hello"}
+    parts = wire.encode_parts(tree)
+    try:
+        t = threading.Thread(target=wire.send_frame_parts,
+                             args=(a, 42, parts))
+        t.start()
+        rid, view = wire.recv_frame_tagged(b, buf)
+        t.join()
+        assert rid == 42
+        out = wire.decode(view)
+        assert out["tag"] == "hello"
+        np.testing.assert_array_equal(out["x"], tree["x"])
+        # decoded arrays are owned — reusing the buffer can't corrupt them
+        wire.send_frame_parts(a, 43, wire.encode_parts({"y": 0}))
+        wire.recv_frame_tagged(b, buf)
+        np.testing.assert_array_equal(out["x"], tree["x"])
+    finally:
+        a.close()
         b.close()
 
 
@@ -211,9 +239,9 @@ def test_rpc_replay_suppression_applies_mutations_once():
         assert (r1["n"], calls["n"]) == (1, 1)
         # replay the exact same (client, seq) — as a retry after a lost
         # reply would: the cached ack comes back, the handler does NOT run
-        payload = wire.encode({"op": "bump", "args": {"tag": "a"},
-                               "seq": 1, "client": c._client_id})
-        reply = wire.decode(srv._dispatch(payload))
+        reply = wire.decode(b"".join(srv._dispatch(
+            {"op": "bump", "args": {"tag": "a"},
+             "seq": 1, "client": c._client_id})))
         assert reply["ok"]["n"] == 1
         assert calls["n"] == 1                        # not re-applied
         # a NEW seq applies normally
@@ -222,6 +250,142 @@ def test_rpc_replay_suppression_applies_mutations_once():
         c.close()
     finally:
         srv.stop()
+
+
+def test_rpc_replay_window_covers_all_inflight_seqs():
+    # a pipelined client may retry ANY of its in-flight seqs after a lost
+    # reply, not just the latest — the server's replay cache must hold a
+    # window of recent seqs per client
+    srv, calls = _echo_server()
+    try:
+        c = RpcClient("127.0.0.1", srv.port, timeout=5.0, retries=0)
+        futs = [c.call_async("bump", _mutating=True) for _ in range(5)]
+        assert [c.result(f)["n"] for f in futs] == [1, 2, 3, 4, 5]
+        assert calls["n"] == 5
+        for seq in (1, 3, 5):                        # old AND new seqs
+            reply = wire.decode(b"".join(srv._dispatch(
+                {"op": "bump", "args": {}, "seq": seq,
+                 "client": c._client_id})))
+            assert reply["ok"]["n"] == seq           # the cached reply
+        assert calls["n"] == 5                       # nothing re-applied
+        c.close()
+    finally:
+        srv.stop()
+
+
+def test_rpc_retried_mutation_after_dropped_reply_not_double_applied():
+    # end-to-end: the handler applies, then the connection dies before the
+    # reply ships (a killed/partitioned link). The client reconnects and
+    # resends the same seq; the server must answer from the replay cache.
+    holder = {}
+
+    def bump_cut(**kw):
+        holder["calls"]["n"] += 1
+        if holder["calls"]["n"] == 1:
+            for conn in list(holder["srv"]._conns):  # sever BEFORE reply
+                try:
+                    conn.shutdown(socket.SHUT_RDWR)
+                except OSError:
+                    pass
+        return {"n": holder["calls"]["n"]}
+
+    srv, calls = _echo_server({"bump_cut": bump_cut})
+    holder["srv"], holder["calls"] = srv, calls
+    try:
+        c = RpcClient("127.0.0.1", srv.port, timeout=5.0, retries=3,
+                      backoff=0.02)
+        out = c.call("bump_cut", _mutating=True)
+        assert out["n"] == 1                         # the FIRST apply's ack
+        assert calls["n"] == 1                       # not double-applied
+        assert c.call("echo", ok=1)["ok"] == 1       # connection recovered
+        c.close()
+    finally:
+        srv.stop()
+
+
+def test_rpc_pipelined_out_of_order_completion():
+    ev = threading.Event()
+
+    def slow():
+        ev.wait(5.0)
+        return {"slow": True}
+
+    srv = RpcServer({"slow": slow, "echo": lambda **kw: kw,
+                     "ping": lambda: {}},
+                    concurrent_ops={"slow", "ping"}).start()
+    try:
+        c = RpcClient("127.0.0.1", srv.port, timeout=10.0, retries=0)
+        f_slow = c.call_async("slow")
+        futs = [c.call_async("echo", i=i) for i in range(8)]
+        # the fast requests complete while the slow one is still running
+        assert [c.result(f)["i"] for f in futs] == list(range(8))
+        assert not f_slow.done()
+        ev.set()
+        assert c.result(f_slow)["slow"] is True
+        c.close()
+    finally:
+        ev.set()
+        srv.stop()
+
+
+def test_rpc_coalesced_ops_ride_one_frame():
+    srv, calls = _echo_server()
+    try:
+        c = RpcClient("127.0.0.1", srv.port, timeout=5.0, retries=0)
+        c.call("echo", warm=1)                       # connection up
+        before = c.frames_sent
+        f1 = c.coalesce("echo", table="a", x=1)
+        f2 = c.coalesce("bump", _mutating=True, table="b")
+        f3 = c.coalesce("boom")
+        c.flush()
+        assert c.result(f1)["x"] == 1
+        assert c.result(f2)["n"] == 1
+        with pytest.raises(RpcError, match="handler exploded"):
+            c.result(f3)                 # sub-op error isolated to its slot
+        assert calls["n"] == 1
+        assert c.frames_sent == before + 1           # ONE frame for all 3
+        # a direct call flushes buffered sub-ops first (order preserved)
+        f4 = c.coalesce("bump", _mutating=True, table="b")
+        out = c.call("bump", _mutating=True)
+        assert c.result(f4)["n"] == 2 and out["n"] == 3
+        c.close()
+    finally:
+        srv.stop()
+
+
+def test_rpc_sockets_set_nodelay():
+    srv, _ = _echo_server()
+    try:
+        c = RpcClient("127.0.0.1", srv.port, timeout=5.0, retries=0)
+        assert c.call("echo", a=1)["a"] == 1
+        assert c._sock.getsockopt(socket.IPPROTO_TCP,
+                                  socket.TCP_NODELAY) != 0
+        server_conns = list(srv._conns)
+        assert server_conns, "server should hold the live connection"
+        for conn in server_conns:
+            assert conn.getsockopt(socket.IPPROTO_TCP,
+                                   socket.TCP_NODELAY) != 0
+        c.close()
+    finally:
+        srv.stop()
+
+
+def test_rpc_server_stop_joins_handler_threads():
+    srv, _ = _echo_server()
+    clients = [RpcClient("127.0.0.1", srv.port, timeout=5.0, retries=0)
+               for _ in range(3)]
+    for c in clients:
+        assert c.call("echo", a=1)["a"] == 1
+    threads = list(srv._threads) + [srv._accept_thread]
+    assert any(t.is_alive() for t in threads)
+    srv.stop()
+    for t in threads:
+        assert not t.is_alive(), f"{t.name} leaked past stop()"
+    for c in clients:
+        c.close()
+    # the port is actually free again: rebind immediately
+    srv2 = RpcServer({"echo": lambda **kw: kw}, port=srv.port).start()
+    srv2.stop()
 
 
 def test_rpc_concurrent_clients():

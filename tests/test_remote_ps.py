@@ -291,6 +291,45 @@ def test_elastic_kill_reshard_join(servers, tmp_path):
     assert np.isfinite(float(m["loss"]))
 
 
+def test_midwindow_shard_kill_reshards_without_losing_acked_puts(
+        servers, tmp_path):
+    """Kill a shard with windowed puts still in flight (hybrid tau=3 ->
+    put_window=3, acks outstanding across steps): the failure classifies
+    as a PS failure, recovery discards only the unacked window (the
+    paper's tolerated in-flight loss) and reshards from the spools —
+    every ACKED put was spooled before its ack, so no rows are lost."""
+    srvs = servers(3, spool_root=tmp_path)
+    members = [PSMember("127.0.0.1", s.port, spool_dir=s.spool_dir)
+               for s in srvs]
+    bs = _batches(6)
+    t = _trainer("host_lru", 48, tau=3)
+    cluster = ElasticPSCluster(t, members, max_recoveries=2,
+                               ping_timeout=0.5)
+    cluster.connect(timeout=1.0, retries=1, backoff=0.05)
+    state = t.init(jax.random.PRNGKey(0), bs[0])
+    for b in bs[:3]:
+        state, _ = cluster.step(state, b)
+    # the windows really are open: steps returned with unacked puts
+    # buffered on the wire (tau=3 tables never drain between steps)
+    bk0 = t.backends[t.collection.names[0]]
+    assert all(sub.put_window == 3 for sub in bk0.shard_backends)
+    assert any(len(sub._acks) > 0 for sub in bk0.shard_backends)
+    srvs[1].kill()
+    for b in bs[3:5]:
+        state, m = cluster.step(state, b)
+    resh = [e for e in cluster.events if e["kind"] == "reshard"]
+    assert resh and resh[0]["dead"] == [1]
+    # acked puts were spooled before their ack: nothing acked was lost
+    assert all(v == 0 for v in resh[0]["lost_rows"].values())
+    assert len(cluster.members) == 2
+    assert np.isfinite(float(m["loss"]))
+    # and the discarded window did not leak stale futures into the new
+    # membership's backends
+    for name in t.collection.names:
+        for sub in t.backends[name].shard_backends:
+            assert sub.endpoint in [m_.endpoint for m_ in cluster.members]
+
+
 def test_elastic_all_dead_raises_named_error(servers, tmp_path):
     srvs = servers(2, spool_root=tmp_path)
     members = [PSMember("127.0.0.1", s.port, spool_dir=s.spool_dir)
@@ -306,3 +345,100 @@ def test_elastic_all_dead_raises_named_error(servers, tmp_path):
         s.kill()
     with pytest.raises(ClusterDeadError):
         cluster.step(state, bs[1])
+
+
+# ---------------------------------------------------------------------------
+# the pipelined wire path: windows, coalescing, the blocking baseline
+# ---------------------------------------------------------------------------
+
+def _distinct_clients(trainer):
+    """The trainer's distinct RpcClients — tables sharing an endpoint share
+    ONE pooled connection, so counters must be deduped by identity."""
+    seen = {}
+    for bk in trainer.backends.values():
+        for sub in getattr(bk, "shard_backends", None) or [bk]:
+            seen[id(sub._client)] = sub._client
+    return list(seen.values())
+
+
+def _frames_sent(trainer):
+    return sum(c.frames_sent for c in _distinct_clients(trainer))
+
+
+def test_put_window_derives_from_staleness():
+    spec = EmbeddingSpec(rows=64, dim=8)
+    sync_spec = dataclasses.replace(spec, staleness=0)
+    hyb_spec = dataclasses.replace(spec, staleness=3)
+    deep_spec = dataclasses.replace(spec, staleness=100)
+    srv = PSServer().start()
+    try:
+        ep = ("127.0.0.1", srv.port)
+        subs = [RemoteBackend(sync_spec, ep, table="a"),
+                RemoteBackend(hyb_spec, ep, table="b"),
+                RemoteBackend(deep_spec, ep, table="c"),
+                RemoteBackend(deep_spec, ep, table="d", put_window=2),
+                RemoteBackend(hyb_spec, ep, table="e", pipelined=False)]
+        try:
+            # sync: 1; hybrid: tau; deep tau: capped; override wins;
+            # the blocking baseline is always one synchronous RTT per op
+            assert [b.put_window for b in subs] == [1, 3, 8, 2, 1]
+        finally:
+            for b in subs:
+                b.close()
+    finally:
+        srv.stop()
+
+
+def test_blocking_baseline_bit_exact_and_coalescing_cuts_frames(servers):
+    """The pipelined wire path changes WHEN bytes move, never what they
+    say: pipelined=False (per-op synchronous round-trips, the benchmark's
+    baseline) and the coalesced windowed path produce identical training,
+    while the pipelined path ships far fewer frames (= round-trips)."""
+    bs = _batches(4)
+    t0 = _trainer("host_lru", 48)
+    connect_remote_backends(t0, _endpoints(servers(2)), pipelined=False)
+    s0 = t0.init(jax.random.PRNGKey(0), bs[0])
+    f0_start = _frames_sent(t0)
+    for b in bs:
+        s0, m0 = t0.decomposed_step(s0, b)
+    for n, st in s0.emb.items():
+        t0.backends[n].sync(st)
+    f0 = _frames_sent(t0) - f0_start
+
+    t1 = _trainer("host_lru", 48)
+    connect_remote_backends(t1, _endpoints(servers(2)))
+    s1 = t1.init(jax.random.PRNGKey(0), bs[0])
+    f1_start = _frames_sent(t1)
+    for b in bs:
+        s1, m1 = t1.decomposed_step(s1, b)
+    for n, st in s1.emb.items():
+        t1.backends[n].sync(st)
+    f1 = _frames_sent(t1) - f1_start
+
+    assert np.float32(m1["loss"]) == np.float32(m0["loss"])
+    rows0, rows1 = _probe_all_rows(t0, s0), _probe_all_rows(t1, s1)
+    for n in rows0:
+        np.testing.assert_array_equal(rows1[n], rows0[n])
+    # blocking pays one frame per (table x shard x phase) op; coalescing
+    # folds every prepare and put into one step_ops frame per endpoint —
+    # only the lookups (whose activations must return synchronously)
+    # remain per-table frames
+    assert f1 <= 0.6 * f0, (f1, f0)
+
+
+def test_remote_prefetch_pipeline_matches_inprocess(servers):
+    """prefetch=2 over remote host_lru tables: the look-ahead fault-ins
+    ride the coalesced wire ahead of the inflight window and the result
+    stays bit-exact with the identically-configured in-process engine."""
+    bs = _batches(5)
+    t0 = _trainer("host_lru", RPF)          # eviction-free cache
+    s0 = t0.init(jax.random.PRNGKey(0), bs[0])
+    e0 = PipelinedTrainer(t0, max_inflight=1, prefetch=2)
+    s0, ms0 = e0.run(s0, iter(bs))
+    t1 = _trainer("host_lru", RPF)
+    connect_remote_backends(t1, _endpoints(servers(2)))
+    s1 = t1.init(jax.random.PRNGKey(0), bs[0])
+    e1 = PipelinedTrainer(t1, max_inflight=1, prefetch=2)
+    s1, ms1 = e1.run(s1, iter(bs))
+    assert np.float32(ms1[-1]["loss"]) == np.float32(ms0[-1]["loss"])
+    assert e1.pipeline_metrics()["pipeline/prefetch/items"] == float(len(bs))
